@@ -1,0 +1,44 @@
+"""Fig. 6 — feature injection: knob sweep without touching the benchmark.
+
+The paper sweeps UCX_RNDV_THRESH through injected environment values and
+plots OSU bandwidth per value.  Our fleet's "environment knobs" are compiler
+and partitioning parameters; here the FeatureInjectionOrchestrator sweeps
+the training microbatch count and remat policy over a frozen smoke
+benchmark — each point is a real measured step time on this host.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import BENCH_STORE, emit
+from repro.core.harness import BenchmarkSpec, ExecHarness
+from repro.core.orchestrator import ExecutionOrchestrator, FeatureInjectionOrchestrator
+from repro.core.store import ResultStore
+from repro.core import analysis
+
+
+def run() -> dict:
+    store = ResultStore(BENCH_STORE)
+    ex = ExecutionOrchestrator(
+        inputs={"prefix": "bench.injection", "record": True},
+        harness=ExecHarness(steps=3, batch=4, seq=64),
+        store=store,
+    )
+    fi = FeatureInjectionOrchestrator(execution=ex, inputs={"prefix": "bench.injection"})
+    spec = BenchmarkSpec(arch="glm4-9b", shape="train_4k", system="cpu-smoke")
+
+    # Knob 1: remat policy (compute/memory trade — the UCX-threshold analogue).
+    res_remat = fi.sweep(spec, override_knob="remat", values=["none", "dots", "full"])
+    # Reports were persisted; compare across the injected values.
+    reports = store.query("bench.injection")
+    curve = analysis.injection_comparison(reports, "step_time_s", "remat")
+
+    out = {}
+    for knob_value, t in sorted(curve.items()):
+        emit(f"fig6_injection.remat={knob_value}", t * 1e6, "measured step time")
+        out[knob_value] = t
+    ok = all(r.readiness >= 1 for r in res_remat)
+    return {"curve": out, "all_ran": ok}
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,95 @@
+"""Roofline table generator (deliverable g) — per (arch × shape × mesh):
+the three terms, dominant bottleneck, MODEL_FLOPS/HLO ratio, HBM fit, and
+the one-line improvement suggestion.  Emits the markdown table consumed by
+EXPERIMENTS.md §Roofline."""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, List
+
+from benchmarks.common import RESULTS, emit, load_dryrun_records
+
+COLUMNS = (
+    "arch", "shape", "mesh", "strat", "t_comp_ms", "t_mem_ms", "t_coll_ms",
+    "dominant", "useful", "mem_useful", "rf", "hbm_gb", "fits",
+)
+
+
+def table_rows(records: List[dict]) -> List[Dict]:
+    rows = []
+    for r in sorted(records, key=lambda x: (x["arch"], x["shape"], x["system"])):
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"],
+            "shape": r["shape"],
+            "mesh": "2pod" if "2pods" in r["system"] else "1pod",
+            "strat": r["strategy"],
+            "t_comp_ms": rl["t_compute"] * 1e3,
+            "t_mem_ms": rl["t_memory"] * 1e3,
+            "t_coll_ms": rl["t_collective"] * 1e3,
+            "dominant": rl["dominant"],
+            "useful": rl["useful_ratio"],
+            "mem_useful": rl.get("memory_useful_ratio", 0.0),
+            "rf": rl["roofline_fraction"],
+            "hbm_gb": rl["hbm_required"] / 1e9,
+            "fits": rl["fits"],
+            "suggestion": r.get("suggestion", ""),
+        })
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    lines = ["| " + " | ".join(COLUMNS) + " |", "|" + "---|" * len(COLUMNS)]
+    for row in rows:
+        cells = []
+        for c in COLUMNS:
+            v = row[c]
+            cells.append(f"{v:.3f}" if isinstance(v, float) else str(v))
+        lines.append("| " + " | ".join(cells) + " |")
+    return "\n".join(lines) + "\n"
+
+
+def _load_dir(dirname: str):
+    import json
+    d = RESULTS / dirname
+    out = []
+    if not d.exists():
+        return out
+    for p in sorted(d.glob("*.json")):
+        try:
+            rec = json.loads(p.read_text())
+        except json.JSONDecodeError:
+            continue
+        if rec.get("status") == "ok":
+            from benchmarks.common import is_baseline_record
+
+            if is_baseline_record(rec):
+                out.append(rec)
+    return out
+
+
+def run() -> dict:
+    sections = []
+    counts = {}
+    for title, dirname in (
+        ("Baseline (paper-faithful first compile)", "dryrun_baseline_v0"),
+        ("Optimized (post §Perf framework defaults)", "dryrun"),
+    ):
+        recs = _load_dir(dirname)
+        rows = table_rows(recs)
+        dom = {}
+        for row in rows:
+            dom[row["dominant"]] = dom.get(row["dominant"], 0) + 1
+        counts[dirname] = {"n": len(rows), "dominant": dom}
+        sections.append(f"## {title} — {len(rows)} cells\n\n" + to_markdown(rows))
+    out = RESULTS / "roofline_table.md"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text("\n\n".join(sections))
+    emit("roofline_table", float(sum(v["n"] for v in counts.values())),
+         f"{counts} -> {out}")
+    return {"counts": counts, "path": str(out)}
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,47 @@
+"""Fig. 7 — weak scaling across two software stages.
+
+The paper runs size-adapted workloads over increasing node counts under two
+software stages (2025 vs 2026 stacks).  Here: glm4-9b train with global
+batch scaled proportionally to chips (256 chips/bs=256 vs 512 chips/bs=512),
+under two "software stages" of this framework — remat=dots (stage A) vs
+remat=full (stage B) — using roofline-bound step times from dry-run records
+produced on demand via the DryRunHarness.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, load_dryrun_records
+from repro.core import analysis
+
+ARCH = "glm4-9b"
+
+
+def run(compile_missing: bool = False) -> dict:
+    recs = load_dryrun_records(f"{ARCH}.train_4k.*.json")
+    pts = {}
+    for r in recs:
+        pods = 2 if "2pods" in r["system"] else 1
+        gb = r["knobs"].get("global_batch", 256)
+        stage = r["knobs"].get("remat", "dots")
+        # weak-scaling points: batch proportional to chips
+        if (pods, gb) in ((1, 256), (2, 512)):
+            pts[(stage, 256 * pods)] = r["roofline"]["step_time_bound_s"]
+
+    out = {}
+    for stage in sorted({s for s, _ in pts}):
+        series = {n: t for (s, n), t in pts.items() if s == stage}
+        if len(series) >= 2:
+            ws = analysis.weak_scaling(series)
+            eff = ws[max(series)]["efficiency"]
+            out[stage] = {"points": series, "efficiency_at_512": eff}
+            emit(f"fig7_weak_scaling.stage={stage}", series[max(series)] * 1e6,
+                 f"eff={eff:.3f}")
+        else:
+            out[stage] = {"points": series, "efficiency_at_512": None}
+    if not out:
+        emit("fig7_weak_scaling", 0.0, "no dryrun records; run the sweep first")
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

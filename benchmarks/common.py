@@ -1,0 +1,61 @@
+"""Shared helpers for the benchmark harnesses (one per paper figure)."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+ROOT = Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "results"
+DRYRUN_DIR = RESULTS / "dryrun"
+BENCH_STORE = RESULTS / "bench_store"
+
+
+def timeit(fn: Callable, *args, iters: int = 5, warmup: int = 1) -> float:
+    """Median wall seconds per call."""
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def load_dryrun_records(pattern: str = "*.json") -> List[Dict]:
+    if not DRYRUN_DIR.exists():
+        return []
+    out = []
+    for p in sorted(DRYRUN_DIR.glob(pattern)):
+        try:
+            rec = json.loads(p.read_text())
+        except json.JSONDecodeError:
+            continue
+        if rec.get("status") == "ok":
+            out.append(rec)
+    return out
+
+
+def is_baseline_record(rec: Dict) -> bool:
+    """True for records produced with the sweep's default knobs (excludes
+    hillclimb/weak-scaling variants that share the directory)."""
+    from repro.configs import shapes as SH
+
+    knobs = rec.get("knobs", {})
+    default_gb = SH.SHAPES[rec["shape"]].global_batch
+    if knobs.get("global_batch") not in (None, default_gb):
+        return False
+    if knobs.get("remat", "dots") != "dots":
+        return False
+    return True
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The run.py CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.3f},{derived}")

@@ -1,0 +1,51 @@
+"""Benchmark harness entry point — one bench per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus a summary).  Heavy
+dry-run-derived benches read stored records under ``results/dryrun`` (the
+sweep produces them); measured micro-benches run live on this host.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_energy,
+        bench_feature_injection,
+        bench_machine_comparison,
+        bench_roofline,
+        bench_timeseries,
+        bench_weak_scaling,
+    )
+
+    benches = [
+        ("fig3_4_timeseries", bench_timeseries.run),
+        ("fig5_machine_comparison", bench_machine_comparison.run),
+        ("fig6_feature_injection", bench_feature_injection.run),
+        ("fig7_weak_scaling", bench_weak_scaling.run),
+        ("fig8_9_energy", bench_energy.run),
+        ("roofline_table", bench_roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        t0 = time.perf_counter()
+        try:
+            fn()
+            print(f"{name}.total,{(time.perf_counter()-t0)*1e6:.0f},ok")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}.total,0,FAILED {type(e).__name__}: {e}")
+            traceback.print_exc(limit=4, file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

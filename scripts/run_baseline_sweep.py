@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Baseline sweep: every (arch × shape) cell on both production meshes,
+orchestrated exactly the way exaCB prescribes — ExecutionOrchestrator +
+DryRunHarness, results persisted per-cell into the protocol store (so a
+crash mid-sweep loses nothing) plus raw dry-run JSON for EXPERIMENTS.md.
+
+    PYTHONPATH=src python scripts/run_baseline_sweep.py [--systems 1pod 2pod]
+        [--archs a b ...] [--shapes s ...] [--store exacb_data]
+"""
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.dryrun_harness import DryRunHarness
+from repro.core.harness import BenchmarkSpec, Injections
+from repro.core.orchestrator import ExecutionOrchestrator
+from repro.core.registry import collection
+from repro.core.store import ResultStore
+from repro.configs import shapes as SH
+from repro.hardware import MULTI_POD, SINGLE_POD
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--systems", nargs="*", default=["1pod", "2pod"])
+    ap.add_argument("--archs", nargs="*", default=None)
+    ap.add_argument("--shapes", nargs="*", default=None)
+    ap.add_argument("--store", default="exacb_data")
+    ap.add_argument("--raw", default="results/dryrun")
+    ap.add_argument("--train-microbatches", type=int, default=8)
+    ap.add_argument("--timeout", type=int, default=3000)
+    args = ap.parse_args()
+
+    store = ResultStore(args.store)
+    harness = DryRunHarness(raw_dir=Path(args.raw), timeout_s=args.timeout)
+    sysmap = {"1pod": SINGLE_POD.name, "2pod": MULTI_POD.name}
+
+    t0 = time.time()
+    n_ok = n_fail = 0
+    for skey in args.systems:
+        system = sysmap[skey]
+        specs = collection(system, archs=args.archs, shapes=args.shapes)
+        ex = ExecutionOrchestrator(
+            inputs={"prefix": f"baseline.{skey}", "machine": system, "record": True},
+            harness=harness,
+            store=store,
+            max_retries=1,
+        )
+        for spec in specs:
+            shape = SH.SHAPES[spec.shape]
+            inj = None
+            if shape.kind == SH.TRAIN and args.train_microbatches > 1:
+                inj = Injections(overrides={"microbatches": args.train_microbatches})
+            t = time.time()
+            res = ex.run_cell(spec, inj)
+            dt = time.time() - t
+            if res.report is not None and res.report.data and res.report.data[0].success:
+                m = res.report.data[0].metrics
+                print(
+                    f"OK   {spec.cell:55s} {dt:6.1f}s dominant={m['dominant']:10s} "
+                    f"rf={m['roofline_fraction']:.3f} fits={m['fits']}",
+                    flush=True,
+                )
+                n_ok += 1
+            elif res.report is not None and res.report.parameter.get("skipped"):
+                print(f"SKIP {spec.cell:55s} (inapplicable)", flush=True)
+            else:
+                print(f"FAIL {spec.cell:55s} {dt:6.1f}s\n{(res.error or '')[:600]}", flush=True)
+                n_fail += 1
+    print(f"done: {n_ok} ok, {n_fail} failed in {(time.time()-t0)/60:.1f} min")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

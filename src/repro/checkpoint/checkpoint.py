@@ -1,0 +1,175 @@
+"""Checkpoint/restart with elastic resharding (fault-tolerance substrate).
+
+Layout: ``<root>/step_<n>/`` containing one ``.npy`` per leaf (path-encoded
+filenames) plus a ``manifest.json`` with step, tree structure, per-leaf
+digests and the writing mesh.  Writes are atomic (tmp dir + rename) and the
+manifest is written LAST, so a crash mid-save can never produce a checkpoint
+that ``latest_step`` would pick up.  Restore re-device_puts leaves under the
+*current* mesh's shardings — the checkpoint is mesh-elastic by construction
+(scale 256 -> 512 chips or down to 1 CPU without conversion).
+
+Async saves run on a background thread (``save(..., block=False)``) — the
+train loop keeps stepping while the previous step's host copy is serialized.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import shutil
+import tempfile
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+Pytree = Any
+
+# numpy can't natively (de)serialize bf16/fp8 — store as uint16/uint8 views
+# and record the logical dtype in the manifest.
+_VIEW_DTYPES = {
+    "bfloat16": np.uint16,
+    "float8_e4m3fn": np.uint8,
+    "float8_e5m2": np.uint8,
+}
+
+
+def _flatten(tree: Pytree, prefix: str = "") -> Dict[str, Any]:
+    if not isinstance(tree, dict):
+        return {prefix or "_root": tree}
+    out: Dict[str, Any] = {}
+    for k, v in tree.items():
+        out.update(_flatten(v, f"{prefix}/{k}" if prefix else k))
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]) -> Pytree:
+    if set(flat) == {"_root"}:
+        return flat["_root"]
+    out: Dict[str, Any] = {}
+    for path, v in flat.items():
+        node = out
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return out
+
+
+def _fname(path: str) -> str:
+    return path.replace("/", "__") + ".npy"
+
+
+class CheckpointManager:
+    def __init__(self, root: str | Path, *, keep: int = 3):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Pytree, *, block: bool = True,
+             extra: Optional[Dict[str, Any]] = None) -> None:
+        # Host copy happens synchronously (values must be stable);
+        # serialization can proceed in the background.
+        flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+        self.wait()
+        if block:
+            self._write(step, flat, extra or {})
+        else:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat, extra or {}), daemon=True
+            )
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray], extra: Dict[str, Any]) -> None:
+        final = self.root / f"step_{step:08d}"
+        tmp = Path(tempfile.mkdtemp(dir=self.root, prefix=".tmp_"))
+        try:
+            manifest = {"step": step, "time": time.time(), "leaves": {}, "extra": extra}
+            for path, arr in flat.items():
+                logical = str(arr.dtype)
+                store_arr = (
+                    arr.view(_VIEW_DTYPES[logical]) if logical in _VIEW_DTYPES else arr
+                )
+                np.save(tmp / _fname(path), store_arr, allow_pickle=False)
+                manifest["leaves"][path] = {
+                    "shape": list(arr.shape),
+                    "dtype": logical,
+                    "digest": hashlib.sha256(arr.tobytes()).hexdigest()[:16],
+                }
+            # Manifest last: its presence defines checkpoint validity.
+            (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.root / f"step_{s:08d}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def steps(self) -> List[int]:
+        out = []
+        for d in self.root.glob("step_*"):
+            if (d / "manifest.json").exists():
+                try:
+                    out.append(int(d.name.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(
+        self,
+        step: Optional[int] = None,
+        *,
+        shardings: Optional[Pytree] = None,
+        verify: bool = True,
+    ) -> Pytree:
+        """Load a checkpoint; reshard onto the current mesh if ``shardings``
+        given (elastic restore — mesh may differ from the writer's)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.root}")
+        d = self.root / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        flat: Dict[str, Any] = {}
+        shard_flat = _flatten(shardings) if shardings is not None else {}
+        for path, meta in manifest["leaves"].items():
+            arr = np.load(d / _fname(path), allow_pickle=False)
+            if meta["dtype"] in _VIEW_DTYPES:
+                arr = arr.view(ml_dtypes.bfloat16 if meta["dtype"] == "bfloat16"
+                               else getattr(ml_dtypes, meta["dtype"]))
+            if verify:
+                got = hashlib.sha256(arr.tobytes()).hexdigest()[:16]
+                if got != meta["digest"]:
+                    raise IOError(f"checkpoint leaf {path} corrupt ({got}!={meta['digest']})")
+            if path in shard_flat and shard_flat[path] is not None:
+                flat[path] = jax.device_put(arr, shard_flat[path])
+            else:
+                flat[path] = jax.numpy.asarray(arr)
+        return _unflatten(flat)
+
+    def manifest(self, step: int) -> Dict[str, Any]:
+        return json.loads(
+            (self.root / f"step_{step:08d}" / "manifest.json").read_text()
+        )

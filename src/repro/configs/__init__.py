@@ -1,0 +1,47 @@
+"""The benchmark collection: one self-contained module per architecture.
+
+Mirrors the paper's decentralized benchmark repositories — each module owns
+its exact published configuration plus a reduced "smoke" variant, and
+registers itself with the collection registry (``ARCHS``).  Nothing outside
+the module needs editing to onboard a new architecture (paper §IV-A).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "glm4-9b": "repro.configs.glm4_9b",
+    "qwen3-32b": "repro.configs.qwen3_32b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "paligemma-3b": "repro.configs.paligemma_3b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "mamba2-1.3b": "repro.configs.mamba2_1p3b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(_MODULES[arch])
+    cfg = mod.CONFIG
+    cfg.validate()
+    return cfg
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    mod = importlib.import_module(_MODULES[arch])
+    cfg = mod.smoke()
+    cfg.validate()
+    return cfg
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,83 @@
+"""deepseek-v3-671b [moe] — 61L d_model=7168 128H (MLA) vocab=129280;
+MoE 1 shared + 256 routed experts, top-8, expert d_ff=2048; sigmoid routing
+with routed scaling; MTP depth 1.  [arXiv:2412.19437; hf]
+
+Pool-config note: the published model uses 3 leading dense layers; the pool
+entry specifies a uniform "MoE 256e top-8" structure, which we follow exactly
+(all 61 layers MoE).  MLA dims follow the paper: q_lora 1536, kv_lora 512,
+qk_nope 128, qk_rope 64, v 128.
+"""
+
+import dataclasses
+
+from repro.models.config import (
+    MLA,
+    MLP_MOE,
+    LayerSpec,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+)
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    head_dim=192,  # qk_nope + qk_rope
+    d_ff=2048,
+    vocab_size=129280,
+    block_pattern=(LayerSpec(MLA, mlp=MLP_MOE),),
+    mla=MLAConfig(
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+    ),
+    moe=MoEConfig(
+        n_experts=256,
+        top_k=8,
+        d_ff=2048,
+        n_shared_experts=1,
+        shared_d_ff=2048,
+        router_fn="sigmoid",
+        routed_scale=2.5,
+        capacity_factor=1.25,
+    ),
+    mtp_depth=1,
+    family="moe",
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        name="deepseek-v3-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=24,
+        d_ff=32,
+        vocab_size=256,
+        mla=MLAConfig(
+            q_lora_rank=32,
+            kv_lora_rank=16,
+            qk_nope_head_dim=16,
+            qk_rope_head_dim=8,
+            v_head_dim=16,
+        ),
+        moe=MoEConfig(
+            n_experts=8,
+            top_k=2,
+            d_ff=32,
+            n_shared_experts=1,
+            shared_d_ff=32,
+            router_fn="sigmoid",
+            routed_scale=2.5,
+            capacity_factor=1.5,
+        ),
+        mtp_depth=1,
+    )

@@ -1,0 +1,49 @@
+"""gemma3-4b [dense] — 34L d_model=2560 8H (GQA kv=4) d_ff=10240 vocab=262144.
+
+5:1 local:global interleaving, 128k context; local window 1024, RoPE theta
+10k local / 1M global; qk-norm; tied + scaled embeddings (gemma family).
+[hf:google/gemma-3-1b-pt; unverified]
+"""
+
+import dataclasses
+
+from repro.models.config import ATTN, LayerSpec, ModelConfig
+
+_LOCAL = LayerSpec(ATTN, window=1024, rope_theta=10_000.0)
+_GLOBAL = LayerSpec(ATTN, window=None, rope_theta=1_000_000.0)
+
+CONFIG = ModelConfig(
+    name="gemma3-4b",
+    n_layers=34,
+    d_model=2560,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=10240,
+    vocab_size=262144,
+    block_pattern=(_LOCAL, _LOCAL, _LOCAL, _LOCAL, _LOCAL, _GLOBAL),
+    use_qk_norm=True,
+    tie_embeddings=True,
+    scale_embeddings=True,
+    family="dense",
+    long_context=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        name="gemma3-4b-smoke",
+        n_layers=8,  # exercises one full period + remainder
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        block_pattern=(
+            dataclasses.replace(_LOCAL, window=8),
+            dataclasses.replace(_LOCAL, window=8),
+            _GLOBAL,
+        ),
+    )

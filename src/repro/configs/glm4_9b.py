@@ -1,0 +1,36 @@
+"""glm4-9b [dense] — 40L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=151552.
+
+RoPE, GQA.  [hf:THUDM/glm-4-9b; hf]
+"""
+
+import dataclasses
+
+from repro.models.config import ATTN, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="glm4-9b",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=13696,
+    vocab_size=151552,
+    block_pattern=(LayerSpec(ATTN),),
+    rope_theta=10000.0,
+    family="dense",
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        name="glm4-9b-smoke",
+        n_layers=3,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+    )

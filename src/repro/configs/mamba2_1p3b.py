@@ -1,0 +1,39 @@
+"""mamba2-1.3b [ssm] — 48L d_model=2048 (attention-free) vocab=50280,
+ssm_state=128.  SSD (state-space duality); expand 2, head_dim 64 (64 heads),
+causal conv width 4.  [arXiv:2405.21060; unverified]
+"""
+
+import dataclasses
+
+from repro.models.config import MLP_NONE, SSD, LayerSpec, ModelConfig, SSDConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    n_layers=48,
+    d_model=2048,
+    n_heads=64,  # d_inner / head_dim
+    n_kv_heads=1,
+    head_dim=64,
+    d_ff=0,
+    vocab_size=50280,
+    block_pattern=(LayerSpec(SSD, mlp=MLP_NONE),),
+    ssd=SSDConfig(d_state=128, expand=2, head_dim=64, n_groups=1, conv_width=4),
+    tie_embeddings=True,
+    family="ssm",
+    long_context=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        name="mamba2-smoke",
+        n_layers=3,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=1,
+        head_dim=32,  # d_inner = 128 = 4 * 32
+        d_ff=0,
+        vocab_size=256,
+        ssd=SSDConfig(d_state=16, expand=2, head_dim=32, n_groups=1, conv_width=4, chunk_size=8),
+    )

@@ -1,0 +1,40 @@
+"""musicgen-medium [audio] — 48L d_model=1536 24H (MHA kv=24) d_ff=6144
+vocab=2048 per codebook.  Decoder-only over EnCodec tokens (4 codebooks,
+delay pattern).  The EnCodec frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings (assignment requirement).  Deviation noted in
+DESIGN.md: positions use RoPE rather than the original sinusoidal embeddings.
+[arXiv:2306.05284; hf]
+"""
+
+import dataclasses
+
+from repro.models.config import ATTN, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab_size=2048,
+    block_pattern=(LayerSpec(ATTN),),
+    input_mode="embeddings",
+    n_codebooks=4,
+    family="audio",
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        name="musicgen-medium-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=64,
+    )

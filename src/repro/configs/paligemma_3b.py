@@ -1,0 +1,42 @@
+"""paligemma-3b [vlm] — 18L d_model=2048 8H (MQA kv=1) d_ff=16384 vocab=257216.
+
+SigLIP vision tower + gemma decoder; prefix-LM attention over 256 image
+patch tokens.  The SigLIP frontend is a STUB: ``input_specs()`` provides
+precomputed patch embeddings (assignment requirement).
+[arXiv:2407.07726; hf]
+"""
+
+import dataclasses
+
+from repro.models.config import ATTN, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=257216,
+    block_pattern=(LayerSpec(ATTN),),
+    prefix_len=256,
+    tie_embeddings=True,
+    scale_embeddings=True,
+    family="vlm",
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        name="paligemma-3b-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=1,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        prefix_len=8,
+    )

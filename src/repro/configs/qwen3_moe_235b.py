@@ -1,0 +1,39 @@
+"""qwen3-moe-235b-a22b [moe] — 94L d_model=4096 64H (GQA kv=4) expert
+d_ff=1536 vocab=151936; MoE 128 experts, top-8, no shared expert; qk_norm.
+[hf:Qwen/Qwen3-30B-A3B; hf]
+"""
+
+import dataclasses
+
+from repro.models.config import ATTN, MLP_MOE, LayerSpec, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,  # expert hidden width (pool spec)
+    vocab_size=151936,
+    block_pattern=(LayerSpec(ATTN, mlp=MLP_MOE),),
+    rope_theta=1_000_000.0,
+    use_qk_norm=True,
+    moe=MoEConfig(n_experts=128, top_k=8, d_ff=1536, capacity_factor=1.25),
+    family="moe",
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        name="qwen3-moe-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=32,
+        vocab_size=256,
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff=32, capacity_factor=1.5),
+    )

@@ -1,0 +1,44 @@
+"""recurrentgemma-2b [hybrid] — 26L d_model=2560 10H (GQA kv=1) d_ff=7680
+vocab=256000.  RG-LRU + local attention, 1 attn : 2 recurrent (Griffin).
+[arXiv:2402.19427; hf]
+"""
+
+import dataclasses
+
+from repro.models.config import ATTN, RGLRU, LayerSpec, ModelConfig, RGLRUConfig
+
+_REC = LayerSpec(RGLRU)
+_ATT = LayerSpec(ATTN, window=2048)
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    n_layers=26,  # 8 full (R,R,A) periods + (R,R) remainder
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    block_pattern=(_REC, _REC, _ATT),
+    rglru=RGLRUConfig(lru_width=2560, conv_width=4),
+    tie_embeddings=True,
+    scale_embeddings=True,
+    family="hybrid",
+    long_context=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        name="recurrentgemma-2b-smoke",
+        n_layers=5,  # 1 full period + (R,R) remainder
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=1,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        block_pattern=(_REC, _REC, dataclasses.replace(_ATT, window=8)),
+        rglru=RGLRUConfig(lru_width=64, conv_width=4),
+    )

@@ -1,0 +1,117 @@
+"""Assigned input shapes and abstract input specs (ShapeDtypeStruct).
+
+Every (architecture × shape) pair defines a *benchmark cell* in the exaCB
+collection.  ``decode_*`` / ``long_*`` cells lower ``serve_step`` (one token
+against a seq_len KV cache); ``train_*`` lowers ``train_step``; ``prefill_*``
+lowers ``prefill_step``.  ``long_500k`` applies only to sub-quadratic
+architectures (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+TRAIN, PREFILL, DECODE = "train", "prefill", "decode"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", TRAIN, 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", PREFILL, 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", DECODE, 32768, 128),
+    "long_500k": ShapeSpec("long_500k", DECODE, 524288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> bool:
+    """long_500k only for sub-quadratic/long-context archs (DESIGN.md)."""
+    if shape.name == "long_500k":
+        return cfg.long_context
+    return True
+
+
+def cells(cfg_by_arch: Dict[str, ModelConfig]) -> List[Tuple[str, str]]:
+    """All applicable (arch, shape) benchmark cells."""
+    out = []
+    for arch, cfg in cfg_by_arch.items():
+        for s in SHAPES.values():
+            if applicable(cfg, s):
+                out.append((arch, s.name))
+    return out
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract specs for the step function's ``batch`` argument."""
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    if shape.kind == TRAIN:
+        if cfg.input_mode == "embeddings":
+            out = {"embeds": _sds((B, S, d), cfg.dtype)}
+            if cfg.n_codebooks > 1:
+                out["targets"] = _sds((B, cfg.n_codebooks, S), "int32")
+            else:
+                out["targets"] = _sds((B, S), "int32")
+            return out
+        if cfg.prefix_len:
+            t = S - cfg.prefix_len
+            return {
+                "tokens": _sds((B, t), "int32"),
+                "prefix_embeds": _sds((B, cfg.prefix_len, d), cfg.dtype),
+                "targets": _sds((B, t), "int32"),
+            }
+        return {"tokens": _sds((B, S), "int32"), "targets": _sds((B, S), "int32")}
+    if shape.kind == PREFILL:
+        if cfg.input_mode == "embeddings":
+            return {"embeds": _sds((B, S, d), cfg.dtype)}
+        if cfg.prefix_len:
+            return {
+                "tokens": _sds((B, S - cfg.prefix_len), "int32"),
+                "prefix_embeds": _sds((B, cfg.prefix_len, d), cfg.dtype),
+            }
+        return {"tokens": _sds((B, S), "int32")}
+    if shape.kind == DECODE:
+        if cfg.input_mode == "embeddings":
+            return {"embeds": _sds((B, 1, d), cfg.dtype)}
+        return {"tokens": _sds((B, 1), "int32")}
+    raise ValueError(shape.kind)
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeSpec) -> Any:
+    """Abstract decode-state tree for serve_step lowering."""
+    assert shape.kind == DECODE
+    return jax.eval_shape(
+        lambda: T.init_decode_state(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+def concrete_batch(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0) -> Dict[str, Any]:
+    """Materialized random batch (smoke-scale only)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, s in batch_specs(cfg, shape).items():
+        if s.dtype == jnp.int32:
+            hi = cfg.vocab_size
+            out[k] = jnp.asarray(rng.integers(0, hi, size=s.shape, dtype=np.int32))
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(size=s.shape), dtype=s.dtype)
+    return out

@@ -1,0 +1,36 @@
+"""starcoder2-3b [dense] — 30L d_model=3072 24H (GQA kv=2) d_ff=12288 vocab=49152.
+
+GQA, RoPE.  [arXiv:2402.19173; hf]
+"""
+
+import dataclasses
+
+from repro.models.config import ATTN, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b",
+    n_layers=30,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=12288,
+    vocab_size=49152,
+    block_pattern=(LayerSpec(ATTN),),
+    rope_theta=100_000.0,
+    family="dense",
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        name="starcoder2-3b-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+    )

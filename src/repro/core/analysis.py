@@ -1,0 +1,213 @@
+"""Lightweight analysis over protocol reports (paper §IV-F, §V-C).
+
+exaCB guarantees the storage format and ships the analyses its experiments
+need: time-series with regression detection (Figs. 3/4), machine comparison
+(Fig. 5), feature-injection comparison (Fig. 6), strong/weak scaling with
+efficiency bands (Figs. 5/7).  Heavier analysis is expected to live in
+downstream tools; these functions are deliberately dependency-free
+(numpy only) and pure, so they run identically inside or outside a full
+exaCB workflow.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.protocol import Report
+
+
+def to_series(reports: Sequence[Report], metric: str) -> List[Tuple[float, float]]:
+    """(timestamp, value) points for one metric across reports."""
+    pts = []
+    for r in reports:
+        for d in r.data:
+            if metric in d.metrics:
+                pts.append((r.experiment.timestamp, float(d.metrics[metric])))
+            elif metric == "runtime":
+                pts.append((r.experiment.timestamp, d.runtime))
+    return sorted(pts)
+
+
+@dataclasses.dataclass
+class Regression:
+    index: int
+    timestamp: float
+    value: float
+    baseline: float
+    sigma: float
+
+    @property
+    def relative(self) -> float:
+        return (self.value - self.baseline) / self.baseline if self.baseline else 0.0
+
+
+def detect_regressions(
+    series: Sequence[Tuple[float, float]],
+    *,
+    window: int = 8,
+    z_threshold: float = 4.0,
+    min_rel: float = 0.05,
+) -> List[Regression]:
+    """Change-point detection over a metric time-series (Fig. 4 semantics).
+
+    Each point is compared against the median/MAD of the trailing window; a
+    point is flagged when it deviates by more than ``z_threshold`` robust
+    sigmas AND ``min_rel`` relatively (guards against ultra-low-variance
+    series flagging measurement noise).
+    """
+    out: List[Regression] = []
+    vals = np.array([v for _, v in series], dtype=np.float64)
+    for i in range(window, len(vals)):
+        base = vals[i - window : i]
+        med = float(np.median(base))
+        mad = float(np.median(np.abs(base - med)))
+        sigma = max(1.4826 * mad, 1e-12)
+        dev = abs(vals[i] - med)
+        if dev / sigma > z_threshold and (med == 0 or dev / abs(med) > min_rel):
+            out.append(
+                Regression(
+                    index=i,
+                    timestamp=series[i][0],
+                    value=float(vals[i]),
+                    baseline=med,
+                    sigma=dev / sigma,
+                )
+            )
+    return out
+
+
+def compare_systems(
+    reports: Sequence[Report], metric: str
+) -> Dict[str, Dict[str, float]]:
+    """Per-system summary statistics of one metric (Fig. 5 table)."""
+    by_sys: Dict[str, List[float]] = {}
+    for r in reports:
+        for d in r.data:
+            v = d.metrics.get(metric, d.runtime if metric == "runtime" else None)
+            if v is not None:
+                by_sys.setdefault(r.experiment.system, []).append(float(v))
+    return {
+        s: {
+            "n": len(v),
+            "median": float(np.median(v)),
+            "mean": float(np.mean(v)),
+            "min": float(np.min(v)),
+            "max": float(np.max(v)),
+        }
+        for s, v in by_sys.items()
+    }
+
+
+def strong_scaling(
+    points: Dict[int, float], *, band: float = 0.8
+) -> Dict[int, Dict[str, float]]:
+    """Strong-scaling efficiency vs the smallest node count (Fig. 5 bands).
+
+    ``points``: {nodes: runtime}.  Efficiency = t0·n0 / (t·n).
+    """
+    if not points:
+        return {}
+    n0 = min(points)
+    t0 = points[n0]
+    out = {}
+    for n, t in sorted(points.items()):
+        eff = (t0 * n0) / (t * n) if t > 0 else 0.0
+        out[n] = {
+            "runtime": t,
+            "speedup": t0 / t if t > 0 else 0.0,
+            "efficiency": eff,
+            "within_band": eff >= band,
+        }
+    return out
+
+
+def weak_scaling(
+    points: Dict[int, float], *, band: float = 0.8
+) -> Dict[int, Dict[str, float]]:
+    """Weak-scaling efficiency (Fig. 7): ideal is constant runtime."""
+    if not points:
+        return {}
+    n0 = min(points)
+    t0 = points[n0]
+    out = {}
+    for n, t in sorted(points.items()):
+        eff = t0 / t if t > 0 else 0.0
+        out[n] = {"runtime": t, "efficiency": eff, "within_band": eff >= band}
+    return out
+
+
+def injection_comparison(
+    reports: Sequence[Report], metric: str, knob: str
+) -> Dict[str, float]:
+    """Metric as a function of an injected knob value (Fig. 6 semantics)."""
+    out: Dict[str, float] = {}
+    for r in reports:
+        inj = r.parameter.get("injections", {})
+        key = str(inj.get("env", {}).get(knob, inj.get("overrides", {}).get(knob, "default")))
+        for d in r.data:
+            if metric in d.metrics:
+                out[key] = float(d.metrics[metric])
+    return out
+
+
+# ---- report emitters (markdown / CSV; Table I column order) ----
+
+TABLE_I_COLUMNS = (
+    "system", "version", "queue", "variant", "jobid", "nodes",
+    "taskspernode", "threadspertasks", "runtime", "success",
+)
+
+
+def to_rows(reports: Sequence[Report]) -> List[Dict[str, object]]:
+    rows = []
+    for r in reports:
+        for d in r.data:
+            row: Dict[str, object] = {
+                "system": r.experiment.system,
+                "version": r.experiment.software_version,
+                "queue": d.queue,
+                "variant": r.experiment.variant,
+                "jobid": d.job_id,
+                "nodes": d.nodes,
+                "taskspernode": d.tasks_per_node,
+                "threadspertasks": d.threads_per_task,
+                "runtime": d.runtime,
+                "success": d.success,
+            }
+            row.update({f"additional_{k}": v for k, v in d.metrics.items()})
+            rows.append(row)
+    return rows
+
+
+def to_csv(reports: Sequence[Report]) -> str:
+    rows = to_rows(reports)
+    if not rows:
+        return ",".join(TABLE_I_COLUMNS) + "\n"
+    cols = list(TABLE_I_COLUMNS) + sorted(
+        {k for row in rows for k in row} - set(TABLE_I_COLUMNS)
+    )
+    lines = [",".join(cols)]
+    for row in rows:
+        lines.append(",".join(str(row.get(c, "")) for c in cols))
+    return "\n".join(lines) + "\n"
+
+
+def to_markdown(table: Dict[str, Dict[str, float]], title: str = "") -> str:
+    if not table:
+        return f"### {title}\n(no data)\n"
+    cols = sorted({k for v in table.values() for k in v})
+    lines = []
+    if title:
+        lines.append(f"### {title}")
+    lines.append("| key | " + " | ".join(cols) + " |")
+    lines.append("|---|" + "---|" * len(cols))
+    for k, v in table.items():
+        cells = []
+        for c in cols:
+            x = v.get(c, "")
+            cells.append(f"{x:.4g}" if isinstance(x, float) else str(x))
+        lines.append(f"| {k} | " + " | ".join(cells) + " |")
+    return "\n".join(lines) + "\n"

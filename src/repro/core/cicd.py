@@ -1,0 +1,244 @@
+"""Declarative CI/CD pipeline layer (paper §II-C, §V-A).
+
+The paper's user-facing interface is a ``.gitlab-ci.yml`` that includes
+reusable components::
+
+    include:
+      - component: execution@v3
+        inputs:
+          prefix:  "jedi.strong.tiny"
+          variant: "large-intensity"
+          machine: "jedi"
+          jube_file: "simple.yaml"
+
+This module is the runner for that interface: a pipeline document (JSON, or
+the built-in minimal YAML subset — no external deps) is parsed into component
+invocations and dispatched to the orchestrators.  Components are versioned
+(``execution@v3``); unknown majors are rejected, matching the paper's
+schema-evolution discipline.
+
+    PYTHONPATH=src python -m repro.core.cicd examples/pipelines/collection.yml
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.harness import BenchmarkSpec, ExecHarness, Harness, Injections
+from repro.core.orchestrator import (
+    ExecutionOrchestrator,
+    FeatureInjectionOrchestrator,
+    PostProcessingOrchestrator,
+)
+from repro.core.store import ResultStore
+
+SUPPORTED = {
+    "execution": (3,),
+    "feature-injection": (3,),
+    "time-series": (3,),
+    "machine-comparison": (3,),
+    "scalability": (3,),
+}
+
+
+class PipelineError(ValueError):
+    pass
+
+
+@dataclasses.dataclass
+class ComponentCall:
+    name: str
+    version: int
+    inputs: Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Minimal YAML-subset parser (mappings, lists of mappings, scalars) — enough
+# for the paper's pipeline examples without a yaml dependency.
+# ---------------------------------------------------------------------------
+
+def _parse_scalar(s: str) -> Any:
+    s = s.strip().strip('"').strip("'")
+    if s.lower() in ("true", "false"):
+        return s.lower() == "true"
+    if re.fullmatch(r"-?\d+", s):
+        return int(s)
+    if re.fullmatch(r"-?\d+\.\d*", s):
+        return float(s)
+    if s.startswith("[") and s.endswith("]"):
+        inner = s[1:-1].strip()
+        return [_parse_scalar(x) for x in inner.split(",")] if inner else []
+    return s
+
+
+def parse_pipeline_text(text: str) -> List[ComponentCall]:
+    """Parse a pipeline document (JSON or the YAML subset)."""
+    text_stripped = text.strip()
+    if text_stripped.startswith("{"):
+        doc = json.loads(text_stripped)
+        return _from_doc(doc)
+    calls: List[ComponentCall] = []
+    cur: Optional[Tuple[str, int]] = None
+    inputs: Dict[str, Any] = {}
+    in_inputs = False
+    for raw in text.splitlines():
+        line = raw.split("#", 1)[0].rstrip()
+        if not line.strip():
+            continue
+        if line.strip() in ("include:",):
+            continue
+        m = re.match(r"\s*-\s*component:\s*(\S+)", line)
+        if m:
+            if cur:
+                calls.append(ComponentCall(cur[0], cur[1], inputs))
+            cur = _split_component(m.group(1))
+            inputs, in_inputs = {}, False
+            continue
+        if re.match(r"\s*inputs:\s*$", line):
+            in_inputs = True
+            continue
+        m = re.match(r"\s*([\w\-]+):\s*(.+)$", line)
+        if m and in_inputs:
+            inputs[m.group(1)] = _parse_scalar(m.group(2))
+            continue
+        if line.strip():
+            raise PipelineError(f"unparseable pipeline line: {raw!r}")
+    if cur:
+        calls.append(ComponentCall(cur[0], cur[1], inputs))
+    if not calls:
+        raise PipelineError("pipeline contains no component invocations")
+    return calls
+
+
+def _split_component(ref: str) -> Tuple[str, int]:
+    m = re.fullmatch(r"([\w\-]+)@v(\d+)(?:\.\d+)*", ref)
+    if not m:
+        raise PipelineError(f"bad component reference {ref!r} (want name@vN)")
+    name, major = m.group(1), int(m.group(2))
+    if name not in SUPPORTED:
+        raise PipelineError(f"unknown component {name!r}")
+    if major not in SUPPORTED[name]:
+        raise PipelineError(f"{name}@v{major} unsupported (have v{SUPPORTED[name]})")
+    return name, major
+
+
+def _from_doc(doc: Dict[str, Any]) -> List[ComponentCall]:
+    calls = []
+    for item in doc.get("include", []):
+        name, major = _split_component(item["component"])
+        calls.append(ComponentCall(name, major, dict(item.get("inputs", {}))))
+    if not calls:
+        raise PipelineError("pipeline contains no component invocations")
+    return calls
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+def run_pipeline(
+    calls: List[ComponentCall],
+    *,
+    store: ResultStore,
+    harness: Optional[Harness] = None,
+    harness_factory: Optional[Callable[[Dict[str, Any]], Harness]] = None,
+) -> List[Dict[str, Any]]:
+    """Execute component calls in order; returns one summary per call."""
+    harness = harness or ExecHarness(steps=2, batch=2, seq=16)
+    results = []
+    for call in calls:
+        inp = call.inputs
+        if call.name == "execution":
+            h = harness_factory(inp) if harness_factory else harness
+            ex = ExecutionOrchestrator(inputs=inp, harness=h, store=store)
+            spec = BenchmarkSpec(
+                arch=inp["arch"],
+                shape=inp.get("usecase", inp.get("shape", "train_4k")),
+                system=inp.get("machine", "cpu-smoke"),
+                variant=inp.get("variant", ""),
+            )
+            res = ex.run_cell(spec)
+            results.append({
+                "component": "execution",
+                "cell": spec.cell,
+                "readiness": int(res.readiness),
+                "error": res.error,
+            })
+        elif call.name == "feature-injection":
+            h = harness_factory(inp) if harness_factory else harness
+            ex = ExecutionOrchestrator(inputs=inp, harness=h, store=store)
+            fi = FeatureInjectionOrchestrator(execution=ex, inputs=inp)
+            spec = BenchmarkSpec(
+                arch=inp["arch"],
+                shape=inp.get("usecase", "train_4k"),
+                system=inp.get("machine", "cpu-smoke"),
+            )
+            inj = Injections()
+            if "in_command" in inp:  # paper: env-var injection string
+                for assign in str(inp["in_command"]).replace("export ", "").split(";"):
+                    if "=" in assign:
+                        k, v = assign.split("=", 1)
+                        inj.env[k.strip()] = v.strip()
+            for k in ("remat", "microbatches", "strategy", "opt_state_dtype"):
+                if k in inp:
+                    inj.overrides[k] = inp[k]
+            res = fi.run(spec, inj)
+            results.append({
+                "component": "feature-injection",
+                "cell": spec.cell,
+                "readiness": int(res.readiness),
+                "error": res.error,
+            })
+        elif call.name == "time-series":
+            pp = PostProcessingOrchestrator(store=store, inputs=inp)
+            out = pp.time_series(
+                source_prefix=inp["source_prefix"],
+                data_labels=list(inp.get("data_labels", ["step_time_s"])),
+                pipeline=list(inp.get("pipeline", [])),
+            )
+            results.append({
+                "component": "time-series",
+                "points": {k: len(v) for k, v in out["series"].items()},
+                "regressions": {k: len(v) for k, v in out["regressions"].items()},
+            })
+        elif call.name == "machine-comparison":
+            pp = PostProcessingOrchestrator(store=store, inputs=inp)
+            out = pp.machine_comparison(
+                selectors=[{"prefix": p} for p in inp.get("selector", [])],
+                metric=inp.get("metric", "step_time_s"),
+            )
+            results.append({"component": "machine-comparison", "table": out["table"]})
+        elif call.name == "scalability":
+            pp = PostProcessingOrchestrator(store=store, inputs=inp)
+            out = pp.scalability(
+                source_prefix=inp["source_prefix"],
+                metric=inp.get("metric", "step_time_s"),
+                mode=inp.get("mode", "strong"),
+            )
+            results.append({"component": "scalability", "table": out["table"]})
+        else:  # pragma: no cover — guarded by _split_component
+            raise PipelineError(call.name)
+    return results
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("pipeline", help="pipeline file (.yml subset or .json)")
+    ap.add_argument("--store", default="exacb_data")
+    args = ap.parse_args(argv)
+    calls = parse_pipeline_text(Path(args.pipeline).read_text())
+    results = run_pipeline(calls, store=ResultStore(args.store))
+    print(json.dumps(results, indent=2, default=str))
+    return 0 if all(not r.get("error") for r in results) else 1
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -1,0 +1,208 @@
+"""Energy-aware benchmarking (paper §VI-B, Figs. 8/9) — the jpwr analogue.
+
+The paper obtains energy-to-solution by *injecting* an energy-aware launcher
+through the platform configuration, without modifying benchmarks.  Here the
+launcher wraps the step callable; on real TPUs it would read PMIC counters,
+on this CPU container it combines measured wall time with an analytic chip
+power model.  Scope trimming (excluding start-up / wind-down, Fig. 8's black
+bars) and the frequency sweep (Fig. 9 sweet-spot search) are implemented
+exactly as described.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.hardware import ChipSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyEstimate:
+    step_time_s: float
+    power_w: float           # per chip
+    energy_j: float          # total over all chips
+    util_compute: float
+    util_memory: float
+
+    def metrics(self) -> Dict[str, float]:
+        return {
+            "energy_to_solution_j": self.energy_j,
+            "avg_power_w": self.power_w,
+            "util_compute": self.util_compute,
+            "util_memory": self.util_memory,
+        }
+
+
+def power_model(chip: ChipSpec, util_compute: float, util_memory: float, freq_scale: float = 1.0) -> float:
+    """Per-chip power: idle + dynamic compute (~f^3 at fixed voltage scaling
+    approximation) + HBM traffic term."""
+    uc = min(max(util_compute, 0.0), 1.0)
+    um = min(max(util_memory, 0.0), 1.0)
+    return (
+        chip.power_idle_w
+        + chip.power_peak_compute_w * uc * freq_scale**3
+        + chip.power_peak_hbm_w * um
+    )
+
+
+def estimate_from_roofline(
+    chip: ChipSpec,
+    *,
+    t_compute: float,
+    t_memory: float,
+    t_collective: float,
+    n_chips: int,
+    freq_scale: float = 1.0,
+) -> EnergyEstimate:
+    """Energy from the three roofline terms (dry-run path).
+
+    Step time = max(terms) with compute time stretched by 1/freq; utilization
+    of each resource = its term / step time.
+    """
+    tc = t_compute / freq_scale
+    step = max(tc, t_memory, t_collective, 1e-12)
+    uc, um = tc / step, t_memory / step
+    p = power_model(chip, uc, um, freq_scale)
+    return EnergyEstimate(
+        step_time_s=step,
+        power_w=p,
+        energy_j=p * step * n_chips,
+        util_compute=uc,
+        util_memory=um,
+    )
+
+
+def frequency_sweep(
+    chip: ChipSpec,
+    *,
+    t_compute: float,
+    t_memory: float,
+    t_collective: float,
+    n_chips: int,
+    freqs: Sequence[float] = (0.6, 0.7, 0.8, 0.9, 1.0, 1.1),
+) -> Dict[float, EnergyEstimate]:
+    """Fig. 9: energy-to-solution across frequency scaling; the minimum is
+    the energy sweet spot."""
+    return {
+        f: estimate_from_roofline(
+            chip,
+            t_compute=t_compute,
+            t_memory=t_memory,
+            t_collective=t_collective,
+            n_chips=n_chips,
+            freq_scale=f,
+        )
+        for f in freqs
+    }
+
+
+def sweet_spot(sweep: Dict[float, EnergyEstimate]) -> float:
+    return min(sweep, key=lambda f: sweep[f].energy_j)
+
+
+# ---------------------------------------------------------------------------
+# Power-trace scope trimming (Fig. 8 black bars)
+# ---------------------------------------------------------------------------
+
+def trim_scope(
+    trace: Sequence[float],
+    *,
+    threshold_frac: float = 0.5,
+    sustain: int = 3,
+) -> Tuple[int, int]:
+    """Semi-automatic measurement scope: first/last index where power is
+    sustained above ``threshold_frac`` of (peak - idle) above idle.
+
+    Returns (start, end) — callers may adjust manually (the paper keeps a
+    human-verification step).  Excluding ramp phases systematically
+    *underestimates* energy; we preserve that documented bias.
+    """
+    t = np.asarray(trace, dtype=np.float64)
+    if t.size == 0:
+        return 0, 0
+    idle, peak = float(np.min(t)), float(np.max(t))
+    thr = idle + threshold_frac * (peak - idle)
+    above = t >= thr
+    start, end = 0, len(t)
+    run = 0
+    for i, a in enumerate(above):
+        run = run + 1 if a else 0
+        if run >= sustain:
+            start = i - sustain + 1
+            break
+    run = 0
+    for i in range(len(t) - 1, -1, -1):
+        run = run + 1 if above[i] else 0
+        if run >= sustain:
+            end = i + sustain
+            break
+    return start, max(end, start + 1)
+
+
+def synth_power_trace(
+    chip: ChipSpec,
+    *,
+    steady_power: float,
+    n_samples: int = 64,
+    ramp: int = 8,
+    seed: int = 0,
+) -> List[float]:
+    """Synthesize a per-chip power trace with start-up/wind-down ramps —
+    used by examples/tests to exercise the Fig. 8 pipeline."""
+    rng = np.random.default_rng(seed)
+    body = n_samples - 2 * ramp
+    up = np.linspace(chip.power_idle_w, steady_power, ramp, endpoint=False)
+    mid = steady_power + rng.normal(0, steady_power * 0.02, size=body)
+    down = np.linspace(steady_power, chip.power_idle_w, ramp)
+    return list(np.concatenate([up, mid, down]))
+
+
+def scoped_energy(trace: Sequence[float], dt_s: float) -> Dict[str, float]:
+    """Energy within the auto-trimmed scope of a power trace."""
+    s, e = trim_scope(trace)
+    seg = np.asarray(trace[s:e], dtype=np.float64)
+    return {
+        "scope_start": float(s),
+        "scope_end": float(e),
+        "scoped_energy_j": float(np.sum(seg) * dt_s),
+        "scoped_avg_power_w": float(np.mean(seg)) if seg.size else 0.0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Launcher injection (the jpwr wrapper)
+# ---------------------------------------------------------------------------
+
+def energy_launcher(chip: ChipSpec, n_chips: int = 1) -> Callable[[Callable], Callable]:
+    """Returns a launcher that wraps a step fn with energy measurement.
+
+    Injected via ``Injections.launcher`` — the benchmark itself is unchanged
+    (the paper's key claim for incremental instrumentation).  Metrics land on
+    ``wrapped.exacb_metrics`` which the harness folds into the report.
+    """
+
+    def launcher(step_fn: Callable) -> Callable:
+        def wrapped(*a, **kw):
+            t0 = time.perf_counter()
+            out = step_fn(*a, **kw)
+            dt = time.perf_counter() - t0
+            # Wall-clock measured; utilization unknown on CPU -> assume
+            # compute-dominated (documented approximation).
+            p = power_model(chip, 1.0, 0.3)
+            wrapped.exacb_metrics = {
+                "energy_to_solution_j": p * dt * n_chips,
+                "avg_power_w": p,
+                "measured_wall_s": dt,
+            }
+            return out
+
+        wrapped.exacb_metrics = {}
+        wrapped.__name__ = f"energy_launcher({chip.name})"
+        return wrapped
+
+    launcher.__name__ = "energy_launcher"
+    return launcher

@@ -1,0 +1,102 @@
+"""Monitoring-system export (paper §IV-F: "aggregated results can further be
+exported to external monitoring and visualization systems, such as Grafana
+or LLview").
+
+Two exporters over the result store:
+
+* ``grafana_table`` — Grafana's simple-JSON table datasource format
+  (columns + rows) for one metric over one prefix.
+* ``llview_jobs``  — LLview-style job-records list (one record per data
+  entry with the Table-I fields + metrics).
+
+Plus ``ascii_timeseries``: a dependency-free terminal sparkline/plot used by
+the examples and the post-processing reports (the paper's Figs. 3/4 as text).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import analysis
+from repro.core.store import ResultStore
+
+
+def grafana_table(
+    store: ResultStore, prefix: str, metric: str, *, since: Optional[float] = None
+) -> Dict[str, Any]:
+    reports = store.query(prefix, since=since)
+    series = analysis.to_series(reports, metric)
+    return {
+        "columns": [
+            {"text": "Time", "type": "time"},
+            {"text": metric, "type": "number"},
+        ],
+        "rows": [[int(ts * 1000), v] for ts, v in series],
+        "type": "table",
+    }
+
+
+def llview_jobs(store: ResultStore, prefix: str) -> List[Dict[str, Any]]:
+    out = []
+    for r in store.query(prefix):
+        for d in r.data:
+            out.append({
+                "jobid": d.job_id,
+                "system": r.experiment.system,
+                "queue": d.queue,
+                "nodes": d.nodes,
+                "runtime": d.runtime,
+                "state": "COMPLETED" if d.success else "FAILED",
+                "ts": r.experiment.timestamp,
+                "metrics": dict(d.metrics),
+            })
+    return out
+
+
+def write_exports(store: ResultStore, prefix: str, metric: str, outdir) -> Dict[str, str]:
+    from pathlib import Path
+
+    d = Path(outdir)
+    d.mkdir(parents=True, exist_ok=True)
+    g = d / f"grafana.{prefix}.{metric}.json"
+    l = d / f"llview.{prefix}.json"
+    g.write_text(json.dumps(grafana_table(store, prefix, metric), indent=2))
+    l.write_text(json.dumps(llview_jobs(store, prefix), indent=2, default=str))
+    return {"grafana": str(g), "llview": str(l)}
+
+
+# ---------------------------------------------------------------------------
+# Terminal rendering (Figs. 3/4 as text)
+# ---------------------------------------------------------------------------
+
+_BARS = "▁▂▃▄▅▆▇█"
+
+
+def ascii_timeseries(
+    series: Sequence[Tuple[float, float]],
+    *,
+    title: str = "",
+    width: int = 64,
+    regressions: Sequence[int] = (),
+) -> str:
+    if not series:
+        return f"{title}: (no data)\n"
+    vals = [v for _, v in series][-width:]
+    lo, hi = min(vals), max(vals)
+    rng = (hi - lo) or 1.0
+    marks = set(regressions)
+    offset = len(series) - len(vals)
+    cells = []
+    for i, v in enumerate(vals):
+        idx = int((v - lo) / rng * (len(_BARS) - 1))
+        ch = _BARS[idx]
+        cells.append(f"!{ch}" if (i + offset) in marks else ch)
+    lines = []
+    if title:
+        lines.append(title)
+    lines.append("".join(cells))
+    lines.append(f"min={lo:.4g} max={hi:.4g} n={len(series)}"
+                 + (f" regressions@{sorted(marks)}" if marks else ""))
+    return "\n".join(lines) + "\n"

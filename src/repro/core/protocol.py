@@ -1,0 +1,187 @@
+"""The exaCB protocol (paper §V-B): a hierarchical, self-describing report
+format that decouples producers (harnesses, orchestrators) from consumers
+(analysis, visualization).
+
+Top-level sections — Version / Reporter / Parameter / Experiment / Data —
+mirror the paper exactly.  Documents are JSON; the schema is versioned so
+older reports remain readable (``migrate``).  Every ``DataEntry`` carries the
+paper's required result columns (Table I) plus an extensible ``metrics``
+object for benchmark-specific values (roofline terms, energy, MFU, ...).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import time
+from typing import Any, Dict, List, Optional
+
+PROTOCOL_VERSION = "2"
+SUPPORTED_VERSIONS = ("1", "2")
+
+
+class ProtocolError(ValueError):
+    pass
+
+
+@dataclasses.dataclass
+class Reporter:
+    """Provenance of the report (paper §V-B b)."""
+
+    tool: str = "exacb-jax"
+    tool_version: str = "0.1.0"
+    system: str = ""
+    user: str = "ci"
+    pipeline_id: str = ""
+    job_id: str = ""
+    commit: str = ""
+    software_version: str = ""
+    timestamp: float = 0.0
+    environment: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # External data injected through hooks cannot be fully trusted (§IV-E).
+    chain_of_trust: bool = True
+
+    def complete(self) -> bool:
+        return bool(self.system and self.pipeline_id and self.timestamp)
+
+
+@dataclasses.dataclass
+class Experiment:
+    """Semantic context of the run (paper §V-B d)."""
+
+    system: str = ""
+    software_version: str = ""
+    variant: str = ""
+    usecase: str = ""
+    timestamp: float = 0.0
+
+
+@dataclasses.dataclass
+class DataEntry:
+    """One benchmark execution (paper §V-B e / Table I)."""
+
+    success: bool = False
+    runtime: float = 0.0            # application-reported runtime, seconds
+    nodes: int = 1
+    tasks_per_node: int = 1
+    threads_per_task: int = 1
+    job_id: str = ""
+    queue: str = ""
+    metrics: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def validate(self) -> None:
+        if self.runtime < 0:
+            raise ProtocolError("runtime must be >= 0")
+        if self.nodes < 1 or self.tasks_per_node < 1 or self.threads_per_task < 1:
+            raise ProtocolError("node/task/thread counts must be >= 1")
+
+
+@dataclasses.dataclass
+class Report:
+    """One protocol document = one benchmark report."""
+
+    version: str = PROTOCOL_VERSION
+    reporter: Reporter = dataclasses.field(default_factory=Reporter)
+    parameter: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    experiment: Experiment = dataclasses.field(default_factory=Experiment)
+    data: List[DataEntry] = dataclasses.field(default_factory=list)
+
+    # ---- (de)serialization ----
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "version": self.version,
+            "reporter": dataclasses.asdict(self.reporter),
+            "parameter": dict(self.parameter),
+            "experiment": dataclasses.asdict(self.experiment),
+            "data": [dataclasses.asdict(d) for d in self.data],
+        }
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @staticmethod
+    def from_dict(doc: Dict[str, Any]) -> "Report":
+        doc = migrate(doc)
+        try:
+            rep = Reporter(**doc["reporter"])
+            exp = Experiment(**doc["experiment"])
+            data = [DataEntry(**d) for d in doc["data"]]
+        except TypeError as e:
+            raise ProtocolError(f"malformed report: {e}") from e
+        r = Report(
+            version=doc["version"],
+            reporter=rep,
+            parameter=doc.get("parameter", {}),
+            experiment=exp,
+            data=data,
+        )
+        r.validate()
+        return r
+
+    @staticmethod
+    def from_json(text: str) -> "Report":
+        return Report.from_dict(json.loads(text))
+
+    def validate(self) -> None:
+        if self.version not in SUPPORTED_VERSIONS:
+            raise ProtocolError(f"unsupported protocol version {self.version!r}")
+        for d in self.data:
+            d.validate()
+
+    def digest(self) -> str:
+        """Stable content hash (integrity check for the result store)."""
+        return hashlib.sha256(self.to_json(indent=None).encode()).hexdigest()[:16]
+
+
+def migrate(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Schema evolution: upgrade old protocol documents in place (§V-B a)."""
+    version = str(doc.get("version", "1"))
+    if version not in SUPPORTED_VERSIONS:
+        raise ProtocolError(f"unknown protocol version {version!r}")
+    if version == "1":
+        # v1 had no chain_of_trust flag and stored metrics flat on the entry.
+        doc = dict(doc)
+        rep = dict(doc.get("reporter", {}))
+        rep.setdefault("chain_of_trust", True)
+        doc["reporter"] = rep
+        new_data = []
+        for d in doc.get("data", []):
+            d = dict(d)
+            if "metrics" not in d:
+                known = {f.name for f in dataclasses.fields(DataEntry)}
+                d["metrics"] = {k: d.pop(k) for k in list(d) if k not in known}
+            new_data.append(d)
+        doc["data"] = new_data
+        doc["version"] = "2"
+    return doc
+
+
+def new_report(
+    *,
+    system: str,
+    variant: str,
+    usecase: str = "",
+    pipeline_id: str = "",
+    software_version: str = "",
+    parameter: Optional[Dict[str, Any]] = None,
+    commit: str = "",
+) -> Report:
+    now = time.time()
+    return Report(
+        reporter=Reporter(
+            system=system,
+            pipeline_id=pipeline_id or f"pl-{int(now)}",
+            timestamp=now,
+            software_version=software_version,
+            commit=commit,
+        ),
+        experiment=Experiment(
+            system=system,
+            software_version=software_version,
+            variant=variant,
+            usecase=usecase,
+            timestamp=now,
+        ),
+        parameter=parameter or {},
+    )

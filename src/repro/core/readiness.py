@@ -1,0 +1,80 @@
+"""Incremental adoption levels (paper contribution #2):
+
+    runnability  →  instrumentability  →  reproducibility
+
+A benchmark onboards at RUNNABLE (it executes and reports success/runtime),
+matures to INSTRUMENTED (structured roofline/performance metrics), and
+finally REPRODUCIBLE (complete provenance + deterministic artifact digests
+so a re-run can be verified bit-for-bit).  Levels are *validated from the
+protocol document itself* — rigor is enforced by the protocol, not by trust
+(paper §I-C, §VI-A).
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import List, Tuple
+
+from repro.core.protocol import Report
+
+
+class Readiness(enum.IntEnum):
+    FAILED = 0
+    RUNNABLE = 1
+    INSTRUMENTED = 2
+    REPRODUCIBLE = 3
+
+
+# Metrics every INSTRUMENTED report must carry (roofline instrumentation).
+INSTRUMENTED_METRICS = (
+    "hlo_flops",
+    "hlo_bytes",
+    "collective_bytes",
+    "t_compute",
+    "t_memory",
+    "t_collective",
+)
+
+# Fields every REPRODUCIBLE report must carry in addition.
+REPRODUCIBLE_METRICS = ("artifact_digest", "seed")
+
+
+def classify(report: Report) -> Tuple[Readiness, List[str]]:
+    """Highest readiness level the report satisfies, plus the gaps blocking
+    the next level (actionable onboarding feedback)."""
+    gaps: List[str] = []
+    if not report.data:
+        return Readiness.FAILED, ["no data entries"]
+    if not all(d.success for d in report.data):
+        return Readiness.FAILED, ["one or more executions failed"]
+    if not all(d.runtime > 0 for d in report.data):
+        return Readiness.FAILED, ["missing runtime"]
+
+    level = Readiness.RUNNABLE
+
+    missing = sorted(
+        {m for d in report.data for m in INSTRUMENTED_METRICS if m not in d.metrics}
+    )
+    if missing:
+        gaps.extend(f"metric missing for INSTRUMENTED: {m}" for m in missing)
+        return level, gaps
+    level = Readiness.INSTRUMENTED
+
+    missing = sorted(
+        {m for d in report.data for m in REPRODUCIBLE_METRICS if m not in d.metrics}
+    )
+    if not report.reporter.complete():
+        missing.append("reporter provenance incomplete")
+    if not report.reporter.chain_of_trust:
+        missing.append("chain of trust broken (externally injected data)")
+    if missing:
+        gaps.extend(f"blocking REPRODUCIBLE: {m}" for m in missing)
+        return level, gaps
+    return Readiness.REPRODUCIBLE, []
+
+
+def verify_reproduction(a: Report, b: Report) -> bool:
+    """Two REPRODUCIBLE runs of the same cell must agree on artifact digests."""
+    da = {i: e.metrics.get("artifact_digest") for i, e in enumerate(a.data)}
+    db = {i: e.metrics.get("artifact_digest") for i, e in enumerate(b.data)}
+    return da == db and all(v is not None for v in da.values())

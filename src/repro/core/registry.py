@@ -1,0 +1,49 @@
+"""Collection registry — binds the decentralized benchmark modules
+(``repro.configs``) into one addressable collection (paper §IV-A:
+"benchmark repositories may be organized into collection-specific groups").
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro import configs
+from repro.configs import shapes as SH
+from repro.core.harness import BenchmarkSpec
+
+
+def collection(
+    system: str,
+    *,
+    archs: Optional[List[str]] = None,
+    shapes: Optional[List[str]] = None,
+) -> List[BenchmarkSpec]:
+    """All applicable benchmark cells for one system."""
+    out: List[BenchmarkSpec] = []
+    for arch in archs or configs.ARCH_IDS:
+        cfg = configs.get_config(arch)
+        for name, shape in SH.SHAPES.items():
+            if shapes and name not in shapes:
+                continue
+            if not SH.applicable(cfg, shape):
+                continue
+            out.append(BenchmarkSpec(arch=arch, shape=name, system=system))
+    return out
+
+
+def collection_info() -> Dict[str, Dict[str, object]]:
+    """Human-readable inventory (family, params, applicable shapes)."""
+    from repro.models import params as P
+
+    out: Dict[str, Dict[str, object]] = {}
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_config(arch)
+        out[arch] = {
+            "family": cfg.family,
+            "layers": cfg.n_layers,
+            "d_model": cfg.d_model,
+            "params": P.count_params_cfg(cfg),
+            "active_params": P.count_params_cfg(cfg, active_only=True),
+            "shapes": [s for s in SH.SHAPES if SH.applicable(cfg, SH.SHAPES[s])],
+        }
+    return out

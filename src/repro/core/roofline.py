@@ -1,0 +1,209 @@
+"""Roofline analysis (deliverable g).
+
+Derives the three roofline terms per (arch × shape × mesh) cell from the
+compiled dry-run artifact:
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs/bytes/collective_bytes come from the loop-aware HLO cost model
+(``repro.distributed.hlo``) — XLA's own cost_analysis undercounts scanned
+layers (measured; see DESIGN.md).  MODEL_FLOPS = 6·N·D (train) or 2·N·D
+(forward-only), N = non-embedding (active for MoE) params, giving the
+"useful ratio" that exposes remat/redundancy waste.
+
+Collective-term convention: wire bytes are per-device ring-model bytes; we
+conservatively credit ONE of the chip's ICI links (documented; an axis-aware
+multi-link model is a refinement iteration).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+from repro.distributed.hlo import HloCost
+from repro.hardware import SystemSpec
+from repro.models import params as MP
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    system: str
+    strategy: str
+    chips: int
+    # Per-device quantities from the HLO cost model.
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    # Terms (seconds).
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    # Model-level accounting.
+    model_flops: float
+    useful_ratio: float
+    # Minimum HBM traffic the step fundamentally needs (params + state read
+    # once) vs what the compiled program moves — memory-side usefulness.
+    model_bytes: float
+    memory_useful_ratio: float
+    tokens_per_step: int
+    # Memory feasibility (per device, bytes).
+    hbm_per_device: float
+    hbm_required: float
+    fits: bool
+    collectives: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Lower-bound step time: resources overlap perfectly."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline-bound step time."""
+        peak = self.flops_per_device / max(self.t_compute, 1e-30)  # chip peak
+        if self.step_time <= 0:
+            return 0.0
+        return self.model_flops / self.chips / self.step_time / peak
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Headline score: useful fraction of the *binding* resource.
+
+        Compute-bound cells score MFU; memory-bound cells score
+        model_bytes/HLO_bytes at the bound time.  1.0 = the step moves or
+        computes nothing the model doesn't fundamentally require.
+        """
+        if self.step_time <= 0:
+            return 0.0
+        t_useful_compute = (self.model_flops / self.chips) / (
+            self.flops_per_device / max(self.t_compute, 1e-30)
+        )
+        t_useful_memory = self.t_memory * min(self.memory_useful_ratio, 1.0)
+        return max(t_useful_compute, t_useful_memory) / self.step_time
+
+    def suggestion(self) -> str:
+        d = self.dominant
+        if d == "compute":
+            if self.useful_ratio < 0.5:
+                return (
+                    "compute-bound with low useful ratio: cut redundant compute "
+                    "(remat policy, causal-block skipping, replicated attention)"
+                )
+            return "compute-bound: good; push MXU utilization via kernel tiling"
+        if d == "memory":
+            return (
+                "memory-bound: raise arithmetic intensity (fuse, larger "
+                "microbatch, bf16 states, weight-stationary layouts)"
+            )
+        return (
+            "collective-bound: reshard to reduce cross-axis traffic, overlap "
+            "collectives with compute, or compress gradients"
+        )
+
+    def metrics(self) -> Dict[str, Any]:
+        return {
+            "hlo_flops": self.flops_per_device * self.chips,
+            "hlo_bytes": self.bytes_per_device * self.chips,
+            "collective_bytes": self.collective_bytes_per_device * self.chips,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "model_bytes": self.model_bytes,
+            "memory_useful_ratio": self.memory_useful_ratio,
+            "step_time_bound_s": self.step_time,
+            "mfu": self.mfu,
+            "roofline_fraction": self.roofline_fraction,
+            "hbm_required": self.hbm_required,
+            "fits": self.fits,
+        }
+
+
+def tokens_per_step(shape_kind: str, seq_len: int, global_batch: int) -> int:
+    if shape_kind == "decode":
+        return global_batch  # one token per sequence
+    return global_batch * seq_len
+
+
+def model_flops(cfg: ModelConfig, shape_kind: str, n_tokens: int) -> float:
+    n = MP.non_embedding_param_count(cfg, active_only=True)
+    factor = 6.0 if shape_kind == "train" else 2.0
+    return factor * n * n_tokens
+
+
+def model_bytes_per_device(
+    cfg: ModelConfig, shape_kind: str, *, state_bytes: float, chips: int
+) -> float:
+    """Minimum HBM traffic/device: weights once (+grad/moment traffic for
+    train ≈ 3x params: read p, write p, read+write moments amortized), decode
+    state read+write once."""
+    import jax.numpy as jnp
+
+    n = MP.count_params_cfg(cfg)
+    pbytes = n * jnp.dtype(cfg.dtype).itemsize
+    mult = 3.0 if shape_kind == "train" else 1.0
+    return (pbytes * mult + state_bytes * 2.0) / chips
+
+
+def compute(
+    *,
+    cfg: ModelConfig,
+    arch: str,
+    shape_name: str,
+    shape_kind: str,
+    seq_len: int,
+    global_batch: int,
+    system: SystemSpec,
+    strategy: str,
+    cost: HloCost,
+    hbm_required: float,
+    state_bytes: float = 0.0,
+) -> Roofline:
+    chip = system.chip
+    chips = system.n_chips
+    ntok = tokens_per_step(shape_kind, seq_len, global_batch)
+    mf = model_flops(cfg, shape_kind, ntok)
+    mb = model_bytes_per_device(cfg, shape_kind, state_bytes=state_bytes, chips=chips)
+    t_c = cost.flops / chip.peak_flops_bf16
+    t_m = cost.bytes / chip.hbm_bw
+    t_x = cost.collective_bytes / chip.ici_bw_per_link
+    ratio = mf / max(cost.flops * chips, 1e-30)
+    return Roofline(
+        arch=arch,
+        shape=shape_name,
+        system=system.name,
+        strategy=strategy,
+        chips=chips,
+        flops_per_device=cost.flops,
+        bytes_per_device=cost.bytes,
+        collective_bytes_per_device=cost.collective_bytes,
+        t_compute=t_c,
+        t_memory=t_m,
+        t_collective=t_x,
+        model_flops=mf,
+        useful_ratio=ratio,
+        model_bytes=mb,
+        memory_useful_ratio=mb / max(cost.bytes, 1e-30),
+        tokens_per_step=ntok,
+        hbm_per_device=chip.hbm_bytes,
+        hbm_required=hbm_required,
+        fits=hbm_required <= chip.hbm_bytes,
+        collectives=dict(cost.collectives),
+    )

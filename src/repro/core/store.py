@@ -1,0 +1,122 @@
+"""Append-only result store — the ``exacb.data`` orphan-branch analogue
+(paper §IV-E / §V-A1 ``record: true``).
+
+Reports are written as individual JSON files named by monotonic sequence +
+content digest under ``<root>/<prefix>/``.  Writes are atomic (tmp+rename),
+never mutated, and verified on read — so partially-failed pipelines cannot
+corrupt earlier results (the paper's resilience argument for splitting
+execution from post-processing).  Externally produced data can be ingested
+via an injection hook; such reports are marked ``chain_of_trust=False``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from pathlib import Path
+from typing import Iterator, List, Optional
+
+from repro.core.protocol import ProtocolError, Report
+
+
+class StoreError(RuntimeError):
+    pass
+
+
+class ResultStore:
+    def __init__(self, root: str | Path):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    # ---- write path ----
+    def append(self, prefix: str, report: Report) -> Path:
+        """Atomically persist one report; returns its path."""
+        report.validate()
+        d = self.root / _safe(prefix)
+        d.mkdir(parents=True, exist_ok=True)
+        seq = self._next_seq(d)
+        digest = report.digest()
+        path = d / f"{seq:08d}.{digest}.json"
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(report.to_json(indent=2))
+            os.replace(tmp, path)  # atomic on POSIX
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        return path
+
+    def ingest_external(self, prefix: str, doc: dict) -> Path:
+        """Injection hook for externally provided data (§IV-E).
+
+        The resulting chain of trust is not guaranteed — mark it so.
+        """
+        report = Report.from_dict(doc)
+        report.reporter.chain_of_trust = False
+        return self.append(prefix, report)
+
+    # ---- read path ----
+    def prefixes(self) -> List[str]:
+        return sorted(p.name for p in self.root.iterdir() if p.is_dir())
+
+    def read(self, path: Path) -> Report:
+        text = path.read_text()
+        report = Report.from_json(text)
+        want = path.name.split(".")[1]
+        got = report.digest()
+        if want != got:
+            raise StoreError(f"integrity failure for {path}: {want} != {got}")
+        return report
+
+    def query(
+        self,
+        prefix: str,
+        *,
+        variant: Optional[str] = None,
+        system: Optional[str] = None,
+        since: Optional[float] = None,
+        until: Optional[float] = None,
+        trusted_only: bool = False,
+    ) -> List[Report]:
+        d = self.root / _safe(prefix)
+        if not d.exists():
+            return []
+        out = []
+        for p in sorted(d.glob("*.json")):
+            try:
+                r = self.read(p)
+            except (ProtocolError, StoreError, json.JSONDecodeError):
+                # A corrupt record must not take down analyses of the rest.
+                continue
+            if variant is not None and r.experiment.variant != variant:
+                continue
+            if system is not None and r.experiment.system != system:
+                continue
+            ts = r.experiment.timestamp
+            if since is not None and ts < since:
+                continue
+            if until is not None and ts > until:
+                continue
+            if trusted_only and not r.reporter.chain_of_trust:
+                continue
+            out.append(r)
+        return out
+
+    def latest(self, prefix: str, **kw) -> Optional[Report]:
+        rs = self.query(prefix, **kw)
+        return rs[-1] if rs else None
+
+    def _next_seq(self, d: Path) -> int:
+        seqs = [int(p.name.split(".")[0]) for p in d.glob("*.json")]
+        return (max(seqs) + 1) if seqs else 0
+
+
+def _safe(prefix: str) -> str:
+    ok = "".join(c if (c.isalnum() or c in ".-_") else "_" for c in prefix)
+    if not ok:
+        raise StoreError("empty store prefix")
+    return ok

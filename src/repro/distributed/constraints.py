@@ -1,0 +1,54 @@
+"""Activation sharding constraints via a trace-time context.
+
+Relying on GSPMD propagation alone lets ambiguous points (the microbatch
+reshape, embedding gathers) re-shard activations badly — measured on
+starcoder2 train_4k: attention ran with an 8x-replicated batch until the
+batch dim was pinned.  Model code calls ``constrain(x, logical_axes)`` at
+block boundaries; outside any context this is a no-op (smoke tests,
+single-device runs), inside ``activation_rules`` it becomes
+``with_sharding_constraint`` under the active strategy — the MaxText
+pattern, without threading a mesh through every layer signature.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Mapping, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import spec_for
+
+_CTX: dict = {"mesh": None, "rules": None}
+
+
+@contextlib.contextmanager
+def activation_rules(mesh: Mesh, rules: Mapping[str, Any]):
+    old = (_CTX["mesh"], _CTX["rules"])
+    _CTX["mesh"], _CTX["rules"] = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX["mesh"], _CTX["rules"] = old
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    mesh, rules = _CTX["mesh"], _CTX["rules"]
+    if mesh is None or not hasattr(x, "ndim"):
+        return x
+    axes: Tuple[Optional[str], ...] = tuple(logical_axes)
+    if len(axes) != x.ndim:
+        return x
+    spec = spec_for(x.shape, axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def wrap(fn, mesh: Mesh, rules: Mapping[str, Any]):
+    """Make ``fn`` trace under the given activation rules."""
+
+    def wrapped(*a, **kw):
+        with activation_rules(mesh, rules):
+            return fn(*a, **kw)
+
+    return wrapped

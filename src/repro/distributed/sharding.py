@@ -1,0 +1,277 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates every parameter with *logical* axis names
+("embed", "q_heads", "experts", ...).  A ``Strategy`` maps logical axes to
+mesh axes; this module turns that mapping into ``NamedSharding`` trees for
+params, optimizer state, batches and decode state.
+
+Divisibility fallback: if a tensor dimension is not divisible by the mesh
+axes assigned to it (e.g. gemma3's 8 query heads on a 16-way model axis),
+the dimension falls back to replication and the decision is recorded — the
+dry-run stays green and the roofline report shows the cost, which is exactly
+the incremental-onboarding behaviour the paper prescribes (runnable first,
+optimal later).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import params as MP
+from repro.models.config import ATTN, MLA, RGLRU, SSD, ModelConfig
+
+AxisSpec = Union[None, str, Tuple[str, ...]]
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    """A named sharding strategy = two logical->mesh rule tables."""
+
+    name: str
+    param_rules: Mapping[str, AxisSpec]
+    act_rules: Mapping[str, AxisSpec]
+    # Extra rules applied to optimizer state only (ZeRO-1 style sharding).
+    opt_rules: Mapping[str, AxisSpec] = dataclasses.field(default_factory=dict)
+    description: str = ""
+
+
+# Baseline: tensor parallel on "model", (pod+)data parallel on batch.
+TP_DP = Strategy(
+    name="tp_dp",
+    param_rules={
+        "vocab": "model",
+        "q_heads": "model",
+        "ffn": "model",
+        "experts": "model",
+        "lru": "model",
+        "lru_heads": "model",
+    },
+    act_rules={
+        "batch": ("pod", "data"),
+        "q_heads": "model",
+        "kv_heads": "model",
+        # Decode caches: no assigned arch has kv_heads divisible by the
+        # 16-way model axis, so "kv_heads" always falls back — the cache
+        # SEQUENCE dim shards over "model" instead (flash-decoding layout:
+        # each rank holds a KV slice and the softmax combines via psum).
+        # Measured 11x memory-term cut on musicgen decode (§Perf cell C).
+        "seq": "model",
+        "ffn": "model",
+        "experts": "model",
+        "vocab": "model",
+        "lru": "model",
+    },
+    # ZeRO-1: optimizer moments additionally sharded over the data axis
+    # along the embed dimension when free.
+    opt_rules={"embed": "data"},
+    description="TP over 'model', DP over 'pod'+'data', ZeRO-1 moments",
+)
+
+# Fully-sharded params over the data axis (needed for the 235B/671B cells).
+FSDP_TP = Strategy(
+    name="fsdp_tp",
+    param_rules={
+        **TP_DP.param_rules,
+        "embed": "data",  # FSDP shard along d_model
+    },
+    act_rules=TP_DP.act_rules,
+    opt_rules={},  # moments inherit the fully-sharded param layout
+    description="FSDP over 'data' (embed dim) + TP over 'model'",
+)
+
+# Pure FSDP + DP over BOTH axes — no tensor parallelism at all.  For models
+# whose per-layer weights fit one chip after 256-way sharding, this removes
+# the Megatron per-layer activation all-reduces entirely (measured 8x less
+# collective volume on glm4-9b train; EXPERIMENTS.md §Perf) and gives each
+# device full-channel activation locality.  Requires microbatching such that
+# global_batch % (all axes) == 0 or falls back to partial batch sharding.
+FSDP_DP = Strategy(
+    name="fsdp_dp",
+    param_rules={
+        "vocab": ("data", "model"),
+        "embed": ("data", "model"),
+        "ffn": None,
+        "q_heads": None,
+        "experts": ("data", "model"),
+        "lru": None,
+    },
+    act_rules={
+        "batch": ("pod", "data", "model"),
+        "experts": ("data", "model"),
+        "vocab": None,
+    },
+    opt_rules={},
+    description="ZeRO-3-style: params fully sharded over data+model, no TP",
+)
+
+STRATEGIES: Dict[str, Strategy] = {s.name: s for s in (TP_DP, FSDP_TP, FSDP_DP)}
+
+
+def default_strategy(cfg: ModelConfig, step_kind: str = "") -> str:
+    """Strategy selection policy (measured, EXPERIMENTS §Perf cell A):
+
+    * >30 B params: fsdp_tp — params cannot replicate within a 16 GB chip.
+    * training a dense <30 B model: fsdp_dp — removes the Megatron per-layer
+      activation all-reduces (3x step-bound win on glm4-9b) and weights are
+      re-gathered per layer anyway under grad recompute.
+    * serving (prefill/decode): tp_dp — weights stay resident; FSDP would
+      re-gather the full model every decoded token.
+    """
+    n = MP.count_params_cfg(cfg)
+    if n > 30_000_000_000:
+        return "fsdp_tp"
+    # NOTE: fsdp_dp beats tp_dp 3x for dense-<30B TRAIN *when the
+    # per-microbatch batch covers every device* (glm4 mb=1 on 256 chips,
+    # §Perf cell A).  With the sweep's mb=8 x 512 chips the batch falls back
+    # to 32-way sharding and 16 model-ranks duplicate work (measured rf
+    # regression 0.021->0.003 on mamba2) — so it stays an explicit opt-in
+    # (--strategy fsdp_dp) rather than the default.
+    return "tp_dp"
+
+
+# ---------------------------------------------------------------------------
+# Rule resolution
+# ---------------------------------------------------------------------------
+
+def _mesh_axes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for(
+    shape: Sequence[int],
+    logical_axes: Sequence[Optional[str]],
+    rules: Mapping[str, AxisSpec],
+    mesh: Mesh,
+    fallbacks: Optional[List[str]] = None,
+) -> P:
+    """PartitionSpec for one tensor, honouring divisibility + no-reuse."""
+    sizes = _mesh_axes(mesh)
+    used: set = set()
+    parts: List[AxisSpec] = []
+    for dim, ax in zip(shape, logical_axes):
+        r = rules.get(ax) if ax is not None else None
+        if r is None:
+            parts.append(None)
+            continue
+        cand = (r,) if isinstance(r, str) else tuple(r)
+        cand = tuple(a for a in cand if a in sizes and a not in used)
+        # Progressive fallback: drop trailing axes until divisible.
+        while cand and dim % math.prod(sizes[a] for a in cand) != 0:
+            if fallbacks is not None:
+                fallbacks.append(f"{ax}[{dim}] !% {cand}")
+            cand = cand[:-1]
+        if not cand:
+            parts.append(None)
+            continue
+        used.update(cand)
+        parts.append(cand[0] if len(cand) == 1 else cand)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_shardings(
+    cfg: ModelConfig, mesh: Mesh, strategy: Strategy, fallbacks: Optional[List[str]] = None
+) -> Pytree:
+    specs = MP.param_specs(cfg)
+    return jax.tree.map(
+        lambda s: NamedSharding(
+            mesh, spec_for(s.shape, s.logical_axes, strategy.param_rules, mesh, fallbacks)
+        ),
+        specs,
+        is_leaf=lambda x: isinstance(x, MP.ParamSpec),
+    )
+
+
+def opt_state_sharding_for(
+    spec: MP.ParamSpec, mesh: Mesh, strategy: Strategy
+) -> NamedSharding:
+    """Moment tensors: param rules + opt extras (ZeRO-1)."""
+    rules = dict(strategy.param_rules)
+    rules.update(strategy.opt_rules)
+    return NamedSharding(mesh, spec_for(spec.shape, spec.logical_axes, rules, mesh))
+
+
+def batch_shardings(
+    cfg: ModelConfig, batch_specs: Dict[str, jax.ShapeDtypeStruct], mesh: Mesh, strategy: Strategy
+) -> Dict[str, NamedSharding]:
+    """Input batch: leading dim is always the (pod+)data-parallel batch."""
+    out = {}
+    for k, s in batch_specs.items():
+        axes: Tuple[Optional[str], ...] = ("batch",) + (None,) * (len(s.shape) - 1)
+        out[k] = NamedSharding(mesh, spec_for(s.shape, axes, strategy.act_rules, mesh))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode-state logical axes (mirrors transformer.init_decode_state)
+# ---------------------------------------------------------------------------
+
+def _state_axes_for_kind(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    if kind == ATTN:
+        ax = ("batch", "kv_heads", "seq", "head_dim")
+        return {"cache": {"k": ax, "v": ax}}
+    if kind == MLA:
+        return {"cache": {
+            "ckv": ("batch", "seq", "kv_lora"),
+            "krope": ("batch", "seq", "head_dim"),
+        }}
+    if kind == RGLRU:
+        return {"state": {
+            "h": ("batch", "lru"),
+            "conv": ("batch", None, "lru"),
+        }}
+    if kind == SSD:
+        return {"state": {
+            "S": ("batch", "q_heads", "state", "head_dim"),
+            "conv_x": ("batch", None, "q_heads", "head_dim"),
+            "conv_BC": ("batch", None, None, None, "state"),
+        }}
+    raise ValueError(kind)
+
+
+def decode_state_logical(cfg: ModelConfig) -> Pytree:
+    """Logical-axes tree mirroring ``init_decode_state`` (incl. layer stack)."""
+    n_full, rem = MP.block_layout(cfg)
+    out: Dict[str, Any] = {}
+    if n_full:
+        out["period"] = {}
+        for i, spec in enumerate(cfg.block_pattern):
+            axes = _state_axes_for_kind(cfg, spec.kind)
+            out["period"][f"p{i}"] = jax.tree.map(
+                lambda a: ("layers",) + a, axes, is_leaf=lambda x: isinstance(x, tuple)
+            )
+    if rem:
+        out["rem"] = {
+            f"r{i}": _state_axes_for_kind(cfg, cfg.block_pattern[i].kind)
+            for i in range(rem)
+        }
+    return out
+
+
+def decode_state_shardings(
+    cfg: ModelConfig, state_specs: Pytree, mesh: Mesh, strategy: Strategy,
+    fallbacks: Optional[List[str]] = None,
+) -> Pytree:
+    logical = decode_state_logical(cfg)
+
+    def walk(spec_node, ax_node):
+        if isinstance(spec_node, dict):
+            return {k: walk(spec_node[k], ax_node[k]) for k in spec_node}
+        return NamedSharding(
+            mesh, spec_for(spec_node.shape, ax_node, strategy.act_rules, mesh, fallbacks)
+        )
+
+    return walk(state_specs, logical)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,90 @@
+"""Public entry point for flash attention: jit wrapper + layout handling.
+
+Call ``flash_attention(q, k, v, ...)`` with model-layout tensors
+(B, H, T, D).  On TPU the Pallas kernel runs natively; on CPU the kernel
+body executes in interpret mode (tests) — production CPU/dry-run paths use
+``repro.models.layers.banded_attention`` instead (see ``install()``).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,   # (B, Hq, T, D)
+    k: jax.Array,   # (B, Hkv, T, D)
+    v: jax.Array,   # (B, Hkv, T, Dv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    B, Hq, T, D = q.shape
+    Hkv = k.shape[1]
+    Dv = v.shape[-1]
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    bq = min(block_q, T)
+    bk = min(block_k, T)
+    pad = (-T) % max(bq, bk)
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    out = flash_attention_pallas(
+        q.reshape(B * Hq, Tp, D),
+        k.reshape(B * Hkv, Tp, D),
+        v.reshape(B * Hkv, Tp, Dv),
+        n_q_heads=Hq,
+        n_kv_heads=Hkv,
+        causal=causal,
+        window=window or 0,
+        scale=scale,
+        block_q=bq,
+        block_k=bk,
+        interpret=interpret,
+    )
+    return out.reshape(B, Hq, Tp, Dv)[:, :, :T]
+
+
+def _impl_adapter(q, k, v, *, causal=True, window=None, prefix_len=0, scale=None, **_):
+    if prefix_len:
+        # Prefix-LM masks are not in the kernel's contract; jnp path handles.
+        from repro.models.layers import banded_attention
+
+        return banded_attention(
+            q, k, v, causal=causal, window=window, prefix_len=prefix_len, scale=scale
+        )
+    return flash_attention(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def install() -> None:
+    """Route model attention through the Pallas kernel (TPU deployments)."""
+    from repro.models import layers as L
+
+    L.set_attention_impl(_impl_adapter)
+
+
+def uninstall() -> None:
+    from repro.models import layers as L
+
+    L.set_attention_impl(None)

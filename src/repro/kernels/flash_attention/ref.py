@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the flash-attention kernel (materialized softmax)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,   # (B, Hq, T, D)
+    k: jax.Array,   # (B, Hkv, T, D)
+    v: jax.Array,   # (B, Hkv, T, Dv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, Hq, T, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qr = q.reshape(B, Hkv, G, T, D).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qr, k.astype(jnp.float32)) * scale
+    i = jnp.arange(T)[:, None]
+    j = jnp.arange(T)[None, :]
+    mask = jnp.ones((T, T), bool)
+    if causal:
+        mask = mask & (j <= i)
+    if window is not None and window > 0:
+        mask = mask & (j > i - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, T, -1).astype(q.dtype)

@@ -1,0 +1,42 @@
+"""Public RG-LRU scan entry point."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru.kernel import rglru_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_w", "interpret"))
+def rglru_scan(
+    a: jax.Array,    # (B, T, W)
+    g: jax.Array,    # (B, T, W)
+    h0: Optional[jax.Array] = None,  # (B, W)
+    *,
+    chunk: int = 256,
+    block_w: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    B, T, W = a.shape
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    if h0 is None:
+        h0 = jnp.zeros((B, W), a.dtype)
+    c = min(chunk, T)
+    bw = min(block_w, W)
+    pad_t = (-T) % c
+    pad_w = (-W) % bw
+    if pad_t or pad_w:
+        # pad decay with 1s (identity) and input with 0s
+        a = jnp.pad(a, ((0, 0), (0, pad_t), (0, pad_w)), constant_values=1.0)
+        g = jnp.pad(g, ((0, 0), (0, pad_t), (0, pad_w)))
+        h0 = jnp.pad(h0, ((0, 0), (0, pad_w)))
+    out = rglru_pallas(a, g, h0[:, None, :], chunk=c, block_w=bw, interpret=interpret)
+    return out[:, :T, :W]

@@ -1,0 +1,20 @@
+"""Oracle for the RG-LRU kernel: associative scan over the sequence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(a: jax.Array, g: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t h_{t-1} + g_t with h_0 initial state.  Shapes (B, T, W)."""
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    af = a.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    pa, pb = jax.lax.associative_scan(combine, (af, gf), axis=1)
+    return (pa * h0.astype(jnp.float32) + pb).astype(a.dtype)

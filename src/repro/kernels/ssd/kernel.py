@@ -1,0 +1,113 @@
+"""Pallas TPU kernel for the Mamba-2 SSD (state-space duality) scan.
+
+TPU adaptation of the chunked SSD algorithm: the chunk dimension is the
+innermost (sequential) grid axis; the running inter-chunk state S (N×P per
+head) lives in VMEM scratch and never round-trips to HBM — the key win over
+the XLA lowering, which materializes per-chunk states.  Each grid step does
+three MXU contractions (CB^T score matrix, intra-chunk y, state update) on
+a (chunk × head_dim) tile plus VPU work for the decay masks.
+
+Grid: (B*H, n_chunks).  ``ops.py`` flattens heads and broadcasts groups.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,    # (1, c, P)
+    dt_ref,   # (1, c, 1)   f32 (post-softplus)
+    a_ref,    # (1, 1, 1)   f32 (negative decay rate for this head)
+    b_ref,    # (1, c, N)
+    c_ref,    # (1, c, N)
+    y_ref,    # (1, c, P)
+    s_scr,    # VMEM (N, P) f32 — running inter-chunk state
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0].astype(jnp.float32)           # (c, P)
+    dt = dt_ref[0].astype(jnp.float32)         # (c, 1)
+    a = a_ref[0, 0, 0]                         # scalar < 0
+    Bm = b_ref[0].astype(jnp.float32)          # (c, N)
+    Cm = c_ref[0].astype(jnp.float32)          # (c, N)
+
+    dA = dt[:, 0] * a                          # (c,) log-decay per step
+    cum = jnp.cumsum(dA)                       # (c,)
+
+    # Intra-chunk: scores[i,j] = C_i.B_j * exp(cum_i - cum_j) * dt_j, j<=i.
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                          # (c, c)
+    li = cum[:, None]
+    lj = cum[None, :]
+    decay = jnp.exp(jnp.minimum(li - lj, 0.0))
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(jj <= ii, decay, 0.0)
+    scores = scores * decay * dt[:, 0][None, :]
+    y = jax.lax.dot_general(
+        scores, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                          # (c, P)
+
+    # Inter-chunk: y_i += C_i @ S_prev * exp(cum_i).
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, s_scr[...], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # State update: S = exp(cum_end) * S_prev + sum_j exp(cum_end-cum_j) dt_j B_j x_j^T.
+    seg = jnp.exp(cum[-1] - cum) * dt[:, 0]    # (c,)
+    s_new = jax.lax.dot_general(
+        Bm * seg[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                          # (N, P)
+    s_scr[...] = jnp.exp(cum[-1]) * s_scr[...] + s_new
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_pallas(
+    x: jax.Array,    # (BH, T, P)
+    dt: jax.Array,   # (BH, T)     f32, post-softplus
+    a: jax.Array,    # (BH,)       f32, negative
+    Bm: jax.Array,   # (BH, T, N)  group-broadcast
+    Cm: jax.Array,   # (BH, T, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, T, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0, "ops.py must pad"
+    nc = T // chunk
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, c: (b, 0, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, dt[..., None], a[:, None, None], Bm, Cm)

@@ -1,0 +1,47 @@
+"""Public SSD entry point: model layout in, kernel layout out."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,    # (B, T, H, P)
+    dt: jax.Array,   # (B, T, H)  f32, post-softplus
+    A: jax.Array,    # (H,)       f32, negative
+    Bm: jax.Array,   # (B, T, G, N)
+    Cm: jax.Array,   # (B, T, G, N)
+    *,
+    chunk: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    B, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    c = min(chunk, T)
+    pad = (-T) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Tp = T + pad
+    xf = x.transpose(0, 2, 1, 3).reshape(B * H, Tp, P)
+    dtf = dt.transpose(0, 2, 1).reshape(B * H, Tp).astype(jnp.float32)
+    af = jnp.broadcast_to(A[None, :], (B, H)).reshape(B * H).astype(jnp.float32)
+    Bh = jnp.repeat(Bm.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, Tp, N)
+    Ch = jnp.repeat(Cm.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, Tp, N)
+    y = ssd_pallas(xf, dtf, af, Bh, Ch, chunk=c, interpret=interpret)
+    return y.reshape(B, H, Tp, P).transpose(0, 2, 1, 3)[:, :T]

@@ -1,0 +1,3 @@
+"""Oracle for the SSD kernel: the pure-jnp chunked scan from the model."""
+
+from repro.models.layers import ssd_scan_ref  # noqa: F401

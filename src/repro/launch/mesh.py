@@ -1,0 +1,39 @@
+"""Mesh construction for the production systems.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — required because the
+dry-run must set XLA_FLAGS before the first jax call, while smoke tests must
+see the single real CPU device.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.hardware import SYSTEMS, SystemSpec
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(system: SystemSpec) -> Mesh:
+    return jax.make_mesh(system.mesh_shape, system.mesh_axes)
+
+
+def make_smoke_mesh() -> Mesh:
+    """1x1 mesh over the single local device (tests, CPU benches)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def system_for(name: str) -> SystemSpec:
+    return SYSTEMS[name]
+
+
+def required_devices(system: SystemSpec) -> int:
+    return system.n_chips

@@ -1,0 +1,183 @@
+"""Model configuration for the unified decoder substrate.
+
+One ``ModelConfig`` dataclass describes every architecture in the assigned
+collection: dense GQA transformers (glm4, qwen3, starcoder2), mixed
+local/global attention (gemma3), hybrid RG-LRU (recurrentgemma), audio
+decoders (musicgen), prefix-LM VLMs (paligemma), MoE (qwen3-moe), MLA+MoE
+(deepseek-v3) and attention-free SSD models (mamba2).
+
+The depth structure is expressed as a *block pattern*: a period of
+``LayerSpec`` entries that repeats through the network (with a possibly
+partial final period).  Dense models have a period of one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# Temporal-mixer kinds.
+ATTN = "attn"      # (possibly windowed) softmax attention, GQA/MHA/MQA
+MLA = "mla"        # DeepSeek multi-head latent attention
+RGLRU = "rglru"    # Griffin real-gated linear recurrent unit block
+SSD = "ssd"        # Mamba-2 state-space duality block
+
+# Channel-mixer kinds.
+MLP_DENSE = "dense"    # SwiGLU MLP
+MLP_MOE = "moe"        # routed mixture-of-experts (+ optional shared expert)
+MLP_NONE = "none"      # mixer-less block (SSD blocks fuse channel mixing)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer within the repeating block pattern."""
+
+    kind: str = ATTN            # temporal mixer
+    window: Optional[int] = None  # sliding window; None = global attention
+    mlp: str = MLP_DENSE        # channel mixer
+    rope_theta: Optional[float] = None  # per-layer override (gemma3 local/global)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0           # routed experts
+    top_k: int = 0
+    d_ff: int = 0                # per-expert hidden width
+    n_shared_experts: int = 0    # always-on experts (DeepSeek style)
+    shared_d_ff: int = 0         # hidden width of the fused shared expert
+    capacity_factor: float = 1.25
+    dispatch: str = "row"        # "row" (sharded, default) | "global" (naive)
+    router_fn: str = "softmax"   # "softmax" (qwen3) | "sigmoid" (deepseek-v3)
+    routed_scale: float = 1.0    # deepseek-v3 routed-expert scaling factor
+    router_noise: float = 0.0    # jitter used during training
+    aux_loss_weight: float = 0.001
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDConfig:
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk_size: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int = 0           # 0 -> d_model
+    conv_width: int = 4
+    block_width_mult: int = 3    # Griffin: MLP expansion in recurrent block
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    block_pattern: Tuple[LayerSpec, ...] = (LayerSpec(),)
+
+    # Attention details.
+    rope_theta: float = 10000.0
+    use_qk_norm: bool = False          # qwen3
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    scale_embeddings: bool = False     # gemma family: x *= sqrt(d_model)
+    logits_softcap: Optional[float] = None
+
+    # Prefix-LM (paligemma): bidirectional attention over the first
+    # ``prefix_len`` positions.  0 disables.
+    prefix_len: int = 0
+
+    # Input modality: "tokens" (LM), "embeddings" (stub frontend supplies
+    # frame/patch embeddings directly).
+    input_mode: str = "tokens"
+    # Multi-codebook output heads (musicgen): number of parallel codebooks.
+    n_codebooks: int = 1
+
+    # Optional sub-configs; present iff the pattern references them.
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssd: Optional[SSDConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+
+    # DeepSeek multi-token prediction depth (training-time auxiliary head).
+    mtp_depth: int = 0
+    mtp_loss_weight: float = 0.1
+
+    # Numerics.
+    dtype: str = "bfloat16"            # activations/params
+    # Family tag for readiness/reporting ("dense", "moe", "ssm", ...).
+    family: str = "dense"
+    # Eligible for the long_500k cell (bounded state / mostly-local attention).
+    long_context: bool = False
+
+    # ----- derived -----
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def layer_specs(self) -> Tuple[LayerSpec, ...]:
+        """The full, depth-expanded layer list (period repeated + truncated)."""
+        p = self.block_pattern
+        reps = (self.n_layers + len(p) - 1) // len(p)
+        return tuple((p * reps)[: self.n_layers])
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(s.kind in (SSD, RGLRU) for s in self.layer_specs())
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if no layer attends globally over unbounded context."""
+        return all(
+            s.kind in (SSD, RGLRU) or (s.kind in (ATTN,) and s.window is not None)
+            for s in self.layer_specs()
+        )
+
+    def validate(self) -> None:
+        assert self.n_layers > 0 and self.d_model > 0
+        for s in self.block_pattern:
+            if s.kind == MLA:
+                assert self.mla is not None, f"{self.name}: MLA pattern needs mla config"
+            if s.kind == SSD:
+                assert self.ssd is not None, f"{self.name}: SSD pattern needs ssd config"
+            if s.kind == RGLRU:
+                assert self.rglru is not None, f"{self.name}: RG-LRU pattern needs rglru config"
+            if s.mlp == MLP_MOE:
+                assert self.moe is not None and self.moe.n_experts > 0
+        if self.input_mode not in ("tokens", "embeddings"):
+            raise ValueError(self.input_mode)
+
+    def param_count(self) -> int:
+        """Total parameter count (exact, mirrors the param tree)."""
+        from repro.models import params as P  # local import to avoid cycle
+
+        return P.count_params(P.param_specs(self))
+
+    def active_param_count(self) -> int:
+        """Parameters active per token (MoE counts top_k + shared experts)."""
+        from repro.models import params as P
+
+        return P.count_params(P.param_specs(self), active_only=True)

@@ -1,0 +1,225 @@
+"""AdamW with distributed-training accommodations.
+
+* **Compressed moment states** ("q8": int8 first moment + bf16 second
+  moment = 3 bytes/param vs 8 for f32) — required for deepseek-v3-671b to
+  fit 512×v5e (16 GB HBM/chip).  The first moment scales like gradients and
+  quantizes linearly; the second moment spans ~7 decades, where linear int8
+  collapses small entries to zero and m/(sqrt(0)+eps) explodes (measured in
+  tests) — bf16's 8-bit exponent covers it, which is why v stays bf16.
+* **Stochastic rounding** for bf16 parameter updates — replaces f32 master
+  weights (another 4 bytes/param saved) while keeping the update unbiased.
+* **ZeRO-1 moment sharding** comes from ``Strategy.opt_rules`` — this module
+  only defines the state *structure*; layouts are assigned in
+  ``distributed.steps``.
+
+Pure-functional: ``init``/``apply`` over pytrees, no global state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+Q8_BLOCK = 256  # quantization block along the trailing axis
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"          # "cosine" | "constant" | "linear"
+    state_dtype: str = "float32"      # "float32" | "q8"
+    stochastic_rounding: bool = False
+
+
+def learning_rate(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        decay = jnp.maximum(
+            0.0, 1.0 - (s - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1)
+        )
+    else:  # cosine
+        frac = jnp.clip(
+            (s - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+        )
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * decay
+
+
+# ---------------------------------------------------------------------------
+# Block-wise 8-bit quantization
+# ---------------------------------------------------------------------------
+
+def _q8_shapes(shape: Tuple[int, ...]) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """(quantized shape, scale shape). Last axis split into Q8_BLOCK blocks."""
+    if not shape:
+        return shape, shape
+    last = shape[-1]
+    blocks = max(1, (last + Q8_BLOCK - 1) // Q8_BLOCK)
+    return shape, shape[:-1] + (blocks,)
+
+
+def q8_encode(x: jax.Array) -> Dict[str, jax.Array]:
+    xf = x.astype(jnp.float32)
+    if x.ndim == 0:
+        scale = jnp.maximum(jnp.abs(xf), 1e-12) / 127.0
+        return {"q": jnp.round(xf / scale).astype(jnp.int8), "scale": scale}
+    last = x.shape[-1]
+    blocks = max(1, (last + Q8_BLOCK - 1) // Q8_BLOCK)
+    pad = blocks * Q8_BLOCK - last
+    if pad:
+        xf = jnp.pad(xf, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = xf.reshape(x.shape[:-1] + (blocks, Q8_BLOCK))
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1), 1e-12) / 127.0
+    q = jnp.round(xb / scale[..., None]).astype(jnp.int8)
+    q = q.reshape(x.shape[:-1] + (blocks * Q8_BLOCK,))[..., :last]
+    return {"q": q, "scale": scale}
+
+
+def q8_decode(enc: Dict[str, jax.Array], shape: Tuple[int, ...]) -> jax.Array:
+    q, scale = enc["q"], enc["scale"]
+    if not shape:
+        return q.astype(jnp.float32) * scale
+    last = shape[-1]
+    blocks = scale.shape[-1]
+    pad = blocks * Q8_BLOCK - last
+    qf = q.astype(jnp.float32)
+    if pad:
+        qf = jnp.pad(qf, [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+    qb = qf.reshape(shape[:-1] + (blocks, Q8_BLOCK))
+    x = qb * scale[..., None]
+    return x.reshape(shape[:-1] + (blocks * Q8_BLOCK,))[..., :last]
+
+
+def stochastic_round_bf16(x: jax.Array, key: jax.Array) -> jax.Array:
+    """Unbiased f32 -> bf16 rounding via random low-bit injection."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    noise = jax.random.randint(key, x.shape, 0, 1 << 16, dtype=jnp.uint32)
+    rounded = (bits + noise) & jnp.uint32(0xFFFF0000)
+    return jax.lax.bitcast_convert_type(rounded, jnp.float32).astype(jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def _moment_like(p: jax.Array, cfg: OptConfig, kind: str) -> Pytree:
+    if cfg.state_dtype == "q8":
+        if kind == "m":
+            _, sshape = _q8_shapes(p.shape)
+            return {
+                "q": jnp.zeros(p.shape, jnp.int8),
+                "scale": jnp.full(sshape, 1e-12, jnp.float32),
+            }
+        return jnp.zeros(p.shape, jnp.bfloat16)  # v: needs exponent range
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def init(params: Pytree, cfg: OptConfig) -> Pytree:
+    return {
+        "m": jax.tree.map(lambda p: _moment_like(p, cfg, "m"), params),
+        "v": jax.tree.map(lambda p: _moment_like(p, cfg, "v"), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_state(abstract_params: Pytree, cfg: OptConfig) -> Pytree:
+    """ShapeDtypeStruct state tree for dry-run lowering."""
+    return jax.eval_shape(lambda p: init(p, cfg), abstract_params)
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def apply(
+    grads: Pytree,
+    params: Pytree,
+    state: Pytree,
+    cfg: OptConfig,
+    rng: Optional[jax.Array] = None,
+) -> Tuple[Pytree, Pytree, Dict[str, jax.Array]]:
+    count = state["count"] + 1
+    lr = learning_rate(cfg, count)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) if cfg.grad_clip else 1.0
+    bc1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    flat_p = _flatten(params)
+    flat_g = _flatten(grads)
+    flat_m = _flatten(state["m"], stop_at_moment=cfg.state_dtype == "q8")
+    flat_v = _flatten(state["v"], stop_at_moment=cfg.state_dtype == "q8")
+
+    new_p, new_m, new_v = {}, {}, {}
+    i = 0
+    for k in flat_p:
+        p, g = flat_p[k], flat_g[k]
+        gf = g.astype(jnp.float32) * clip
+        if cfg.state_dtype == "q8":
+            m = q8_decode(flat_m[k], p.shape)
+            v = flat_v[k].astype(jnp.float32)
+        else:
+            m, v = flat_m[k], flat_v[k]
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(gf)
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (upd + cfg.weight_decay * pf)
+        if p.dtype == jnp.bfloat16 and cfg.stochastic_rounding and rng is not None:
+            sub = jax.random.fold_in(rng, i)
+            new_p[k] = stochastic_round_bf16(pf, sub)
+        else:
+            new_p[k] = pf.astype(p.dtype)
+        new_m[k] = q8_encode(m) if cfg.state_dtype == "q8" else m
+        new_v[k] = v.astype(jnp.bfloat16) if cfg.state_dtype == "q8" else v
+        i += 1
+
+    new_state = {
+        "m": _unflatten(new_m),
+        "v": _unflatten(new_v),
+        "count": count,
+    }
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return _unflatten(new_p), new_state, metrics
+
+
+def _flatten(tree: Pytree, prefix: str = "", stop_at_moment: bool = False) -> Dict[str, Any]:
+    """Flatten nested dicts; optionally treat {'q','scale'} dicts as leaves."""
+    out: Dict[str, Any] = {}
+    if isinstance(tree, dict) and not (
+        stop_at_moment and set(tree.keys()) == {"q", "scale"}
+    ):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}/{k}" if prefix else k, stop_at_moment))
+        return out
+    out[prefix] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]) -> Pytree:
+    out: Dict[str, Any] = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = out
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return out

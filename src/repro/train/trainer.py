@@ -1,0 +1,139 @@
+"""Training loop driver with checkpoint/restart fault tolerance.
+
+Designed for the restart model of large fleets: the loop is a pure function
+of (checkpoint, data seed, step index), so ANY interruption — preemption,
+node failure, manual stop — resumes bit-identically from the last completed
+checkpoint (the data pipeline is keyed by step, the optimizer carries its
+count, parameter init is path-CRC keyed).
+
+Straggler mitigation at this layer is *detection + telemetry*: per-step wall
+times feed the exaCB store, and the time-series orchestrator flags sustained
+step-time shifts (the paper's Fig. 4 workflow — on JUPITER that alert is how
+slow nodes are drained).  Synchronous SPMD can't locally skip a straggler;
+recovery is restart-from-checkpoint onto a healthy (possibly resized) mesh,
+which ``CheckpointManager.restore(shardings=...)`` supports elastically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.distributed import sharding as S
+from repro.distributed import steps as ST
+from repro.models import params as MP
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.train import optimizer as O
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    seed: int = 0
+    remat: str = "dots"
+    microbatches: int = 1
+    data: DataConfig = dataclasses.field(default_factory=DataConfig)
+    opt: O.OptConfig = dataclasses.field(default_factory=O.OptConfig)
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: List[float]
+    step_times: List[float]
+    final_step: int
+    restored_from: Optional[int]
+
+    @property
+    def final_loss(self) -> float:
+        return self.losses[-1] if self.losses else float("nan")
+
+
+def train(
+    cfg: ModelConfig,
+    tc: TrainConfig,
+    *,
+    ckpt: Optional[CheckpointManager] = None,
+    on_step: Optional[Callable[[int, Dict[str, float]], None]] = None,
+    mesh=None,
+    strategy: Optional[S.Strategy] = None,
+) -> TrainResult:
+    """Run (or resume) a training job on the local devices."""
+    data = SyntheticLM(cfg, tc.data)
+    step_fn = ST.make_train_step(
+        cfg, tc.opt, remat=tc.remat, microbatches=tc.microbatches
+    )
+    if mesh is not None and strategy is not None:
+        p_shard = S.param_shardings(cfg, mesh, strategy)
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    else:
+        p_shard = None
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    # ---- restore-or-init (fault-tolerant restart point) ----
+    restored_from = None
+    start_step = 0
+    params = None
+    opt_state = None
+    if ckpt is not None and ckpt.latest_step() is not None:
+        restored_from = ckpt.latest_step()
+        blob = ckpt.restore(restored_from, shardings=None)
+        params, opt_state = blob["params"], blob["opt_state"]
+        start_step = int(ckpt.manifest(restored_from)["extra"]["next_step"])
+    if params is None:
+        params = MP.init_params(cfg, jax.random.key(tc.seed))
+        opt_state = O.init(params, tc.opt)
+
+    losses: List[float] = []
+    times: List[float] = []
+    step = start_step
+    for step in range(start_step, tc.steps):
+        batch = data.batch(step)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = jitted(
+            params, opt_state, batch, jnp.asarray(tc.seed + step, jnp.int32)
+        )
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        losses.append(loss)
+        times.append(dt)
+        if not np.isfinite(loss):
+            raise FloatingPointError(f"loss diverged at step {step}: {loss}")
+        if on_step:
+            on_step(step, {"loss": loss, "step_time_s": dt,
+                           "grad_norm": float(metrics["grad_norm"])})
+        if ckpt is not None and (step + 1) % tc.ckpt_every == 0:
+            ckpt.save(
+                step + 1,
+                {"params": params, "opt_state": opt_state},
+                block=False,
+                extra={"next_step": step + 1, "loss": loss},
+            )
+    if ckpt is not None:
+        ckpt.save(
+            tc.steps,
+            {"params": params, "opt_state": opt_state},
+            block=True,
+            extra={"next_step": tc.steps, "loss": losses[-1] if losses else 0.0},
+        )
+    return TrainResult(losses, times, step, restored_from)
+
+
+def detect_stragglers(step_times: List[float], *, factor: float = 1.5) -> List[int]:
+    """Steps whose wall time exceeds factor x rolling median — the telemetry
+    the exaCB time-series component consumes."""
+    out = []
+    for i in range(4, len(step_times)):
+        med = float(np.median(step_times[max(0, i - 16) : i]))
+        if step_times[i] > factor * med:
+            out.append(i)
+    return out

@@ -1,0 +1,106 @@
+"""Tests for the declarative CI/CD pipeline layer and monitoring exports."""
+
+import json
+
+import pytest
+
+from repro.core import export
+from repro.core.cicd import (
+    ComponentCall,
+    PipelineError,
+    parse_pipeline_text,
+    run_pipeline,
+)
+from repro.core.harness import BenchmarkSpec, Harness
+from repro.core.protocol import DataEntry, new_report
+from repro.core.store import ResultStore
+
+YML = """\
+include:
+  - component: execution@v3
+    inputs:
+      prefix: "t.pipe"
+      arch: "a0"
+      usecase: "train_4k"
+      machine: "sysA"
+      record: true
+  - component: feature-injection@v3
+    inputs:
+      prefix: "t.pipe"
+      arch: "a0"
+      usecase: "train_4k"
+      machine: "sysA"
+      in_command: "export UCX_RNDV_THRESH=65536"
+  - component: time-series@v3
+    inputs:
+      prefix: "evaluation.t"
+      source_prefix: "t.pipe"
+      data_labels: [step_time_s]
+"""
+
+
+class StubHarness(Harness):
+    name = "stub"
+
+    def run(self, spec: BenchmarkSpec, injections=None):
+        r = new_report(system=spec.system, variant=spec.effective_variant(),
+                       usecase=spec.shape, pipeline_id="p")
+        m = {"step_time_s": 1.0}
+        if injections and injections.env:
+            m["injected_env"] = 1.0
+        r.data.append(DataEntry(success=True, runtime=0.1, metrics=m))
+        return r
+
+
+def test_parse_yaml_subset():
+    calls = parse_pipeline_text(YML)
+    assert [c.name for c in calls] == ["execution", "feature-injection", "time-series"]
+    assert calls[0].inputs["prefix"] == "t.pipe"
+    assert calls[0].inputs["record"] is True
+    assert calls[2].inputs["data_labels"] == ["step_time_s"]
+
+
+def test_parse_json_equivalent():
+    doc = {"include": [{"component": "execution@v3",
+                        "inputs": {"prefix": "x", "arch": "a"}}]}
+    calls = parse_pipeline_text(json.dumps(doc))
+    assert calls[0].name == "execution" and calls[0].version == 3
+
+
+def test_rejects_unknown_component_and_version():
+    with pytest.raises(PipelineError):
+        parse_pipeline_text("include:\n  - component: nonsense@v3\n")
+    with pytest.raises(PipelineError):
+        parse_pipeline_text("include:\n  - component: execution@v9\n")
+    with pytest.raises(PipelineError):
+        parse_pipeline_text("# nothing\n")
+
+
+def test_run_pipeline_end_to_end(tmp_path):
+    store = ResultStore(tmp_path)
+    results = run_pipeline(parse_pipeline_text(YML), store=store, harness=StubHarness())
+    assert results[0]["component"] == "execution" and not results[0]["error"]
+    # Env from in_command reached the harness via Injections.
+    reports = store.query("t.pipe")
+    assert any("injected_env" in d.metrics for r in reports for d in r.data)
+    assert results[2]["points"]["step_time_s"] == 2
+
+
+def test_exports(tmp_path):
+    store = ResultStore(tmp_path)
+    for i in range(3):
+        r = new_report(system="s", variant="v", pipeline_id=f"p{i}")
+        r.experiment.timestamp = 1000.0 + i
+        r.data.append(DataEntry(success=True, runtime=0.5,
+                                metrics={"step_time_s": 1.0 + i}, job_id=f"j{i}"))
+        store.append("exp", r)
+    g = export.grafana_table(store, "exp", "step_time_s")
+    assert len(g["rows"]) == 3 and g["rows"][0][1] == 1.0
+    jobs = export.llview_jobs(store, "exp")
+    assert {j["jobid"] for j in jobs} == {"j0", "j1", "j2"}
+    paths = export.write_exports(store, "exp", "step_time_s", tmp_path / "out")
+    assert (tmp_path / "out").exists()
+    art = export.ascii_timeseries(
+        [(i, float(i % 5)) for i in range(40)], title="t", regressions=[30]
+    )
+    assert "!" in art and "t" in art

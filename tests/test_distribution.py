@@ -1,0 +1,168 @@
+"""Distribution layer: rule resolution, HLO cost model, dry-run integration."""
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.distributed import hlo
+from repro.distributed.sharding import STRATEGIES, spec_for
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    class devices:  # noqa: D106 — shape-only stand-in
+        shape = (4, 8)
+
+
+MESH = FakeMesh()
+
+
+# ---------------------------------------------------------------------------
+# spec_for
+# ---------------------------------------------------------------------------
+
+def test_spec_for_basic():
+    spec = spec_for((128, 64), ("vocab", "embed"), {"vocab": "model"}, MESH)
+    assert tuple(spec) == ("model",)
+
+
+def test_spec_for_divisibility_fallback():
+    fb = []
+    spec = spec_for((10, 64), ("q_heads", None), {"q_heads": "model"}, MESH, fb)
+    assert tuple(spec) == ()  # 10 % 8 != 0 -> replicated
+    assert fb
+
+
+def test_spec_for_prefix_fallback():
+    # 12 % (4*8) != 0 but 12 % 4 == 0 -> falls back to the 'data' prefix.
+    spec = spec_for((12,), ("batch",), {"batch": ("data", "model")}, MESH)
+    assert tuple(spec) in ((("data",),), ("data",))
+
+
+def test_spec_for_no_axis_reuse():
+    spec = spec_for(
+        (32, 64), ("vocab", "ffn"), {"vocab": "model", "ffn": "model"}, MESH
+    )
+    assert tuple(spec) == ("model",)  # second use of 'model' dropped
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    dims=st.lists(st.integers(min_value=1, max_value=512), min_size=1, max_size=4),
+    assign=st.lists(st.sampled_from([None, "data", "model", ("data", "model")]),
+                    min_size=4, max_size=4),
+)
+def test_spec_for_property(dims, assign):
+    """Property: resolved specs never reuse a mesh axis and always divide."""
+    axes = [f"ax{i}" for i in range(len(dims))]
+    rules = {a: assign[i] for i, a in enumerate(axes)}
+    spec = spec_for(tuple(dims), tuple(axes), rules, MESH)
+    sizes = {"data": 4, "model": 8}
+    used = []
+    for dim, part in zip(dims, tuple(spec)):
+        if part is None:
+            continue
+        names = (part,) if isinstance(part, str) else tuple(part)
+        total = 1
+        for n in names:
+            assert n not in used
+            used.append(n)
+            total *= sizes[n]
+        assert dim % total == 0
+
+
+def test_strategies_registered():
+    assert {"tp_dp", "fsdp_tp", "fsdp_dp"} <= set(STRATEGIES)
+
+
+# ---------------------------------------------------------------------------
+# HLO cost model (hand-written module)
+# ---------------------------------------------------------------------------
+
+HLO_TEXT = textwrap.dedent("""\
+    HloModule test
+
+    %body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = (s32[], f32[8,16]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+      %w = f32[16,16]{1,0} parameter(1)
+      %y = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,16]{1,0} all-reduce(%y), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%sum
+      ROOT %t = (s32[], f32[8,16]) tuple(%i, %ar)
+    }
+
+    %cond (p2: (s32[], f32[8,16])) -> pred[] {
+      %p2 = (s32[], f32[8,16]) parameter(0)
+      %i2 = s32[] get-tuple-element(%p2), index=0
+      %n = s32[] constant(12)
+      ROOT %lt = pred[] compare(%i2, %n), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+      %a = f32[8,16]{1,0} parameter(0)
+      %i0 = s32[] constant(0)
+      %t0 = (s32[], f32[8,16]) tuple(%i0, %a)
+      %w2 = (s32[], f32[8,16]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+      ROOT %out = f32[8,16]{1,0} get-tuple-element(%w2), index=1
+    }
+""")
+
+
+def test_hlo_cost_model_loop_aware():
+    cost = hlo.analyze(HLO_TEXT, n_devices=8)
+    # dot: 2*8*16*16 = 4096 flops, x12 trips.
+    assert cost.flops == pytest.approx(12 * 4096, rel=0.01)
+    # all-reduce: 8*16*4 bytes * 2 * (3/4) ring, x12 trips.
+    assert cost.collective_bytes == pytest.approx(12 * 512 * 2 * 0.75, rel=0.01)
+    assert cost.loops.get("body") == 12
+    assert cost.collective_count == 12
+
+
+def test_hlo_group_size_parsing():
+    assert hlo._group_size("replica_groups=[2,4]<=[8]", 8) == 4
+    assert hlo._group_size("replica_groups={{0,1,2},{3,4,5}}", 8) == 3
+    assert hlo._group_size("", 8) == 8
+
+
+def test_hlo_shape_bytes():
+    assert hlo._shape_bytes("bf16[4,8]{1,0}") == 64
+    assert hlo._shape_bytes("(f32[2,2], s32[])") == 20
+    assert hlo._shape_bytes("pred[]") == 1
+
+
+# ---------------------------------------------------------------------------
+# Dry-run integration (subprocess: needs its own device count)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_dryrun_cell_end_to_end(tmp_path):
+    """The real dry-run CLI on the cheapest cell, both meshes."""
+    env = {"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"}
+    import os
+
+    env.update({k: v for k, v in os.environ.items() if k not in env})
+    for flag in ([], ["--multi-pod"]):
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "mamba2-1.3b", "--shape", "decode_32k",
+             "--out", str(tmp_path)] + flag,
+            capture_output=True, text=True, timeout=560, env=env, cwd=ROOT,
+        )
+        assert proc.returncode == 0, proc.stderr[-1500:]
+    import json
+
+    rec1 = json.loads((tmp_path / "mamba2-1.3b.decode_32k.1pod.json").read_text())
+    rec2 = json.loads((tmp_path / "mamba2-1.3b.decode_32k.2pod.json").read_text())
+    assert rec1["status"] == "ok" and rec2["status"] == "ok"
+    assert rec1["roofline"]["hlo_flops"] > 0
+    assert rec1["roofline"]["fits"] is True
+    # The pod axis must shard: per-device HBM halves on 2 pods (batch split).
+    assert rec2["memory_analysis"]["hbm_required"] <= rec1["memory_analysis"]["hbm_required"] * 1.05

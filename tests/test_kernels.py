@@ -1,0 +1,133 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle,
+swept across shapes and dtypes (assignment requirement)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.rglru import ops as lru_ops
+from repro.kernels.rglru import ref as lru_ref
+from repro.kernels.ssd import ops as ssd_ops
+from repro.kernels.ssd import ref as ssd_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,T,D,window,bq,bk",
+    [
+        (2, 4, 2, 256, 32, None, 64, 64),    # GQA causal
+        (1, 4, 4, 128, 16, None, 32, 64),    # MHA, uneven blocks
+        (2, 4, 1, 256, 32, 50, 64, 64),      # MQA sliding window
+        (1, 8, 2, 192, 64, None, 64, 64),    # non-pow2 T (padding path)
+        (1, 2, 2, 64, 128, 17, 32, 32),      # tiny window
+    ],
+)
+def test_flash_attention_vs_ref(B, Hq, Hkv, T, D, window, bq, bk, dtype):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((B, Hq, T, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, T, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, T, D)), dtype)
+    got = fa_ops.flash_attention(
+        q, k, v, window=window, block_q=bq, block_k=bk, interpret=True
+    )
+    ref = fa_ref.attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+def test_flash_attention_mla_value_dim():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 4, 128, 48)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 4, 128, 48)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 4, 128, 32)), jnp.float32)
+    got = fa_ops.flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    ref = fa_ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(got, ref, rtol=3e-5, atol=3e-5)
+
+
+def test_flash_attention_matches_model_banded():
+    """Kernel and the model's banded jnp attention agree (shared contract)."""
+    from repro.models.layers import banded_attention
+
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((2, 4, 256, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 2, 256, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 2, 256, 32)), jnp.float32)
+    a = fa_ops.flash_attention(q, k, v, window=64, interpret=True, block_q=64, block_k=64)
+    b = banded_attention(q, k, v, window=64, chunk_q=64, chunk_k=64)
+    np.testing.assert_allclose(a, b, rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,T,H,P,G,N,chunk",
+    [
+        (2, 64, 4, 16, 2, 16, 16),
+        (1, 96, 2, 32, 1, 8, 32),    # padding path (96 % 32 == 0, try 48)
+        (1, 80, 4, 16, 4, 16, 32),   # T not multiple of chunk
+    ],
+)
+def test_ssd_kernel_vs_ref(B, T, H, P, G, N, chunk, dtype):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((B, T, H, P)), dtype)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (B, T, H)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, T, G, N)), dtype)
+    Cm = jnp.asarray(rng.standard_normal((B, T, G, N)), dtype)
+    got = ssd_ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    ref = ssd_ref.ssd_scan_ref(x, dt, A, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,T,W,chunk,bw",
+    [
+        (2, 64, 32, 16, 32),
+        (1, 100, 48, 32, 32),  # both dims padded
+        (3, 32, 128, 32, 64),
+    ],
+)
+def test_rglru_kernel_vs_ref(B, T, W, chunk, bw, dtype):
+    rng = np.random.default_rng(4)
+    a = jnp.asarray(rng.uniform(0.7, 0.999, (B, T, W)), dtype)
+    g = jnp.asarray(rng.standard_normal((B, T, W)) * 0.1, dtype)
+    h0 = jnp.asarray(rng.standard_normal((B, W)) * 0.1, dtype)
+    got = lru_ops.rglru_scan(a, g, h0, chunk=chunk, block_w=bw, interpret=True)
+    ref = lru_ref.rglru_ref(a, g, h0[:, None, :])
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+def test_rglru_zero_init_matches_model_scan():
+    """Kernel with h0=0 equals the model's associative scan formulation."""
+    rng = np.random.default_rng(5)
+    B, T, W = 2, 48, 64
+    a = jnp.asarray(rng.uniform(0.8, 0.99, (B, T, W)), jnp.float32)
+    g = jnp.asarray(rng.standard_normal((B, T, W)) * 0.1, jnp.float32)
+    got = lru_ops.rglru_scan(a, g, None, chunk=16, block_w=64, interpret=True)
+    ref = lru_ref.rglru_ref(a, g, jnp.zeros((B, 1, W)))
+    np.testing.assert_allclose(got, ref, rtol=3e-5, atol=3e-5)

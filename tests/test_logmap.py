@@ -1,0 +1,45 @@
+"""The paper's §II-A logmap example as an onboarded benchmark."""
+
+from repro.core.harness import BenchmarkSpec, Injections
+from repro.core.logmap import VARIANTS, LogmapHarness, run_logmap
+from repro.core.orchestrator import ExecutionOrchestrator, FeatureInjectionOrchestrator
+from repro.core.readiness import Readiness, classify, verify_reproduction
+from repro.core.store import ResultStore
+
+
+def _spec(variant="large-intensity"):
+    return BenchmarkSpec(arch="logmap", shape="train_4k", system="cpu-smoke",
+                         variant=variant)
+
+
+def test_logmap_deterministic_and_reproducible():
+    h = LogmapHarness()
+    r1 = h.run(_spec())
+    r2 = h.run(_spec())
+    level, gaps = classify(r1)
+    assert level == Readiness.REPRODUCIBLE, gaps
+    assert verify_reproduction(r1, r2)
+
+
+def test_logmap_variants_scale_work():
+    base = run_logmap(**VARIANTS["small"])
+    big_i = run_logmap(**VARIANTS["large-intensity"])
+    big_w = run_logmap(**VARIANTS["large-workload"])
+    assert big_i["iterations"] == 3 * base["iterations"]
+    assert big_w["elements"] == 100 * base["elements"]
+
+
+def test_logmap_through_orchestrators(tmp_path):
+    """The paper's §II-C flow: execution + parameter injection for logmap."""
+    store = ResultStore(tmp_path)
+    ex = ExecutionOrchestrator(
+        inputs={"prefix": "jedi.strong.tiny", "record": True},
+        harness=LogmapHarness(), store=store,
+    )
+    res = ex.run_cell(_spec("large-intensity"))
+    assert res.readiness == Readiness.REPRODUCIBLE
+    fi = FeatureInjectionOrchestrator(execution=ex, inputs={"prefix": "jedi.strong.tiny"})
+    sweep = fi.sweep(_spec("small"), override_knob="intensity", values=[0.5, 1.0, 2.0])
+    iters = [r.report.data[0].metrics["iterations"] for r in sweep]
+    assert iters == sorted(iters) and iters[2] == 4 * iters[0]
+    assert len(store.query("jedi.strong.tiny")) == 4

@@ -1,0 +1,142 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.core import analysis, energy
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.hardware import TPU_V5E
+from repro.models import params as P
+from repro.train import optimizer as O
+from repro import configs
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: save/restore is the identity for arbitrary trees & dtypes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    shape=st.lists(st.integers(min_value=1, max_value=8), min_size=1, max_size=3),
+    dtype=st.sampled_from(["float32", "bfloat16", "int32", "int8"]),
+    seed=st.integers(min_value=0, max_value=99),
+)
+def test_checkpoint_identity_property(tmp_path_factory, shape, dtype, seed):
+    tmp = tmp_path_factory.mktemp("ckpt")
+    rng = np.random.default_rng(seed)
+    arr = jnp.asarray(rng.standard_normal(tuple(shape)) * 100, dtype=dtype)
+    mgr = CheckpointManager(tmp)
+    mgr.save(1, {"x": {"y": arr}})
+    out = mgr.restore(1)["x"]["y"]
+    assert out.dtype == arr.dtype
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(arr))
+
+
+# ---------------------------------------------------------------------------
+# optimizer: q8 moment encode/decode error bound holds for any scale
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    scale=st.floats(min_value=1e-8, max_value=1e4),
+    n=st.integers(min_value=1, max_value=600),
+    seed=st.integers(min_value=0, max_value=20),
+)
+def test_q8_error_bound_property(scale, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((3, n)) * scale, jnp.float32)
+    dec = O.q8_decode(O.q8_encode(x), x.shape)
+    # Block-wise bound: error <= blockmax/127 (+ float slack).
+    xb = np.asarray(x)
+    err = np.abs(np.asarray(dec) - xb)
+    for i in range(3):
+        for b0 in range(0, n, O.Q8_BLOCK):
+            blk = xb[i, b0 : b0 + O.Q8_BLOCK]
+            bound = max(np.abs(blk).max(), 1e-12) / 127.0 * 1.02 + 1e-12
+            assert err[i, b0 : b0 + O.Q8_BLOCK].max() <= bound
+
+
+# ---------------------------------------------------------------------------
+# data pipeline: disjointness and determinism across host/step/seed space
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=50),
+    step=st.integers(min_value=0, max_value=50),
+)
+def test_data_pure_function_property(seed, step):
+    cfg = dataclasses.replace(
+        configs.get_smoke("glm4-9b"), vocab_size=64, d_model=32
+    )
+    d1 = SyntheticLM(cfg, DataConfig(seq_len=32, global_batch=2, seed=seed))
+    d2 = SyntheticLM(cfg, DataConfig(seq_len=32, global_batch=2, seed=seed))
+    assert jnp.array_equal(d1.batch(step)["tokens"], d2.batch(step)["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# analysis: regression detector never fires on constant series, always fires
+# on a large sustained step
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    level=st.floats(min_value=0.1, max_value=1e6),
+    n=st.integers(min_value=12, max_value=60),
+)
+def test_no_regression_on_constant_series(level, n):
+    series = [(float(i), level) for i in range(n)]
+    assert analysis.detect_regressions(series) == []
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    level=st.floats(min_value=1.0, max_value=1e3),
+    jump=st.floats(min_value=1.5, max_value=5.0),
+    at=st.integers(min_value=10, max_value=25),
+)
+def test_regression_always_detected_on_step(level, jump, at):
+    rng = np.random.default_rng(0)
+    vals = [level * (1 + rng.normal(0, 1e-4)) for _ in range(at)]
+    vals += [level * jump * (1 + rng.normal(0, 1e-4)) for _ in range(10)]
+    series = [(float(i), v) for i, v in enumerate(vals)]
+    regs = analysis.detect_regressions(series)
+    assert regs and regs[0].index == at
+
+
+# ---------------------------------------------------------------------------
+# energy: monotonicity invariants of the power model
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    uc=st.floats(min_value=0, max_value=1),
+    um=st.floats(min_value=0, max_value=1),
+)
+def test_power_model_bounds(uc, um):
+    p = energy.power_model(TPU_V5E, uc, um)
+    assert TPU_V5E.power_idle_w <= p <= (
+        TPU_V5E.power_idle_w + TPU_V5E.power_peak_compute_w + TPU_V5E.power_peak_hbm_w
+    )
+
+
+# ---------------------------------------------------------------------------
+# params: spec/init agreement for every architecture
+# ---------------------------------------------------------------------------
+
+def test_init_matches_specs_all_archs():
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_smoke(arch)
+        specs = dict(P.iter_specs(P.param_specs(cfg)))
+        tree = P.init_params(cfg, jax.random.key(0))
+        flat = P.flatten(tree)
+        assert set(flat) == set(specs), arch
+        for k, v in flat.items():
+            assert tuple(v.shape) == specs[k].shape, (arch, k)
+            assert str(v.dtype) == specs[k].dtype, (arch, k)

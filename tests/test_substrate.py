@@ -1,0 +1,231 @@
+"""Substrate tests: data pipeline determinism, checkpoint/restart fault
+tolerance, trainer convergence + resume, serving engine, ExecHarness
+readiness integration."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.core.harness import BenchmarkSpec, ExecHarness, Injections
+from repro.core.readiness import Readiness, classify, verify_reproduction
+from repro.core.energy import energy_launcher
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.hardware import TPU_V5E
+from repro.models import params as P
+from repro.serve.engine import Engine, Request
+from repro.train import optimizer as O
+from repro.train.trainer import TrainConfig, detect_stragglers, train
+
+
+def small_cfg():
+    return dataclasses.replace(
+        configs.get_smoke("glm4-9b"), d_model=64, n_layers=2, d_ff=128,
+        vocab_size=128, dtype="float32",
+    )
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_step_keyed():
+    cfg = small_cfg()
+    d = SyntheticLM(cfg, DataConfig(seq_len=64, global_batch=4, seed=7))
+    b1 = d.batch(3)
+    b2 = d.batch(3)
+    assert jnp.array_equal(b1["tokens"], b2["tokens"])  # restart-stable
+    b3 = d.batch(4)
+    assert not jnp.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_data_host_sharding_disjoint():
+    cfg = small_cfg()
+    a = SyntheticLM(cfg, DataConfig(seq_len=32, global_batch=8, n_hosts=2, host_id=0))
+    b = SyntheticLM(cfg, DataConfig(seq_len=32, global_batch=8, n_hosts=2, host_id=1))
+    assert a.batch(0)["tokens"].shape[0] == 4
+    assert not jnp.array_equal(a.batch(0)["tokens"], b.batch(0)["tokens"])
+
+
+def test_data_targets_shifted():
+    cfg = small_cfg()
+    d = SyntheticLM(cfg, DataConfig(seq_len=64, global_batch=2))
+    b = d.batch(0)
+    toks, tgts = np.asarray(b["tokens"]), np.asarray(b["targets"])
+    mask = tgts[:, :-1] >= 0
+    np.testing.assert_array_equal(
+        tgts[:, :-1][mask], toks[:, 1:][mask]
+    )
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    for s in (10, 20, 30):
+        mgr.save(s, tree)
+    assert mgr.steps() == [20, 30]  # keep=2 GC'd step 10
+    out = mgr.restore(30)
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    assert out["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"w": jnp.ones((8, 8))})
+    # Corrupt the array file.
+    f = next((tmp_path / "step_00000001").glob("w.npy"))
+    raw = bytearray(f.read_bytes())
+    raw[-1] ^= 0xFF
+    f.write_bytes(bytes(raw))
+    with pytest.raises(IOError):
+        mgr.restore(1)
+
+
+def test_checkpoint_async_save(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(5, {"w": jnp.zeros((16,))}, block=False)
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+def test_checkpoint_partial_write_invisible(tmp_path):
+    """A save without manifest (crash mid-write) must not be picked up."""
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"w": jnp.ones((4,))})
+    d = tmp_path / "step_00000002"
+    d.mkdir()
+    np.save(d / "w.npy", np.ones((4,)))  # no manifest.json
+    assert mgr.latest_step() == 1
+
+
+# ---------------------------------------------------------------------------
+# trainer: convergence, restart equivalence, straggler telemetry
+# ---------------------------------------------------------------------------
+
+def _tc(steps, tmp=None, ckpt_every=50):
+    return TrainConfig(
+        steps=steps,
+        ckpt_every=ckpt_every,
+        data=DataConfig(seq_len=64, global_batch=4, seed=1),
+        opt=O.OptConfig(lr=5e-3, warmup_steps=5, total_steps=steps, weight_decay=0.0),
+        remat="none",
+    )
+
+
+def test_trainer_loss_decreases():
+    cfg = small_cfg()
+    res = train(cfg, _tc(30))
+    early = float(np.mean(res.losses[:5]))
+    late = float(np.mean(res.losses[-5:]))
+    assert late < early - 0.2, (early, late)
+
+
+def test_trainer_restart_bit_identical(tmp_path):
+    """Fault-tolerance: crash mid-run, resume, final params identical to an
+    uninterrupted run (the loop is a pure function of checkpoint + step)."""
+    cfg = small_cfg()
+    a = tmp_path / "a"
+    b = tmp_path / "b"
+    train(cfg, _tc(20, ckpt_every=10), ckpt=CheckpointManager(a))
+
+    # Interrupted run: same 20-step config, simulated node failure at step 12.
+    class Crash(RuntimeError):
+        pass
+
+    def crash(step, metrics):
+        if step == 12:
+            raise Crash()
+
+    mgr_b = CheckpointManager(b)
+    with pytest.raises(Crash):
+        train(cfg, _tc(20, ckpt_every=10), ckpt=mgr_b, on_step=crash)
+    res2 = train(cfg, _tc(20, ckpt_every=10), ckpt=CheckpointManager(b))
+    assert res2.restored_from == 10
+    pa = CheckpointManager(a).restore(20)["params"]
+    pb = CheckpointManager(b).restore(20)["params"]
+    for k, v in P.flatten(pa).items():
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(P.flatten(pb)[k]), err_msg=k)
+
+
+def test_straggler_detection():
+    times = [0.1] * 20
+    times[7] = 0.5
+    times[15] = 0.3
+    assert detect_stragglers(times) == [7, 15]
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+def test_engine_greedy_deterministic():
+    cfg = small_cfg()
+    params = P.init_params(cfg, jax.random.key(0))
+    eng = Engine(cfg, params, batch=4, max_len=64)
+    reqs = [
+        Request(uid=i, prompt=np.arange(1, 6 + i, dtype=np.int32), max_new_tokens=8)
+        for i in range(3)
+    ]
+    outs1 = eng.generate(reqs)
+    outs2 = Engine(cfg, params, batch=4, max_len=64).generate(reqs)
+    assert [c.tokens for c in outs1] == [c.tokens for c in outs2]
+    assert all(len(c.tokens) == 8 for c in outs1)
+
+
+def test_engine_matches_stepwise_decode():
+    """Engine greedy output == hand-rolled prefill+argmax loop."""
+    from repro.models import transformer as T
+
+    cfg = small_cfg()
+    params = P.init_params(cfg, jax.random.key(1))
+    prompt = np.asarray([3, 1, 4, 1, 5], np.int32)
+    eng = Engine(cfg, params, batch=1, max_len=32)
+    got = eng.generate([Request(uid=0, prompt=prompt, max_new_tokens=5)])[0].tokens
+
+    logits, state = T.prefill(params, cfg, {"tokens": jnp.asarray(prompt[None])}, max_len=32, remat="none")
+    toks = []
+    cur = int(jnp.argmax(logits[0, 0]))
+    toks.append(cur)
+    for t in range(4):
+        idx = jnp.asarray(len(prompt) + t, jnp.int32)
+        logits, state = T.decode_step(
+            params, cfg, state, {"tokens": jnp.full((1, 1), cur, jnp.int32)}, idx
+        )
+        cur = int(jnp.argmax(logits[0, 0]))
+        toks.append(cur)
+    assert got == toks
+
+
+# ---------------------------------------------------------------------------
+# ExecHarness end-to-end: readiness ladder on a real (smoke) workload
+# ---------------------------------------------------------------------------
+
+def test_exec_harness_reaches_reproducible():
+    h = ExecHarness(steps=1, batch=2, seq=8)
+    spec = BenchmarkSpec(arch="glm4-9b", shape="train_4k", system="cpu-smoke")
+    rep = h.run(spec)
+    level, gaps = classify(rep)
+    assert level == Readiness.REPRODUCIBLE, gaps
+    # Re-run: artifact digests match -> verified reproduction.
+    rep2 = h.run(spec)
+    assert verify_reproduction(rep, rep2)
+
+
+def test_exec_harness_energy_injection():
+    """Launcher injection adds protocol-compliant energy metrics without
+    touching the benchmark (paper §VI-B)."""
+    h = ExecHarness(steps=1, batch=2, seq=8)
+    spec = BenchmarkSpec(arch="mamba2-1.3b", shape="decode_32k", system="cpu-smoke")
+    inj = Injections(launcher=energy_launcher(TPU_V5E, n_chips=1))
+    rep = h.run(spec, inj)
+    m = rep.data[0].metrics
+    assert m["energy_to_solution_j"] > 0
+    assert rep.data[0].success
