@@ -20,6 +20,7 @@ def main() -> None:
         bench_feature_injection,
         bench_machine_comparison,
         bench_roofline,
+        bench_scheduler,
         bench_timeseries,
         bench_weak_scaling,
     )
@@ -31,6 +32,7 @@ def main() -> None:
         ("fig7_weak_scaling", bench_weak_scaling.run),
         ("fig8_9_energy", bench_energy.run),
         ("roofline_table", bench_roofline.run),
+        ("scheduler_and_store", bench_scheduler.run),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -2,7 +2,8 @@
 
 1. assemble a benchmark collection (3 architectures x 2 shapes),
 2. run it through the Execution Orchestrator (ExecHarness, smoke scale)
-   with per-cell failure isolation and immediate persistence,
+   on a 2-worker scheduler pool, with per-cell failure isolation and
+   immediate persistence,
 3. classify every report on the incremental readiness ladder,
 4. feature-inject an energy launcher (jpwr analogue) without touching any
    benchmark definition,
@@ -40,9 +41,11 @@ def main():
         BenchmarkSpec(arch="qwen3-moe-235b-a22b", shape="prefill_32k", system="cpu-smoke"),
     ]
 
-    # 2. execution orchestrator (component: execution@v3).
+    # 2. execution orchestrator (component: execution@v3) on a worker pool —
+    #    cells run concurrently, each report persists the moment it lands.
     ex = ExecutionOrchestrator(
-        inputs={"prefix": "jureap.mini", "machine": "cpu-smoke", "record": True},
+        inputs={"prefix": "jureap.mini", "machine": "cpu-smoke", "record": True,
+                "parallelism": 2},
         harness=harness,
         store=store,
     )

@@ -23,6 +23,7 @@ schema-evolution discipline.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import re
 from pathlib import Path
@@ -34,6 +35,7 @@ from repro.core.orchestrator import (
     FeatureInjectionOrchestrator,
     PostProcessingOrchestrator,
 )
+from repro.core.scheduler import CampaignScheduler, Task
 from repro.core.store import ResultStore
 
 SUPPORTED = {
@@ -62,16 +64,21 @@ class ComponentCall:
 # ---------------------------------------------------------------------------
 
 def _parse_scalar(s: str) -> Any:
-    s = s.strip().strip('"').strip("'")
-    if s.lower() in ("true", "false"):
-        return s.lower() == "true"
-    if re.fullmatch(r"-?\d+", s):
-        return int(s)
-    if re.fullmatch(r"-?\d+\.\d*", s):
-        return float(s)
+    s = s.strip()
+    # Quoting forces string: '"true"' / '"123"' stay strings, so coercion
+    # must be decided BEFORE the quotes come off.
+    if len(s) >= 2 and s[0] == s[-1] and s[0] in "\"'":
+        return s[1:-1]
     if s.startswith("[") and s.endswith("]"):
         inner = s[1:-1].strip()
         return [_parse_scalar(x) for x in inner.split(",")] if inner else []
+    if s.lower() in ("true", "false"):
+        return s.lower() == "true"
+    if re.fullmatch(r"[-+]?\d+", s):
+        return int(s)
+    # Floats: leading-dot (.5), trailing-dot (1.), and exponent (1e-3) forms.
+    if re.fullmatch(r"[-+]?(\d+\.\d*|\.\d+|\d+)([eE][+-]?\d+)?", s):
+        return float(s)
     return s
 
 
@@ -137,8 +144,124 @@ def _from_doc(doc: Dict[str, Any]) -> List[ComponentCall]:
 
 
 # ---------------------------------------------------------------------------
-# Dispatch
+# Dispatch — components form a DAG (post-processing reads the prefixes that
+# execution components write) and run through the campaign scheduler.
 # ---------------------------------------------------------------------------
+
+_PRODUCERS = ("execution", "feature-injection")
+
+
+def _consumed_prefixes(call: ComponentCall) -> List[str]:
+    """Store prefixes a component reads — its upstream edges."""
+    inp = call.inputs
+    if call.name in ("time-series", "scalability"):
+        return [inp["source_prefix"]] if "source_prefix" in inp else []
+    if call.name == "machine-comparison":
+        out = []
+        for sel in inp.get("selector", []):
+            out.append(sel if isinstance(sel, str) else sel.get("prefix"))
+        return [p for p in out if p]
+    return []
+
+
+def component_dag(calls: List[ComponentCall]) -> List[List[int]]:
+    """Dependency edges: ``deps[i]`` = indices call *i* must wait for.
+
+    A post-processing component depends on every earlier component that
+    produces a prefix it consumes; producers are mutually independent, so a
+    collection's executions fan out across the worker pool while each
+    analysis still sees all of its upstream reports.
+    """
+    produced: Dict[str, List[int]] = {}
+    deps: List[List[int]] = []
+    for i, call in enumerate(calls):
+        mine = sorted({j for p in _consumed_prefixes(call) for j in produced.get(p, [])})
+        deps.append(mine)
+        if call.name in _PRODUCERS:
+            # Mirror ExecutionOrchestrator.prefix: no explicit input means
+            # the cell records under "default" — still a produced prefix.
+            produced.setdefault(call.inputs.get("prefix") or "default", []).append(i)
+    return deps
+
+
+def _run_component(
+    call: ComponentCall,
+    *,
+    store: ResultStore,
+    harness: Harness,
+    harness_factory: Optional[Callable[[Dict[str, Any]], Harness]],
+) -> Dict[str, Any]:
+    inp = call.inputs
+    if call.name == "execution":
+        h = harness_factory(inp) if harness_factory else harness
+        ex = ExecutionOrchestrator(inputs=inp, harness=h, store=store)
+        spec = BenchmarkSpec(
+            arch=inp["arch"],
+            shape=inp.get("usecase", inp.get("shape", "train_4k")),
+            system=inp.get("machine", "cpu-smoke"),
+            variant=inp.get("variant", ""),
+        )
+        res = ex.run_cell(spec)
+        return {
+            "component": "execution",
+            "cell": spec.cell,
+            "readiness": int(res.readiness),
+            "error": res.error,
+        }
+    if call.name == "feature-injection":
+        h = harness_factory(inp) if harness_factory else harness
+        ex = ExecutionOrchestrator(inputs=inp, harness=h, store=store)
+        fi = FeatureInjectionOrchestrator(execution=ex, inputs=inp)
+        spec = BenchmarkSpec(
+            arch=inp["arch"],
+            shape=inp.get("usecase", "train_4k"),
+            system=inp.get("machine", "cpu-smoke"),
+        )
+        inj = Injections()
+        if "in_command" in inp:  # paper: env-var injection string
+            for assign in str(inp["in_command"]).replace("export ", "").split(";"):
+                if "=" in assign:
+                    k, v = assign.split("=", 1)
+                    inj.env[k.strip()] = v.strip()
+        for k in ("remat", "microbatches", "strategy", "opt_state_dtype"):
+            if k in inp:
+                inj.overrides[k] = inp[k]
+        res = fi.run(spec, inj)
+        return {
+            "component": "feature-injection",
+            "cell": spec.cell,
+            "readiness": int(res.readiness),
+            "error": res.error,
+        }
+    if call.name == "time-series":
+        pp = PostProcessingOrchestrator(store=store, inputs=inp)
+        out = pp.time_series(
+            source_prefix=inp["source_prefix"],
+            data_labels=list(inp.get("data_labels", ["step_time_s"])),
+            pipeline=list(inp.get("pipeline", [])),
+        )
+        return {
+            "component": "time-series",
+            "points": {k: len(v) for k, v in out["series"].items()},
+            "regressions": {k: len(v) for k, v in out["regressions"].items()},
+        }
+    if call.name == "machine-comparison":
+        pp = PostProcessingOrchestrator(store=store, inputs=inp)
+        out = pp.machine_comparison(
+            selectors=[{"prefix": p} for p in inp.get("selector", [])],
+            metric=inp.get("metric", "step_time_s"),
+        )
+        return {"component": "machine-comparison", "table": out["table"]}
+    if call.name == "scalability":
+        pp = PostProcessingOrchestrator(store=store, inputs=inp)
+        out = pp.scalability(
+            source_prefix=inp["source_prefix"],
+            metric=inp.get("metric", "step_time_s"),
+            mode=inp.get("mode", "strong"),
+        )
+        return {"component": "scalability", "table": out["table"]}
+    raise PipelineError(call.name)  # pragma: no cover — guarded by _split_component
+
 
 def run_pipeline(
     calls: List[ComponentCall],
@@ -146,82 +269,42 @@ def run_pipeline(
     store: ResultStore,
     harness: Optional[Harness] = None,
     harness_factory: Optional[Callable[[Dict[str, Any]], Harness]] = None,
+    parallelism: Optional[int] = None,
 ) -> List[Dict[str, Any]]:
-    """Execute component calls in order; returns one summary per call."""
+    """Dispatch the component DAG through the scheduler; returns one summary
+    per call, in call order.
+
+    ``parallelism`` bounds the worker pool.  When omitted, the largest
+    ``parallelism:`` input declared by any component applies (default 1 —
+    serial, the seed behavior).  A component that raises is isolated into a
+    ``{"component", "error"}`` summary; downstream components still run over
+    whatever results reached the store.
+    """
     harness = harness or ExecHarness(steps=2, batch=2, seq=16)
+    if parallelism is None:
+        parallelism = max(
+            [int(c.inputs.get("parallelism", 1)) for c in calls], default=1
+        )
+    deps = component_dag(calls)
+    tasks = [
+        Task(
+            key=f"{i:04d}.{call.name}",
+            fn=functools.partial(
+                _run_component, call,
+                store=store, harness=harness, harness_factory=harness_factory,
+            ),
+            deps=frozenset(f"{j:04d}.{calls[j].name}" for j in deps[i]),
+        )
+        for i, call in enumerate(calls)
+    ]
+    done = CampaignScheduler(parallelism=parallelism, name="pipeline").run_tasks(tasks)
     results = []
-    for call in calls:
-        inp = call.inputs
-        if call.name == "execution":
-            h = harness_factory(inp) if harness_factory else harness
-            ex = ExecutionOrchestrator(inputs=inp, harness=h, store=store)
-            spec = BenchmarkSpec(
-                arch=inp["arch"],
-                shape=inp.get("usecase", inp.get("shape", "train_4k")),
-                system=inp.get("machine", "cpu-smoke"),
-                variant=inp.get("variant", ""),
-            )
-            res = ex.run_cell(spec)
-            results.append({
-                "component": "execution",
-                "cell": spec.cell,
-                "readiness": int(res.readiness),
-                "error": res.error,
-            })
-        elif call.name == "feature-injection":
-            h = harness_factory(inp) if harness_factory else harness
-            ex = ExecutionOrchestrator(inputs=inp, harness=h, store=store)
-            fi = FeatureInjectionOrchestrator(execution=ex, inputs=inp)
-            spec = BenchmarkSpec(
-                arch=inp["arch"],
-                shape=inp.get("usecase", "train_4k"),
-                system=inp.get("machine", "cpu-smoke"),
-            )
-            inj = Injections()
-            if "in_command" in inp:  # paper: env-var injection string
-                for assign in str(inp["in_command"]).replace("export ", "").split(";"):
-                    if "=" in assign:
-                        k, v = assign.split("=", 1)
-                        inj.env[k.strip()] = v.strip()
-            for k in ("remat", "microbatches", "strategy", "opt_state_dtype"):
-                if k in inp:
-                    inj.overrides[k] = inp[k]
-            res = fi.run(spec, inj)
-            results.append({
-                "component": "feature-injection",
-                "cell": spec.cell,
-                "readiness": int(res.readiness),
-                "error": res.error,
-            })
-        elif call.name == "time-series":
-            pp = PostProcessingOrchestrator(store=store, inputs=inp)
-            out = pp.time_series(
-                source_prefix=inp["source_prefix"],
-                data_labels=list(inp.get("data_labels", ["step_time_s"])),
-                pipeline=list(inp.get("pipeline", [])),
-            )
-            results.append({
-                "component": "time-series",
-                "points": {k: len(v) for k, v in out["series"].items()},
-                "regressions": {k: len(v) for k, v in out["regressions"].items()},
-            })
-        elif call.name == "machine-comparison":
-            pp = PostProcessingOrchestrator(store=store, inputs=inp)
-            out = pp.machine_comparison(
-                selectors=[{"prefix": p} for p in inp.get("selector", [])],
-                metric=inp.get("metric", "step_time_s"),
-            )
-            results.append({"component": "machine-comparison", "table": out["table"]})
-        elif call.name == "scalability":
-            pp = PostProcessingOrchestrator(store=store, inputs=inp)
-            out = pp.scalability(
-                source_prefix=inp["source_prefix"],
-                metric=inp.get("metric", "step_time_s"),
-                mode=inp.get("mode", "strong"),
-            )
-            results.append({"component": "scalability", "table": out["table"]})
-        else:  # pragma: no cover — guarded by _split_component
-            raise PipelineError(call.name)
+    for i, call in enumerate(calls):
+        tr = done[f"{i:04d}.{call.name}"]
+        if tr.error is not None:
+            results.append({"component": call.name, "error": tr.error})
+        else:
+            results.append(tr.value)
     return results
 
 
@@ -231,9 +314,16 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("pipeline", help="pipeline file (.yml subset or .json)")
     ap.add_argument("--store", default="exacb_data")
+    ap.add_argument("--store-backend", default="dir", choices=("dir", "jsonl"))
+    ap.add_argument("--parallelism", type=int, default=None,
+                    help="worker pool bound (default: max parallelism input)")
     args = ap.parse_args(argv)
     calls = parse_pipeline_text(Path(args.pipeline).read_text())
-    results = run_pipeline(calls, store=ResultStore(args.store))
+    results = run_pipeline(
+        calls,
+        store=ResultStore(args.store, backend=args.store_backend),
+        parallelism=args.parallelism,
+    )
     print(json.dumps(results, indent=2, default=str))
     return 0 if all(not r.get("error") for r in results) else 1
 

@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import os
+import threading
 import time
 from contextlib import contextmanager
 from typing import Any, Callable, Dict, Optional
@@ -66,20 +67,77 @@ class Injections:
         }
 
 
+# os.environ is process-global, so concurrent scheduler workers cannot each
+# get a private view.  Two mechanisms make injection safe under the pool:
+#
+# 1. A per-KEY reentrant lock held for the frame's whole lifetime: workers
+#    injecting *distinct* keys (a multi-knob campaign) run fully in
+#    parallel, while two cells injecting the SAME key (an env-knob sweep)
+#    serialize against each other — each cell really executes under its own
+#    value instead of the last entrant's.  Keys are acquired in sorted order
+#    to prevent deadlock; RLocks keep same-thread nesting legal.
+# 2. A process-wide registry of active frames guarded by ``_ENV_LOCK`` so
+#    exits restore the youngest surviving frame's value (same-thread
+#    nesting) or the pre-injection original.
+_ENV_LOCK = threading.RLock()
+_ENV_FRAMES: List[Dict[str, str]] = []
+_ENV_SAVED: Dict[str, Optional[str]] = {}
+_ENV_KEY_LOCKS: Dict[str, threading.RLock] = {}
+
+
+def _key_locks(keys) -> List[threading.RLock]:
+    with _ENV_LOCK:
+        return [_ENV_KEY_LOCKS.setdefault(k, threading.RLock()) for k in sorted(keys)]
+
+
+def _restore_env_key(k: str) -> None:
+    """Re-apply the youngest surviving frame's value for ``k``, or the saved
+    pre-injection original.  Caller holds ``_ENV_LOCK``."""
+    survivor = next((f for f in reversed(_ENV_FRAMES) if k in f), None)
+    if survivor is not None:
+        os.environ[k] = survivor[k]
+        return
+    original = _ENV_SAVED.pop(k)
+    if original is None:
+        os.environ.pop(k, None)
+    else:
+        os.environ[k] = original
+
+
 @contextmanager
 def injected_env(env: Dict[str, str]):
-    old: Dict[str, Optional[str]] = {}
+    # Coerce up front: env values are strings by contract, but YAML-parsed
+    # inputs can arrive as ints/bools and os.environ would reject them
+    # halfway through the apply loop.
+    frame = {str(k): str(v) for k, v in env.items()}
+    key_locks = _key_locks(frame)
+    for lk in key_locks:
+        lk.acquire()
     try:
-        for k, v in env.items():
-            old[k] = os.environ.get(k)
-            os.environ[k] = v
-        yield
+        with _ENV_LOCK:
+            applied = []
+            try:
+                for k, v in frame.items():
+                    if k not in _ENV_SAVED:
+                        _ENV_SAVED[k] = os.environ.get(k)
+                    os.environ[k] = v
+                    applied.append(k)
+                _ENV_FRAMES.append(frame)
+            except BaseException:
+                # Partial application must not leak: roll back what landed.
+                for k in applied:
+                    _restore_env_key(k)
+                raise
+        try:
+            yield
+        finally:
+            with _ENV_LOCK:
+                _ENV_FRAMES.remove(frame)
+                for k in frame:
+                    _restore_env_key(k)
     finally:
-        for k, v in old.items():
-            if v is None:
-                os.environ.pop(k, None)
-            else:
-                os.environ[k] = v
+        for lk in reversed(key_locks):
+            lk.release()
 
 
 class Harness:

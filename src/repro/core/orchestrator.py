@@ -26,6 +26,7 @@ from repro.core import analysis
 from repro.core.harness import BenchmarkSpec, Harness, Injections
 from repro.core.protocol import DataEntry, Report, new_report
 from repro.core.readiness import Readiness, classify
+from repro.core.scheduler import CampaignScheduler, TaskResult
 from repro.core.store import ResultStore
 
 
@@ -36,6 +37,19 @@ class CellResult:
     readiness: Readiness
     error: Optional[str] = None
     attempts: int = 1
+
+
+def _unwrap_cells(specs: Sequence[BenchmarkSpec], results: Sequence[TaskResult]) -> List[CellResult]:
+    """Scheduler results back to CellResults.  ``run_cell`` already isolates
+    harness failures, so a task-level error only appears if the orchestrator
+    machinery itself crashed — still reported, never raised."""
+    out: List[CellResult] = []
+    for spec, tr in zip(specs, results):
+        if tr.error is not None:
+            out.append(CellResult(spec, None, Readiness.FAILED, error=tr.error))
+        else:
+            out.append(tr.value)
+    return out
 
 
 class ExecutionOrchestrator:
@@ -91,14 +105,33 @@ class ExecutionOrchestrator:
                 last_err = f"{type(e).__name__}: {e}\n{traceback.format_exc(limit=3)}"
         return CellResult(spec, None, Readiness.FAILED, error=last_err, attempts=self.max_retries)
 
+    def _parallelism(self, override: Optional[int]) -> int:
+        if override is not None:
+            return max(1, int(override))
+        return max(1, int(self.inputs.get("parallelism", 1)))
+
     def run_collection(
         self,
         specs: Sequence[BenchmarkSpec],
         injections: Optional[Injections] = None,
+        *,
+        parallelism: Optional[int] = None,
     ) -> List[CellResult]:
         """Run every cell; failures are isolated per cell (JUREAP mode —
-        heterogeneous maturity levels coexist in one collection)."""
-        return [self.run_cell(s, injections) for s in specs]
+        heterogeneous maturity levels coexist in one collection).
+
+        ``parallelism`` (argument, or the ``parallelism`` input) > 1 runs
+        cells through a bounded scheduler pool; each cell still persists its
+        report the moment it finishes, so a crash mid-collection loses
+        nothing already executed.
+        """
+        par = self._parallelism(parallelism)
+        specs = list(specs)
+        if par <= 1 or len(specs) <= 1:
+            return [self.run_cell(s, injections) for s in specs]
+        sched = CampaignScheduler(parallelism=par, name=f"exec.{self.prefix}")
+        results = sched.map_items(lambda s: self.run_cell(s, injections), specs)
+        return _unwrap_cells(specs, results)
 
 
 class FeatureInjectionOrchestrator:
@@ -120,17 +153,34 @@ class FeatureInjectionOrchestrator:
         override_knob: Optional[str] = None,
         values: Sequence[Any] = (),
         launcher: Optional[Callable] = None,
+        parallelism: Optional[int] = None,
     ) -> List[CellResult]:
-        """One run per injected value (the UCX_RNDV_THRESH experiment)."""
-        results = []
+        """One run per injected value (the UCX_RNDV_THRESH experiment).
+
+        Sweep points are independent cells — with ``parallelism`` > 1 they
+        dispatch concurrently.  Override-knob points parallelize freely;
+        env-knob points injecting the SAME variable serialize against each
+        other inside ``harness.injected_env`` (per-key lock), because
+        ``os.environ`` is process-global — each cell genuinely executes
+        under its own value.
+        """
+        injections = []
         for v in values:
             inj = Injections(launcher=launcher)
             if env_knob:
                 inj.env[env_knob] = str(v)
             if override_knob:
                 inj.overrides[override_knob] = v
-            results.append(self.execution.run_cell(spec, inj))
-        return results
+            injections.append(inj)
+        if parallelism is None:
+            parallelism = int(self.inputs.get("parallelism", 1))
+        if parallelism <= 1 or len(injections) <= 1:
+            return [self.execution.run_cell(spec, inj) for inj in injections]
+        sched = CampaignScheduler(parallelism=parallelism, name="sweep")
+        results = sched.map_items(
+            lambda inj: self.execution.run_cell(spec, inj), injections
+        )
+        return _unwrap_cells([spec] * len(injections), results)
 
     def run(self, spec: BenchmarkSpec, injections: Injections) -> CellResult:
         return self.execution.run_cell(spec, injections)

@@ -5,7 +5,7 @@
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Union
 
 from repro import configs
 from repro.configs import shapes as SH
@@ -13,12 +13,22 @@ from repro.core.harness import BenchmarkSpec
 
 
 def collection(
-    system: str,
+    system: Union[str, Sequence[str]],
     *,
     archs: Optional[List[str]] = None,
     shapes: Optional[List[str]] = None,
 ) -> List[BenchmarkSpec]:
-    """All applicable benchmark cells for one system."""
+    """All applicable benchmark cells for one system.
+
+    ``system`` may also be a list of systems (or a comma-separated string) —
+    the collection then expands into a multi-system campaign: the cross
+    product of every applicable cell with every target system, ready for a
+    parallel ``run_collection`` (the JUREAP multi-machine setting).
+    """
+    if isinstance(system, str) and "," in system:
+        system = [s.strip() for s in system.split(",") if s.strip()]
+    if not isinstance(system, str):
+        return campaign(system, archs=archs, shapes=shapes)
     out: List[BenchmarkSpec] = []
     for arch in archs or configs.ARCH_IDS:
         cfg = configs.get_config(arch)
@@ -28,6 +38,20 @@ def collection(
             if not SH.applicable(cfg, shape):
                 continue
             out.append(BenchmarkSpec(arch=arch, shape=name, system=system))
+    return out
+
+
+def campaign(
+    systems: Sequence[str],
+    *,
+    archs: Optional[List[str]] = None,
+    shapes: Optional[List[str]] = None,
+) -> List[BenchmarkSpec]:
+    """Multi-system campaign: one collection per system, concatenated in
+    system order (cells stay grouped per machine for prefix bookkeeping)."""
+    out: List[BenchmarkSpec] = []
+    for system in systems:
+        out.extend(collection(system, archs=archs, shapes=shapes))
     return out
 
 

@@ -1,0 +1,158 @@
+"""Concurrent campaign scheduler — the execution core behind collection-scale
+continuous benchmarking.
+
+The paper's central claim is that exaCB scales CB to *collections* (JUREAP:
+70+ applications).  Running a collection's cells serially makes wall-clock
+linear in collection size; this module provides the bounded worker pool the
+orchestrators and the CI/CD layer dispatch through instead:
+
+* **Per-cell failure isolation is preserved** — a task body that raises is
+  captured into its ``TaskResult``; sibling tasks keep running and dependent
+  tasks still execute (post-processing analyses the *surviving* results, the
+  paper's resilience requirement).
+* **Dependency-aware ordering** — tasks declare the keys they consume;
+  a task starts as soon as (and only when) all of its dependencies have
+  finished.  Independent executions run in parallel; a post-processing
+  component waits only on the execution components whose prefixes it reads.
+* **Streaming results** — ``on_result`` fires from the coordinating thread
+  the moment each task completes (persistence itself happens inside
+  ``ExecutionOrchestrator.run_cell``, which appends to the store before the
+  collection finishes, so a later failure cannot lose earlier cells).
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import dataclasses
+import threading
+import time
+import traceback
+from collections import defaultdict, deque
+from typing import Any, Callable, Dict, FrozenSet, List, Optional, Sequence
+
+
+class SchedulerError(ValueError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """One schedulable unit: a thunk plus the task keys it depends on."""
+
+    key: str
+    fn: Callable[[], Any]
+    deps: FrozenSet[str] = frozenset()
+
+
+@dataclasses.dataclass
+class TaskResult:
+    key: str
+    value: Any = None
+    error: Optional[str] = None
+    seconds: float = 0.0
+    worker: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+
+class CampaignScheduler:
+    """Bounded worker pool with dependency-aware dispatch."""
+
+    def __init__(self, *, parallelism: int = 4, name: str = "campaign"):
+        self.parallelism = max(1, int(parallelism))
+        self.name = name
+
+    # ------------------------------------------------------------------ core
+    def run_tasks(
+        self,
+        tasks: Sequence[Task],
+        *,
+        on_result: Optional[Callable[[TaskResult], None]] = None,
+    ) -> Dict[str, TaskResult]:
+        """Run a task DAG; returns ``{key: TaskResult}`` for every task.
+
+        Raises ``SchedulerError`` on duplicate keys, unknown dependencies, or
+        dependency cycles — structural errors are the caller's bug, unlike
+        task-body failures, which are isolated into results.
+        """
+        tasks = list(tasks)
+        by_key: Dict[str, Task] = {}
+        for t in tasks:
+            if t.key in by_key:
+                raise SchedulerError(f"duplicate task key {t.key!r}")
+            by_key[t.key] = t
+        for t in tasks:
+            for d in t.deps:
+                if d not in by_key:
+                    raise SchedulerError(f"task {t.key!r} depends on unknown {d!r}")
+        indegree = {t.key: len(t.deps) for t in tasks}
+        dependents: Dict[str, List[str]] = defaultdict(list)
+        for t in tasks:
+            for d in t.deps:
+                dependents[d].append(t.key)
+
+        done: Dict[str, TaskResult] = {}
+        ready = deque(t.key for t in tasks if indegree[t.key] == 0)
+        with cf.ThreadPoolExecutor(
+            max_workers=self.parallelism, thread_name_prefix=self.name
+        ) as pool:
+            futures: Dict[cf.Future, str] = {}
+            while ready or futures:
+                while ready:
+                    key = ready.popleft()
+                    futures[pool.submit(self._run_one, by_key[key])] = key
+                finished, _ = cf.wait(futures, return_when=cf.FIRST_COMPLETED)
+                for fut in finished:
+                    key = futures.pop(fut)
+                    result = fut.result()  # _run_one never raises
+                    done[key] = result
+                    if on_result is not None:
+                        on_result(result)
+                    # A failed dependency still *completed* — dependents run
+                    # against whatever survived (failure isolation).
+                    for dep_key in dependents[key]:
+                        indegree[dep_key] -= 1
+                        if indegree[dep_key] == 0:
+                            ready.append(dep_key)
+        if len(done) != len(tasks):
+            stuck = sorted(k for k in by_key if k not in done)
+            raise SchedulerError(f"dependency cycle among tasks: {stuck}")
+        return done
+
+    @staticmethod
+    def _run_one(task: Task) -> TaskResult:
+        t0 = time.perf_counter()
+        try:
+            value = task.fn()
+            return TaskResult(
+                task.key,
+                value=value,
+                seconds=time.perf_counter() - t0,
+                worker=threading.current_thread().name,
+            )
+        except Exception as e:  # noqa: BLE001 — isolation is the point
+            return TaskResult(
+                task.key,
+                error=f"{type(e).__name__}: {e}\n{traceback.format_exc(limit=3)}",
+                seconds=time.perf_counter() - t0,
+                worker=threading.current_thread().name,
+            )
+
+    # ----------------------------------------------------------- convenience
+    def map_items(
+        self,
+        fn: Callable[[Any], Any],
+        items: Sequence[Any],
+        *,
+        on_result: Optional[Callable[[TaskResult], None]] = None,
+    ) -> List[TaskResult]:
+        """Run ``fn`` over independent items; results in input order."""
+        items = list(items)
+        tasks = [
+            Task(key=f"item-{i:05d}", fn=(lambda it=item: fn(it)))
+            for i, item in enumerate(items)
+        ]
+        done = self.run_tasks(tasks, on_result=on_result)
+        return [done[f"item-{i:05d}"] for i in range(len(items))]

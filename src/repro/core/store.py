@@ -1,54 +1,472 @@
 """Append-only result store — the ``exacb.data`` orphan-branch analogue
 (paper §IV-E / §V-A1 ``record: true``).
 
-Reports are written as individual JSON files named by monotonic sequence +
-content digest under ``<root>/<prefix>/``.  Writes are atomic (tmp+rename),
-never mutated, and verified on read — so partially-failed pipelines cannot
-corrupt earlier results (the paper's resilience argument for splitting
-execution from post-processing).  Externally produced data can be ingested
-via an injection hook; such reports are marked ``chain_of_trust=False``.
+The store is split into a thin query/cache layer (``ResultStore``) over a
+pluggable persistence backend:
+
+* ``DirBackend``   — the original file-per-report layout: reports are JSON
+  files named by monotonic sequence + content digest under
+  ``<root>/<prefix>/``.  Sequence numbers are allocated via exclusive claim
+  files so concurrent writers (scheduler workers, parallel CI jobs) can
+  append to one prefix without clobbering each other.
+* ``JsonlBackend`` — compact one-file-per-prefix layout
+  (``<root>/<prefix>.jsonl``): one envelope line per report, appended under
+  an exclusive file lock, with a sidecar offset index so queries can seek
+  straight to matching records.
+
+Both backends maintain a *manifest index* of per-report metadata (sequence,
+digest, variant, system, timestamp, trust) so ``query()``/``latest()`` only
+parse the records a filter actually selects, and ``ResultStore`` keeps an
+mtime/size-invalidated cache of parsed reports so repeated queries over an
+unchanged prefix re-parse nothing.
+
+Writes are atomic, never mutated, and digest-verified on read — so partially
+failed pipelines cannot corrupt earlier results (the paper's resilience
+argument for splitting execution from post-processing).  Externally produced
+data can be ingested via an injection hook; such reports are marked
+``chain_of_trust=False``.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
+import re
 import tempfile
-import time
+import threading
 from pathlib import Path
-from typing import Iterator, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.protocol import ProtocolError, Report
+
+_REPORT_RE = re.compile(r"^(\d{8})\.([0-9a-f]{16})\.json$")
+_CLAIM_RE = re.compile(r"^(\d{8})\.claim$")
+_MANIFEST = "_manifest.jsonl"
+_APPEND_RETRIES = 256
 
 
 class StoreError(RuntimeError):
     pass
 
 
-class ResultStore:
+@dataclasses.dataclass(frozen=True)
+class IndexEntry:
+    """Manifest-index row: enough metadata to filter without parsing the
+    report, plus the locator needed to fetch it."""
+
+    key: str            # backend locator: filename (dir) / "seq:offset:length" (jsonl)
+    seq: int
+    digest: str
+    variant: str
+    system: str
+    timestamp: float
+    trusted: bool
+
+    def matches(
+        self,
+        *,
+        variant: Optional[str] = None,
+        system: Optional[str] = None,
+        since: Optional[float] = None,
+        until: Optional[float] = None,
+        trusted_only: bool = False,
+    ) -> bool:
+        if variant is not None and self.variant != variant:
+            return False
+        if system is not None and self.system != system:
+            return False
+        if since is not None and self.timestamp < since:
+            return False
+        if until is not None and self.timestamp > until:
+            return False
+        if trusted_only and not self.trusted:
+            return False
+        return True
+
+
+def _entry_for(report: Report, key: str, seq: int, digest: str) -> IndexEntry:
+    return IndexEntry(
+        key=key,
+        seq=seq,
+        digest=digest,
+        variant=report.experiment.variant,
+        system=report.experiment.system,
+        timestamp=report.experiment.timestamp,
+        trusted=report.reporter.chain_of_trust,
+    )
+
+
+def _entry_line(e: IndexEntry) -> str:
+    return json.dumps(dataclasses.asdict(e), sort_keys=True) + "\n"
+
+
+class StoreBackend:
+    """Persistence interface: everything ``ResultStore`` needs from a layout."""
+
+    name = "abstract"
+
     def __init__(self, root: str | Path):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
+        self._locks: Dict[str, threading.Lock] = {}
+        self._locks_guard = threading.Lock()
+
+    def _prefix_lock(self, prefix: str) -> threading.Lock:
+        # Per-prefix: appends to independent prefixes (multi-system
+        # campaigns) must not serialize against each other.
+        with self._locks_guard:
+            return self._locks.setdefault(_safe(prefix), threading.Lock())
+
+    def append(self, prefix: str, report: Report) -> Path:
+        raise NotImplementedError
+
+    def scan(self, prefix: str) -> List[IndexEntry]:
+        """Manifest index for one prefix, in sequence order (rebuilt from the
+        raw records when missing or inconsistent)."""
+        raise NotImplementedError
+
+    def fetch(self, prefix: str, entries: List[IndexEntry]) -> Dict[str, Report]:
+        """Parse + digest-verify the named records; corrupt ones are skipped
+        (a bad record must not take down analyses of the rest)."""
+        raise NotImplementedError
+
+    def prefixes(self) -> List[str]:
+        raise NotImplementedError
+
+    def fingerprint(self, prefix: str) -> Tuple:
+        """Cheap token that changes whenever the prefix's content changes
+        (creation, append, or in-place tamper)."""
+        raise NotImplementedError
+
+    def retained(self, old_fp: Tuple, new_fp: Tuple,
+                 parsed: Dict[str, Report]) -> Dict[str, Report]:
+        """Subset of a stale parsed-report cache still valid under the new
+        fingerprint.  Default: nothing (full re-parse on any change)."""
+        return {}
+
+
+class DirBackend(StoreBackend):
+    """File-per-report layout (the seed's on-disk format, unchanged)."""
+
+    name = "dir"
+
+    def _dir(self, prefix: str) -> Path:
+        return self.root / _safe(prefix)
 
     # ---- write path ----
     def append(self, prefix: str, report: Report) -> Path:
-        """Atomically persist one report; returns its path."""
-        report.validate()
-        d = self.root / _safe(prefix)
+        d = self._dir(prefix)
         d.mkdir(parents=True, exist_ok=True)
-        seq = self._next_seq(d)
         digest = report.digest()
-        path = d / f"{seq:08d}.{digest}.json"
-        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        payload = report.to_json(indent=2)
+        # Concurrency-safe sequence allocation, three layers deep: the
+        # in-process lock covers scheduler workers, the directory flock
+        # covers concurrent processes (POSIX), and the O_EXCL claim file is
+        # the retry-on-collision arbiter for writers outside either lock —
+        # two writers racing the directory listing get distinct sequences
+        # instead of silently clobbering.
+        with self._prefix_lock(d.name):
+            lock_fd = os.open(d / ".lock", os.O_CREAT | os.O_RDWR, 0o644)
+            try:
+                _flock(lock_fd)
+                for _ in range(_APPEND_RETRIES):
+                    seq = self._next_seq(d)
+                    claim = d / f"{seq:08d}.claim"
+                    try:
+                        fd = os.open(claim, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+                    except FileExistsError:
+                        continue
+                    os.close(fd)
+                    try:
+                        path = d / f"{seq:08d}.{digest}.json"
+                        _atomic_write(path, payload)
+                        self._append_manifest(
+                            d, _entry_for(report, path.name, seq, digest)
+                        )
+                        return path
+                    finally:
+                        claim.unlink(missing_ok=True)
+            finally:
+                _funlock(lock_fd)
+                os.close(lock_fd)
+        raise StoreError(f"could not allocate a sequence in {d} "
+                         f"after {_APPEND_RETRIES} attempts")
+
+    def _next_seq(self, d: Path) -> int:
+        seqs = [
+            int(m.group(1))
+            for p in d.iterdir()
+            if (m := _REPORT_RE.match(p.name) or _CLAIM_RE.match(p.name))
+        ]
+        return (max(seqs) + 1) if seqs else 0
+
+    def _append_manifest(self, d: Path, entry: IndexEntry) -> None:
+        # Caller holds the append locks; O_APPEND keeps foreign writers safe.
+        fd = os.open(d / _MANIFEST, os.O_CREAT | os.O_WRONLY | os.O_APPEND, 0o644)
         try:
-            with os.fdopen(fd, "w") as f:
-                f.write(report.to_json(indent=2))
-            os.replace(tmp, path)  # atomic on POSIX
-        except BaseException:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-            raise
-        return path
+            os.write(fd, _entry_line(entry).encode())
+        finally:
+            os.close(fd)
+
+    # ---- read path ----
+    def scan(self, prefix: str) -> List[IndexEntry]:
+        d = self._dir(prefix)
+        if not d.exists():
+            return []
+        files = sorted(p.name for p in d.iterdir() if _REPORT_RE.match(p.name))
+        manifest = self._read_manifest(d)
+        if set(manifest) != set(files):
+            manifest = self._rebuild_manifest(d, files)
+        return sorted((manifest[f] for f in files), key=lambda e: (e.seq, e.key))
+
+    def _read_manifest(self, d: Path) -> Dict[str, IndexEntry]:
+        out: Dict[str, IndexEntry] = {}
+        try:
+            text = (d / _MANIFEST).read_text()
+        except OSError:
+            return out
+        for line in text.splitlines():
+            try:
+                entry = IndexEntry(**json.loads(line))
+            except (TypeError, ValueError):
+                continue
+            out[entry.key] = entry
+        return out
+
+    def _rebuild_manifest(self, d: Path, files: List[str]) -> Dict[str, IndexEntry]:
+        out: Dict[str, IndexEntry] = {}
+        for name in files:
+            m = _REPORT_RE.match(name)
+            try:
+                report = Report.from_json((d / name).read_text())
+            except (OSError, ProtocolError, json.JSONDecodeError):
+                # Unreadable now; index it so fetch() gets to skip it loudly.
+                out[name] = IndexEntry(name, int(m.group(1)), m.group(2),
+                                       "", "", 0.0, False)
+                continue
+            out[name] = _entry_for(report, name, int(m.group(1)), m.group(2))
+        with self._prefix_lock(d.name):
+            _atomic_write(d / _MANIFEST, "".join(_entry_line(e) for e in out.values()))
+        return out
+
+    def fetch(self, prefix: str, entries: List[IndexEntry]) -> Dict[str, Report]:
+        d = self._dir(prefix)
+        out: Dict[str, Report] = {}
+        for e in entries:
+            try:
+                report = Report.from_json((d / e.key).read_text())
+            except (OSError, ProtocolError, json.JSONDecodeError):
+                continue
+            if report.digest() != e.key.split(".")[1]:
+                continue
+            out[e.key] = report
+        return out
+
+    def prefixes(self) -> List[str]:
+        return sorted(p.name for p in self.root.iterdir() if p.is_dir())
+
+    def fingerprint(self, prefix: str) -> Tuple:
+        # os.scandir: one directory pass, cheap per-entry stats — this runs
+        # on every query, so it is the store's hottest read path.
+        try:
+            it = os.scandir(self._dir(prefix))
+        except FileNotFoundError:
+            return ()
+        with it:
+            out = [
+                (de.name, st.st_size, st.st_mtime_ns)
+                for de in it
+                if _REPORT_RE.match(de.name)
+                for st in (de.stat(),)
+            ]
+        out.sort()
+        return tuple(out)
+
+    def retained(self, old_fp: Tuple, new_fp: Tuple,
+                 parsed: Dict[str, Report]) -> Dict[str, Report]:
+        # Report files are immutable: a cached parse stays valid as long as
+        # the file's (name, size, mtime) is unchanged — appends of *new*
+        # files don't invalidate the siblings.
+        stable = {t[0] for t in set(old_fp) & set(new_fp)}
+        return {k: r for k, r in parsed.items() if k in stable}
+
+
+class JsonlBackend(StoreBackend):
+    """Compact one-file-per-prefix layout with a sidecar offset index."""
+
+    name = "jsonl"
+
+    def __init__(self, root: str | Path):
+        super().__init__(root)
+        # prefix -> (last seq, covered bytes): lets append skip re-reading
+        # the sidecar when nothing else wrote since (checked against fstat).
+        self._tail: Dict[str, Tuple[int, int]] = {}
+
+    def _data(self, prefix: str) -> Path:
+        return self.root / f"{_safe(prefix)}.jsonl"
+
+    def _idx(self, prefix: str) -> Path:
+        return self.root / f"{_safe(prefix)}.jsonl.idx"
+
+    # ---- write path ----
+    def append(self, prefix: str, report: Report) -> Path:
+        data = self._data(prefix)
+        digest = report.digest()
+        doc = report.to_dict()
+        with self._prefix_lock(prefix):
+            # O_RDWR (not O_WRONLY): the torn-tail check preads the last byte.
+            fd = os.open(data, os.O_CREAT | os.O_RDWR | os.O_APPEND, 0o644)
+            try:
+                _flock(fd)
+                size = os.fstat(fd).st_size
+                tail = self._tail.get(prefix)
+                if tail is not None and tail[1] == size:
+                    seq = tail[0] + 1  # nothing else wrote since — O(1) path
+                else:
+                    entries = self._load_index(prefix)
+                    seq = (entries[-1].seq + 1) if entries else 0
+                offset = size
+                line = json.dumps(
+                    {"seq": seq, "digest": digest, "report": doc}, sort_keys=True
+                ).encode() + b"\n"
+                # A torn tail (crash mid-append) may lack its newline: start
+                # a fresh line so this record stays seekable AND scannable.
+                if size > 0 and os.pread(fd, 1, size - 1) != b"\n":
+                    os.write(fd, b"\n")
+                    offset = size + 1
+                os.write(fd, line)
+                entry = _entry_for(report, f"{seq}:{offset}:{len(line)}", seq, digest)
+                with open(self._idx(prefix), "a") as f:
+                    f.write(_entry_line(entry))
+                self._tail[prefix] = (seq, offset + len(line))
+            finally:
+                _funlock(fd)
+                os.close(fd)
+        return data
+
+    # ---- read path ----
+    def _load_index(self, prefix: str) -> List[IndexEntry]:
+        data = self._data(prefix)
+        if not data.exists():
+            return []
+        size = data.stat().st_size
+        entries: List[IndexEntry] = []
+        marker = 0  # "covered" watermark written after a rebuild
+        try:
+            for line in self._idx(prefix).read_text().splitlines():
+                try:
+                    doc = json.loads(line)
+                    if "covered" in doc:
+                        marker = max(marker, int(doc["covered"]))
+                        continue
+                    entries.append(IndexEntry(**doc))
+                except (TypeError, ValueError):
+                    entries, marker = [], 0
+                    break
+        except OSError:
+            pass
+        covered = marker
+        if entries:
+            _, off, length = entries[-1].key.split(":")
+            covered = max(covered, int(off) + int(length))
+        if covered != size:
+            entries = self._rebuild_index(prefix)
+        return entries
+
+    def _rebuild_index(self, prefix: str) -> List[IndexEntry]:
+        entries: List[IndexEntry] = []
+        offset = 0
+        with open(self._data(prefix), "rb") as f:
+            for raw in f:
+                length = len(raw)
+                try:
+                    env = json.loads(raw)
+                    report = Report.from_dict(env["report"])
+                    entries.append(_entry_for(
+                        report, f"{env['seq']}:{offset}:{length}",
+                        int(env["seq"]), str(env["digest"]),
+                    ))
+                except (KeyError, TypeError, ValueError, ProtocolError):
+                    pass  # torn/corrupt line — skipped, later records survive
+                offset += length
+        # The watermark records how far this rebuild looked: with a corrupt
+        # line in the file, entry spans alone can never cover the full size,
+        # and without it every subsequent scan would re-rebuild forever.
+        lines = [_entry_line(e) for e in entries]
+        lines.append(json.dumps({"covered": offset}) + "\n")
+        _atomic_write(self._idx(prefix), "".join(lines))
+        return entries
+
+    def scan(self, prefix: str) -> List[IndexEntry]:
+        with self._prefix_lock(prefix):
+            return sorted(self._load_index(prefix), key=lambda e: e.seq)
+
+    def fetch(self, prefix: str, entries: List[IndexEntry]) -> Dict[str, Report]:
+        out: Dict[str, Report] = {}
+        try:
+            f = open(self._data(prefix), "rb")
+        except OSError:
+            return out
+        with f:
+            for e in entries:
+                _, off, length = e.key.split(":")
+                f.seek(int(off))
+                raw = f.read(int(length))
+                try:
+                    env = json.loads(raw)
+                    report = Report.from_dict(env["report"])
+                except (KeyError, TypeError, ValueError, ProtocolError):
+                    continue
+                if report.digest() != env.get("digest"):
+                    continue
+                out[e.key] = report
+        return out
+
+    def prefixes(self) -> List[str]:
+        return sorted(p.name[: -len(".jsonl")] for p in self.root.iterdir()
+                      if p.name.endswith(".jsonl"))
+
+    def fingerprint(self, prefix: str) -> Tuple:
+        data = self._data(prefix)
+        if not data.exists():
+            return ()
+        st = data.stat()
+        return (st.st_size, st.st_mtime_ns)
+
+
+_BACKENDS = {"dir": DirBackend, "jsonl": JsonlBackend}
+
+
+class ResultStore:
+    """Query/cache layer over a pluggable backend.
+
+    ``ResultStore(root)`` keeps the seed's file-per-report layout;
+    ``ResultStore(root, backend="jsonl")`` selects the compact layout.  A
+    pre-built ``StoreBackend`` instance is also accepted.
+    """
+
+    def __init__(self, root: str | Path = "", backend: str | StoreBackend = "dir"):
+        if isinstance(backend, StoreBackend):
+            self.backend = backend
+        else:
+            try:
+                self.backend = _BACKENDS[backend](root)
+            except KeyError:
+                raise StoreError(
+                    f"unknown store backend {backend!r} (have {sorted(_BACKENDS)})"
+                ) from None
+        self.root = getattr(self.backend, "root", Path(root))
+        # prefix -> (fingerprint, index, {key: parsed report})
+        self._cache: Dict[str, Tuple[Tuple, List[IndexEntry], Dict[str, Report]]] = {}
+        self._cache_lock = threading.Lock()
+
+    # ---- write path ----
+    def append(self, prefix: str, report: Report) -> Path:
+        """Atomically persist one report; returns its path.  Safe to call
+        from concurrent scheduler workers sharing one prefix."""
+        report.validate()
+        return self.backend.append(prefix, report)
 
     def ingest_external(self, prefix: str, doc: dict) -> Path:
         """Injection hook for externally provided data (§IV-E).
@@ -61,9 +479,10 @@ class ResultStore:
 
     # ---- read path ----
     def prefixes(self) -> List[str]:
-        return sorted(p.name for p in self.root.iterdir() if p.is_dir())
+        return self.backend.prefixes()
 
     def read(self, path: Path) -> Report:
+        """Parse + verify one report file (file-per-report layout)."""
         text = path.read_text()
         report = Report.from_json(text)
         want = path.name.split(".")[1]
@@ -71,6 +490,22 @@ class ResultStore:
         if want != got:
             raise StoreError(f"integrity failure for {path}: {want} != {got}")
         return report
+
+    def _indexed(self, prefix: str) -> Tuple[List[IndexEntry], Dict[str, Report]]:
+        """Manifest index + parsed-report cache, invalidated whenever the
+        backend fingerprint (names/sizes/mtimes) changes."""
+        fp = self.backend.fingerprint(prefix)
+        with self._cache_lock:
+            cached = self._cache.get(prefix)
+            if cached is not None and cached[0] == fp:
+                return cached[1], cached[2]
+        index = self.backend.scan(prefix)
+        with self._cache_lock:
+            parsed: Dict[str, Report] = {}
+            if cached is not None:
+                parsed = self.backend.retained(cached[0], fp, cached[2])
+            self._cache[prefix] = (fp, index, parsed)
+            return index, parsed
 
     def query(
         self,
@@ -82,37 +517,51 @@ class ResultStore:
         until: Optional[float] = None,
         trusted_only: bool = False,
     ) -> List[Report]:
-        d = self.root / _safe(prefix)
-        if not d.exists():
-            return []
-        out = []
-        for p in sorted(d.glob("*.json")):
-            try:
-                r = self.read(p)
-            except (ProtocolError, StoreError, json.JSONDecodeError):
-                # A corrupt record must not take down analyses of the rest.
-                continue
-            if variant is not None and r.experiment.variant != variant:
-                continue
-            if system is not None and r.experiment.system != system:
-                continue
-            ts = r.experiment.timestamp
-            if since is not None and ts < since:
-                continue
-            if until is not None and ts > until:
-                continue
-            if trusted_only and not r.reporter.chain_of_trust:
-                continue
-            out.append(r)
-        return out
+        index, parsed = self._indexed(prefix)
+        wanted = [e for e in index if e.matches(
+            variant=variant, system=system, since=since, until=until,
+            trusted_only=trusted_only,
+        )]
+        missing = [e for e in wanted if e.key not in parsed]
+        if missing:
+            fetched = self.backend.fetch(prefix, missing)
+            with self._cache_lock:
+                parsed.update(fetched)
+        return [parsed[e.key] for e in wanted if e.key in parsed]
 
     def latest(self, prefix: str, **kw) -> Optional[Report]:
         rs = self.query(prefix, **kw)
         return rs[-1] if rs else None
 
-    def _next_seq(self, d: Path) -> int:
-        seqs = [int(p.name.split(".")[0]) for p in d.glob("*.json")]
-        return (max(seqs) + 1) if seqs else 0
+
+def _atomic_write(path: Path, payload: str) -> None:
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(payload)
+        os.replace(tmp, path)  # atomic on POSIX
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def _flock(fd: int) -> None:
+    try:
+        import fcntl
+
+        fcntl.flock(fd, fcntl.LOCK_EX)
+    except (ImportError, OSError):  # non-POSIX: in-process lock still holds
+        pass
+
+
+def _funlock(fd: int) -> None:
+    try:
+        import fcntl
+
+        fcntl.flock(fd, fcntl.LOCK_UN)
+    except (ImportError, OSError):
+        pass
 
 
 def _safe(prefix: str) -> str:

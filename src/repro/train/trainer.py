@@ -96,28 +96,35 @@ def train(
     losses: List[float] = []
     times: List[float] = []
     step = start_step
-    for step in range(start_step, tc.steps):
-        batch = data.batch(step)
-        t0 = time.perf_counter()
-        params, opt_state, metrics = jitted(
-            params, opt_state, batch, jnp.asarray(tc.seed + step, jnp.int32)
-        )
-        loss = float(metrics["loss"])
-        dt = time.perf_counter() - t0
-        losses.append(loss)
-        times.append(dt)
-        if not np.isfinite(loss):
-            raise FloatingPointError(f"loss diverged at step {step}: {loss}")
-        if on_step:
-            on_step(step, {"loss": loss, "step_time_s": dt,
-                           "grad_norm": float(metrics["grad_norm"])})
-        if ckpt is not None and (step + 1) % tc.ckpt_every == 0:
-            ckpt.save(
-                step + 1,
-                {"params": params, "opt_state": opt_state},
-                block=False,
-                extra={"next_step": step + 1, "loss": loss},
+    try:
+        for step in range(start_step, tc.steps):
+            batch = data.batch(step)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = jitted(
+                params, opt_state, batch, jnp.asarray(tc.seed + step, jnp.int32)
             )
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            losses.append(loss)
+            times.append(dt)
+            if not np.isfinite(loss):
+                raise FloatingPointError(f"loss diverged at step {step}: {loss}")
+            if on_step:
+                on_step(step, {"loss": loss, "step_time_s": dt,
+                               "grad_norm": float(metrics["grad_norm"])})
+            if ckpt is not None and (step + 1) % tc.ckpt_every == 0:
+                ckpt.save(
+                    step + 1,
+                    {"params": params, "opt_state": opt_state},
+                    block=False,
+                    extra={"next_step": step + 1, "loss": loss},
+                )
+    finally:
+        # Abnormal exits must not lose the in-flight async save — the restart
+        # contract is "resume from the last *completed* checkpoint", and a
+        # crash racing the writer thread would otherwise drop it.
+        if ckpt is not None:
+            ckpt.wait()
     if ckpt is not None:
         ckpt.save(
             tc.steps,

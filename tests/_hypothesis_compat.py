@@ -1,0 +1,174 @@
+"""Property-testing shim: real hypothesis when installed, otherwise a small
+deterministic fallback.
+
+The test image does not ship ``hypothesis`` and nothing may be pip-installed,
+so the property tests import ``given``/``settings``/``st`` from here.  When
+hypothesis is available it is used unchanged (full shrinking etc.); the
+fallback samples a fixed-seed stream of examples per test, always including
+the boundary assignments (all-min, all-max) that hypothesis would find first.
+Only the strategy surface these tests use is implemented.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover — exercised only where hypothesis exists
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import inspect
+    import random
+    import string
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng, mode):
+            return self._sample(rng, mode)
+
+    class _St:
+        """Mini ``hypothesis.strategies`` namespace."""
+
+        @staticmethod
+        def integers(min_value=None, max_value=None):
+            lo = -(2**15) if min_value is None else int(min_value)
+            hi = 2**15 if max_value is None else int(max_value)
+
+            def f(rng, mode):
+                if mode == "min":
+                    return lo
+                if mode == "max":
+                    return hi
+                return rng.randint(lo, hi)
+
+            return _Strategy(f)
+
+        @staticmethod
+        def floats(min_value=None, max_value=None, allow_nan=None,
+                   allow_infinity=None, width=64):
+            lo = -1e6 if min_value is None else float(min_value)
+            hi = 1e6 if max_value is None else float(max_value)
+
+            def f(rng, mode):
+                if mode == "min":
+                    v = lo
+                elif mode == "max":
+                    v = hi
+                else:
+                    v = rng.uniform(lo, hi)
+                if width == 32:
+                    v = float(np.float32(v))
+                    v = min(max(v, lo), hi)
+                return v
+
+            return _Strategy(f)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+
+            def f(rng, mode):
+                if mode == "min":
+                    return elements[0]
+                if mode == "max":
+                    return elements[-1]
+                return elements[rng.randrange(len(elements))]
+
+            return _Strategy(f)
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=None):
+            hi = (min_size + 4) if max_size is None else max_size
+
+            def f(rng, mode):
+                if mode == "min":
+                    n = min_size
+                elif mode == "max":
+                    n = hi
+                else:
+                    n = rng.randint(min_size, hi)
+                return [elem.sample(rng, mode) for _ in range(n)]
+
+            return _Strategy(f)
+
+        @staticmethod
+        def characters(categories=(), **_kw):
+            alphabet = ""
+            if not categories:
+                alphabet = string.ascii_letters
+            if "Ll" in categories:
+                alphabet += string.ascii_lowercase
+            if "Lu" in categories:
+                alphabet += string.ascii_uppercase
+            if "Nd" in categories:
+                alphabet += string.digits
+            return _St.sampled_from(alphabet)
+
+        @staticmethod
+        def text(alphabet=None, min_size=0, max_size=None):
+            if alphabet is None:
+                alphabet = _St.sampled_from(string.ascii_letters + string.digits + "_-. ")
+            elif isinstance(alphabet, str):
+                alphabet = _St.sampled_from(alphabet)
+            chars = _St.lists(alphabet, min_size=min_size, max_size=max_size)
+
+            def f(rng, mode):
+                return "".join(chars.sample(rng, mode))
+
+            return _Strategy(f)
+
+        @staticmethod
+        def dictionaries(keys, values, min_size=0, max_size=None):
+            hi = (min_size + 4) if max_size is None else max_size
+
+            def f(rng, mode):
+                n = min_size if mode == "min" else (hi if mode == "max"
+                                                    else rng.randint(min_size, hi))
+                out = {}
+                for _ in range(n):
+                    out[keys.sample(rng, mode)] = values.sample(rng, mode)
+                return out
+
+            return _Strategy(f)
+
+        @staticmethod
+        def booleans():
+            return _St.sampled_from([False, True])
+
+    st = _St()
+
+    def given(**kwargs_st):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples", 20)
+                rng = random.Random(0)
+                modes = (["min", "max"] + ["rand"] * max(0, n - 2))[:n]
+                for mode in modes:
+                    drawn = {k: s.sample(rng, mode) for k, s in kwargs_st.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # pytest must see only the non-drawn parameters (fixtures like
+            # tmp_path_factory); the drawn ones would read as missing fixtures.
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items() if name not in kwargs_st
+            ])
+            return wrapper
+
+        return deco
+
+    def settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco

@@ -52,6 +52,23 @@ class StubHarness(Harness):
         return r
 
 
+def test_parse_scalar_floats_and_quoting():
+    from repro.core.cicd import _parse_scalar
+
+    # Leading-dot / exponent float forms (previously rejected as strings).
+    assert _parse_scalar(".5") == 0.5
+    assert _parse_scalar("1e-3") == 0.001
+    assert _parse_scalar("-2.5E+2") == -250.0
+    assert _parse_scalar("3.") == 3.0
+    assert _parse_scalar("42") == 42 and isinstance(_parse_scalar("42"), int)
+    # Quoting forces string — a quoted "true"/"123" must NOT be coerced.
+    assert _parse_scalar('"true"') == "true"
+    assert _parse_scalar("'123'") == "123"
+    assert _parse_scalar("true") is True
+    assert _parse_scalar("[1e-3, .5]") == [0.001, 0.5]
+    assert _parse_scalar("plain-string") == "plain-string"
+
+
 def test_parse_yaml_subset():
     calls = parse_pipeline_text(YML)
     assert [c.name for c in calls] == ["execution", "feature-injection", "time-series"]

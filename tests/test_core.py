@@ -7,8 +7,7 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import analysis, energy
 from repro.core.harness import BenchmarkSpec, Harness, Injections

@@ -6,8 +6,7 @@ import textwrap
 from pathlib import Path
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.distributed import hlo
 from repro.distributed.sharding import STRATEGIES, spec_for

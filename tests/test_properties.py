@@ -5,8 +5,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint.checkpoint import CheckpointManager
 from repro.core import analysis, energy

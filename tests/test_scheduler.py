@@ -1,0 +1,316 @@
+"""Tests for the campaign scheduler: parallel collections match serial ones,
+failures stay isolated under concurrency, and the component DAG orders
+post-processing after the executions it consumes."""
+
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core.cicd import component_dag, parse_pipeline_text, run_pipeline
+from repro.core.harness import BenchmarkSpec, Harness, Injections, injected_env
+from repro.core.orchestrator import ExecutionOrchestrator, FeatureInjectionOrchestrator
+from repro.core.readiness import Readiness
+from repro.core.registry import campaign, collection
+from repro.core.scheduler import CampaignScheduler, SchedulerError, Task
+from repro.core.store import ResultStore
+from repro.core.protocol import DataEntry, new_report
+
+INSTR = {
+    "hlo_flops": 1.0, "hlo_bytes": 1.0, "collective_bytes": 0.0,
+    "t_compute": 1.0, "t_memory": 1.0, "t_collective": 0.0,
+}
+
+
+class StubHarness(Harness):
+    """Deterministic per-cell reports; optional failures and wall-time."""
+
+    name = "stub"
+
+    def __init__(self, fail_cells=(), delay_s=0.0):
+        self.fail_cells = set(fail_cells)
+        self.delay_s = delay_s
+        self.max_live = 0
+        self._live = 0
+        self._lock = threading.Lock()
+
+    def run(self, spec, injections=None):
+        with self._lock:
+            self._live += 1
+            self.max_live = max(self.max_live, self._live)
+        try:
+            if self.delay_s:
+                time.sleep(self.delay_s)
+            if spec.cell in self.fail_cells:
+                raise RuntimeError("infrastructure failure")
+            r = new_report(system=spec.system, variant=spec.effective_variant(),
+                           usecase=spec.shape, pipeline_id="p1")
+            # Deterministic timestamps so serial/parallel reports are
+            # byte-comparable.
+            r.experiment.timestamp = 1000.0
+            r.reporter.timestamp = 1000.0
+            m = dict(INSTR)
+            m["step_time_s"] = float(len(spec.arch))  # cell-determined value
+            m["artifact_digest"] = f"d-{spec.cell}"
+            m["seed"] = spec.seed
+            r.data.append(DataEntry(success=True, runtime=0.1, metrics=m))
+            return r
+        finally:
+            with self._lock:
+                self._live -= 1
+
+
+def _specs(n):
+    return [BenchmarkSpec(arch=f"arch{i}", shape="train_4k", system="sysA")
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# scheduler core
+# ---------------------------------------------------------------------------
+
+def test_dag_ordering_and_isolation():
+    order = []
+    lock = threading.Lock()
+
+    def mark(key, fail=False):
+        with lock:
+            order.append(key)
+        if fail:
+            raise RuntimeError("boom")
+
+    tasks = [
+        Task("a", lambda: mark("a")),
+        Task("b", lambda: mark("b", fail=True)),
+        Task("c", lambda: mark("c"), deps=frozenset({"a", "b"})),
+        Task("d", lambda: mark("d")),
+    ]
+    done = CampaignScheduler(parallelism=4).run_tasks(tasks)
+    # c ran after BOTH deps — even though b failed (isolation, not deadlock).
+    assert order.index("c") > order.index("a")
+    assert order.index("c") > order.index("b")
+    assert done["b"].error and "boom" in done["b"].error
+    assert done["a"].ok and done["c"].ok and done["d"].ok
+
+
+def test_scheduler_rejects_structural_errors():
+    with pytest.raises(SchedulerError):
+        CampaignScheduler().run_tasks([Task("a", lambda: 1, deps=frozenset({"zz"}))])
+    with pytest.raises(SchedulerError):
+        CampaignScheduler().run_tasks([Task("a", lambda: 1), Task("a", lambda: 2)])
+    with pytest.raises(SchedulerError):
+        CampaignScheduler().run_tasks([
+            Task("a", lambda: 1, deps=frozenset({"b"})),
+            Task("b", lambda: 2, deps=frozenset({"a"})),
+        ])
+
+
+def test_scheduler_streams_results():
+    seen = []
+    CampaignScheduler(parallelism=2).map_items(lambda x: x * 2, [1, 2, 3],
+                                               on_result=lambda tr: seen.append(tr.value))
+    assert sorted(seen) == [2, 4, 6]
+
+
+# ---------------------------------------------------------------------------
+# parallel collections
+# ---------------------------------------------------------------------------
+
+def test_parallel_collection_matches_serial(tmp_path):
+    specs = _specs(8)
+    serial_store = ResultStore(tmp_path / "serial")
+    parallel_store = ResultStore(tmp_path / "parallel")
+    ex_s = ExecutionOrchestrator(inputs={"prefix": "c"}, harness=StubHarness(),
+                                 store=serial_store)
+    ex_p = ExecutionOrchestrator(inputs={"prefix": "c", "parallelism": 4},
+                                 harness=StubHarness(), store=parallel_store)
+    rs = ex_s.run_collection(specs)
+    rp = ex_p.run_collection(specs)
+    # Report-for-report: same cells, same readiness, same digests & metrics.
+    assert [r.spec.cell for r in rs] == [r.spec.cell for r in rp]
+    assert [r.readiness for r in rs] == [r.readiness for r in rp]
+    for a, b in zip(rs, rp):
+        assert a.report.data[0].metrics == b.report.data[0].metrics
+    # Persisted stores agree too (order-insensitive: workers race to append).
+    sa = sorted(r.to_json() for r in serial_store.query("c"))
+    sb = sorted(r.to_json() for r in parallel_store.query("c"))
+    assert sa == sb
+
+
+def test_parallel_collection_actually_overlaps(tmp_path):
+    h = StubHarness(delay_s=0.05)
+    ex = ExecutionOrchestrator(inputs={"prefix": "c"}, harness=h,
+                               store=ResultStore(tmp_path))
+    ex.run_collection(_specs(8), parallelism=4)
+    assert h.max_live >= 2  # cells genuinely ran concurrently
+
+
+def test_parallel_crash_does_not_lose_siblings(tmp_path):
+    store = ResultStore(tmp_path)
+    h = StubHarness(fail_cells={"arch3.train_4k.sysA"})
+    ex = ExecutionOrchestrator(inputs={"prefix": "c"}, harness=h, store=store)
+    results = ex.run_collection(_specs(8), parallelism=4)
+    failed = [r for r in results if r.readiness == Readiness.FAILED]
+    assert len(failed) == 1 and "infrastructure failure" in failed[0].error
+    assert len(store.query("c")) == 7  # all siblings persisted
+
+
+def test_parallel_sweep(tmp_path):
+    store = ResultStore(tmp_path)
+    ex = ExecutionOrchestrator(inputs={"prefix": "s"}, harness=StubHarness(),
+                               store=store)
+    fi = FeatureInjectionOrchestrator(execution=ex, inputs={"prefix": "s"})
+    results = fi.sweep(_specs(1)[0], env_knob="EXACB_KNOB",
+                       values=[1, 2, 4, 8], parallelism=4)
+    assert all(r.readiness == Readiness.REPRODUCIBLE for r in results)
+    knobs = sorted(r.report.parameter["injections"]["env"]["EXACB_KNOB"]
+                   for r in results)
+    assert knobs == ["1", "2", "4", "8"]
+    assert len(store.query("s")) == 4
+
+
+# ---------------------------------------------------------------------------
+# thread-safe env injection
+# ---------------------------------------------------------------------------
+
+def test_injected_env_concurrent_distinct_keys():
+    errors = []
+    barrier = threading.Barrier(4)
+
+    def worker(i):
+        key = f"EXACB_TEST_K{i}"
+        try:
+            with injected_env({key: str(i)}):
+                barrier.wait(timeout=5)  # all frames active at once
+                if os.environ.get(key) != str(i):
+                    errors.append(f"{key} lost its value")
+                time.sleep(0.01)
+        except Exception as e:  # noqa: BLE001
+            errors.append(repr(e))
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    for i in range(4):
+        assert f"EXACB_TEST_K{i}" not in os.environ  # all restored
+
+
+def test_parallel_env_sweep_each_cell_sees_its_own_value(tmp_path):
+    """Same-key env sweeps under the pool: per-key serialization means each
+    cell executes under the value it was assigned, not the last entrant's."""
+
+    class EnvEchoHarness(Harness):
+        name = "env-echo"
+
+        def run(self, spec, injections=None):
+            with injected_env(injections.env if injections else {}):
+                seen = os.environ.get("EXACB_SWEEP_KNOB", "")
+                time.sleep(0.01)  # widen the overlap window
+                still = os.environ.get("EXACB_SWEEP_KNOB", "")
+            assert seen == still, "env changed underneath a running cell"
+            r = new_report(system=spec.system, variant=spec.effective_variant(),
+                           usecase=spec.shape, pipeline_id="p1")
+            r.data.append(DataEntry(success=True, runtime=0.1,
+                                    metrics={"seen": float(seen)}))
+            return r
+
+    ex = ExecutionOrchestrator(inputs={"prefix": "env"}, harness=EnvEchoHarness(),
+                               store=ResultStore(tmp_path))
+    fi = FeatureInjectionOrchestrator(execution=ex, inputs={})
+    results = fi.sweep(_specs(1)[0], env_knob="EXACB_SWEEP_KNOB",
+                       values=[1, 2, 3, 4], parallelism=4)
+    seen = [r.report.data[0].metrics["seen"] for r in results]
+    assert seen == [1.0, 2.0, 3.0, 4.0]  # intended == executed, per point
+
+
+def test_injected_env_same_key_restores_original():
+    os.environ["EXACB_TEST_SAME"] = "orig"
+    try:
+        with injected_env({"EXACB_TEST_SAME": "a"}):
+            with injected_env({"EXACB_TEST_SAME": "b"}):
+                assert os.environ["EXACB_TEST_SAME"] == "b"
+            assert os.environ["EXACB_TEST_SAME"] == "a"
+        assert os.environ["EXACB_TEST_SAME"] == "orig"
+    finally:
+        os.environ.pop("EXACB_TEST_SAME", None)
+
+
+# ---------------------------------------------------------------------------
+# pipeline DAG
+# ---------------------------------------------------------------------------
+
+PIPE = """\
+include:
+  - component: execution@v3
+    inputs:
+      prefix: "dag.a"
+      arch: "arch0"
+      usecase: "train_4k"
+      machine: "sysA"
+      parallelism: 4
+  - component: execution@v3
+    inputs:
+      prefix: "dag.a"
+      arch: "arch1"
+      usecase: "train_4k"
+      machine: "sysA"
+  - component: execution@v3
+    inputs:
+      prefix: "dag.b"
+      arch: "arch2"
+      usecase: "train_4k"
+      machine: "sysA"
+  - component: time-series@v3
+    inputs:
+      prefix: "evaluation.dag"
+      source_prefix: "dag.a"
+      data_labels: [step_time_s]
+"""
+
+
+def test_component_dag_edges():
+    calls = parse_pipeline_text(PIPE)
+    deps = component_dag(calls)
+    # Executions are independent; time-series waits on the two dag.a
+    # producers but NOT the unrelated dag.b one.
+    assert deps[0] == [] and deps[1] == [] and deps[2] == []
+    assert deps[3] == [0, 1]
+
+
+def test_pipeline_dag_post_processing_sees_all_upstream(tmp_path):
+    store = ResultStore(tmp_path)
+    results = run_pipeline(parse_pipeline_text(PIPE), store=store,
+                           harness=StubHarness())
+    assert [r["component"] for r in results] == [
+        "execution", "execution", "execution", "time-series"]
+    assert all(not r.get("error") for r in results)
+    # DAG ordering: the analysis saw BOTH dag.a execution reports even
+    # though all executions were dispatched concurrently (parallelism 4).
+    assert results[3]["points"]["step_time_s"] == 2
+
+
+def test_pipeline_component_failure_is_isolated(tmp_path):
+    store = ResultStore(tmp_path)
+    h = StubHarness(fail_cells={"arch1.train_4k.sysA"})
+    results = run_pipeline(parse_pipeline_text(PIPE), store=store, harness=h)
+    assert results[1]["error"] and "infrastructure failure" in results[1]["error"]
+    # Downstream analysis still ran over the surviving report.
+    assert results[3]["points"]["step_time_s"] == 1
+
+
+# ---------------------------------------------------------------------------
+# multi-system campaign expansion
+# ---------------------------------------------------------------------------
+
+def test_campaign_expansion():
+    single = collection("jedi", archs=["glm4-9b"])
+    multi = campaign(["jedi", "jureca"], archs=["glm4-9b"])
+    assert len(multi) == 2 * len(single)
+    assert {s.system for s in multi} == {"jedi", "jureca"}
+    # collection() accepts the multi-system forms directly.
+    assert collection(["jedi", "jureca"], archs=["glm4-9b"]) == multi
+    assert collection("jedi,jureca", archs=["glm4-9b"]) == multi

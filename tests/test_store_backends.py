@@ -1,0 +1,168 @@
+"""Tests for the pluggable result-store backends: concurrent append safety
+(the _next_seq write-race regression), manifest-index queries, the
+mtime-invalidated cache, and dir/jsonl equivalence."""
+
+import json
+import threading
+
+import pytest
+
+from repro.core.protocol import DataEntry, new_report
+from repro.core.store import DirBackend, JsonlBackend, ResultStore, StoreError
+
+
+def _mk_report(system="jedi", variant="v", metrics=None, ts=None):
+    r = new_report(system=system, variant=variant, usecase="u", pipeline_id="p1")
+    if ts is not None:
+        r.experiment.timestamp = ts
+    r.data.append(DataEntry(success=True, runtime=1.0, metrics=metrics or {}))
+    return r
+
+
+@pytest.fixture(params=["dir", "jsonl"])
+def any_store(request, tmp_path):
+    return ResultStore(tmp_path, backend=request.param)
+
+
+# ---------------------------------------------------------------------------
+# backend-generic behavior
+# ---------------------------------------------------------------------------
+
+def test_append_query_latest(any_store):
+    any_store.append("p", _mk_report(variant="a", ts=1.0))
+    any_store.append("p", _mk_report(variant="b", ts=2.0))
+    any_store.append("p", _mk_report(variant="a", ts=3.0))
+    assert len(any_store.query("p")) == 3
+    assert len(any_store.query("p", variant="a")) == 2
+    assert any_store.latest("p").experiment.timestamp == 3.0
+    assert any_store.latest("p", variant="b").experiment.timestamp == 2.0
+    assert any_store.query("p", since=1.5, until=2.5)[0].experiment.variant == "b"
+    assert any_store.prefixes() == ["p"]
+
+
+def test_ingest_external_breaks_trust(any_store):
+    any_store.ingest_external("x", _mk_report().to_dict())
+    assert any_store.query("x")[0].reporter.chain_of_trust is False
+    assert any_store.query("x", trusted_only=True) == []
+
+
+def test_query_cache_sees_new_appends(any_store):
+    any_store.append("p", _mk_report(ts=1.0))
+    assert len(any_store.query("p")) == 1  # populates the cache
+    any_store.append("p", _mk_report(ts=2.0))
+    assert len(any_store.query("p")) == 2  # fingerprint change invalidates
+
+
+def test_concurrent_appenders_one_prefix(any_store):
+    """Regression for the _next_seq write race: two writers globbing the same
+    directory used to allocate the same sequence and silently clobber."""
+    n_threads, per_thread = 8, 5
+    errors = []
+    barrier = threading.Barrier(n_threads)
+
+    def writer(i):
+        try:
+            barrier.wait(timeout=10)
+            for j in range(per_thread):
+                any_store.append("race", _mk_report(
+                    variant=f"w{i}.{j}", ts=float(i * per_thread + j)))
+        except Exception as e:  # noqa: BLE001
+            errors.append(repr(e))
+
+    threads = [threading.Thread(target=writer, args=(i,)) for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    reports = any_store.query("race")
+    assert len(reports) == n_threads * per_thread  # nothing clobbered
+    variants = {r.experiment.variant for r in reports}
+    assert len(variants) == n_threads * per_thread
+    # Sequence numbers are unique and gap-free.
+    index = any_store.backend.scan("race")
+    assert sorted(e.seq for e in index) == list(range(n_threads * per_thread))
+
+
+def test_empty_prefix_rejected(any_store):
+    with pytest.raises(StoreError):
+        any_store.append("", _mk_report())
+
+
+# ---------------------------------------------------------------------------
+# backend equivalence
+# ---------------------------------------------------------------------------
+
+def test_backends_query_byte_identical(tmp_path):
+    dir_store = ResultStore(tmp_path / "d", backend="dir")
+    jsonl_store = ResultStore(tmp_path / "j", backend="jsonl")
+    for i in range(10):
+        r = _mk_report(variant=f"v{i % 3}", metrics={"m": float(i)}, ts=float(i))
+        dir_store.append("eq", r)
+        jsonl_store.append("eq", r)
+    for kw in ({}, {"variant": "v1"}, {"since": 3.0, "until": 7.0}):
+        a = [r.to_json() for r in dir_store.query("eq", **kw)]
+        b = [r.to_json() for r in jsonl_store.query("eq", **kw)]
+        assert a == b and a  # byte-identical, and non-empty
+
+
+# ---------------------------------------------------------------------------
+# dir-backend specifics
+# ---------------------------------------------------------------------------
+
+def test_dir_layout_unchanged_and_tamper_detected(tmp_path):
+    store = ResultStore(tmp_path)
+    assert isinstance(store.backend, DirBackend)
+    p1 = store.append("t", _mk_report(metrics={"m": 1.0}, ts=1.0))
+    store.append("t", _mk_report(ts=2.0))
+    assert p1.name.split(".")[0] == "00000000" and p1.name.endswith(".json")
+    assert len(store.query("t")) == 2
+    doc = json.loads(p1.read_text())
+    doc["data"][0]["runtime"] = 999.0
+    p1.write_text(json.dumps(doc))
+    assert len(store.query("t")) == 1  # cache invalidated AND corrupt skipped
+
+
+def test_dir_manifest_rebuilt_for_preexisting_store(tmp_path):
+    # A store written without a manifest (or with a stale one) still queries.
+    store = ResultStore(tmp_path)
+    store.append("t", _mk_report(variant="a", ts=1.0))
+    store.append("t", _mk_report(variant="b", ts=2.0))
+    (tmp_path / "t" / "_manifest.jsonl").unlink()
+    fresh = ResultStore(tmp_path)
+    assert [r.experiment.variant for r in fresh.query("t")] == ["a", "b"]
+    assert fresh.latest("t", variant="a").experiment.timestamp == 1.0
+
+
+# ---------------------------------------------------------------------------
+# jsonl-backend specifics
+# ---------------------------------------------------------------------------
+
+def test_jsonl_compact_layout(tmp_path):
+    store = ResultStore(tmp_path, backend="jsonl")
+    assert isinstance(store.backend, JsonlBackend)
+    for i in range(5):
+        store.append("t", _mk_report(ts=float(i)))
+    assert (tmp_path / "t.jsonl").exists()
+    assert len((tmp_path / "t.jsonl").read_text().splitlines()) == 5
+    assert len(store.query("t")) == 5
+
+
+def test_jsonl_survives_torn_tail_and_lost_index(tmp_path):
+    store = ResultStore(tmp_path, backend="jsonl")
+    for i in range(3):
+        store.append("t", _mk_report(ts=float(i)))
+    # Simulate a crash mid-append: torn trailing line, sidecar index gone.
+    with open(tmp_path / "t.jsonl", "a") as f:
+        f.write('{"seq": 3, "digest": "xxxx", "repo')
+    (tmp_path / "t.jsonl.idx").unlink()
+    fresh = ResultStore(tmp_path, backend="jsonl")
+    assert len(fresh.query("t")) == 3  # intact records survive
+    # And appends keep working after the rebuild.
+    fresh.append("t", _mk_report(ts=9.0))
+    assert fresh.latest("t").experiment.timestamp == 9.0
+
+
+def test_unknown_backend_rejected(tmp_path):
+    with pytest.raises(StoreError):
+        ResultStore(tmp_path, backend="sqlite")
