@@ -1,0 +1,102 @@
+"""Regression-gate benchmark: detector + gate cost over a 1k-report history.
+
+Two measurements:
+
+1. **Per-detector cost** on in-memory arrays sized like a 1k-point history —
+   the pure statistical cost (MAD, 400-replicate bootstrap, 128-permutation
+   CUSUM), independent of storage.
+2. **Warm gate evaluation** — a full ``RegressionGate.run`` over a 1k-report
+   jsonl store after one cold run has primed the PR-1 query cache.  Asserted
+   under 50 ms: the cache keeps the store read out of the hot path, so a
+   gate is cheap enough to run on every pipeline.
+
+    PYTHONPATH=src python -m benchmarks.bench_regression
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.protocol import DataEntry, new_report
+from repro.core.regression import GateSpec, MetricSpec, RegressionGate, get_detector
+from repro.core.store import ResultStore
+
+N_REPORTS = 1000
+WARM_REPEATS = 10
+BUDGET_S = 0.050
+
+
+def _seed(store: ResultStore) -> None:
+    rng = np.random.default_rng(0)
+    for i in range(N_REPORTS):
+        v = float(1.0 + rng.normal(0, 0.02))
+        r = new_report(system="bench", variant="v", usecase="u",
+                       pipeline_id=f"p{i}")
+        r.data.append(DataEntry(success=True, runtime=v,
+                                metrics={"step_time_s": v}))
+        store.append("bench.gate", r)
+
+
+def bench_detectors() -> None:
+    rng = np.random.default_rng(1)
+    hist = list(1.0 + rng.normal(0, 0.02, N_REPORTS - 8))
+    cand = list(1.0 + rng.normal(0, 0.02, 8))
+    spec = MetricSpec("step_time_s")
+    seqs = list(range(N_REPORTS))
+    for name in ("mad", "bootstrap", "cusum"):
+        det = get_detector(name)
+        det.verdict(hist, cand, spec, baseline_seqs=seqs[:-8],
+                    candidate_seqs=seqs[-8:])  # warmup
+        t0 = time.perf_counter()
+        for _ in range(WARM_REPEATS):
+            det.verdict(hist, cand, spec, baseline_seqs=seqs[:-8],
+                        candidate_seqs=seqs[-8:])
+        per_call = (time.perf_counter() - t0) / WARM_REPEATS
+        emit(f"regression.detector.{name}", per_call * 1e6,
+             f"{N_REPORTS}pt history")
+
+
+def bench_warm_gate(tmp: Path) -> None:
+    store = ResultStore(tmp / "store", backend="jsonl")
+    _seed(store)
+    # No baseline promotion / verdict recording: those are appends, and this
+    # measures the read+judge hot path a gate adds to every pipeline run.
+    gate = RegressionGate(GateSpec(
+        source_prefix="bench.gate",
+        metrics=[MetricSpec("step_time_s")],
+        history=N_REPORTS, window=64, candidate=8,
+        update_baseline=False, record_prefix="none",
+    ))
+    t0 = time.perf_counter()
+    cold = gate.run(store)  # parses all 1k reports, primes the query cache
+    cold_s = time.perf_counter() - t0
+    assert cold["status"] == "pass", cold
+
+    t0 = time.perf_counter()
+    for _ in range(WARM_REPEATS):
+        warm = gate.run(store)
+    warm_s = (time.perf_counter() - t0) / WARM_REPEATS
+    assert warm["status"] == "pass", warm
+
+    emit("regression.gate_cold", cold_s * 1e6, f"{N_REPORTS}reports jsonl")
+    emit("regression.gate_warm", warm_s * 1e6,
+         f"budget={BUDGET_S * 1e3:.0f}ms speedup={cold_s / warm_s:.1f}x")
+    assert warm_s < BUDGET_S, (
+        f"warm gate {warm_s * 1e3:.1f}ms over the {BUDGET_S * 1e3:.0f}ms budget"
+    )
+
+
+def run() -> None:
+    bench_detectors()
+    with tempfile.TemporaryDirectory(prefix="exacb_bench_gate_") as tmp:
+        bench_warm_gate(Path(tmp))
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

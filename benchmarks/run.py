@@ -19,6 +19,7 @@ def main() -> None:
         bench_energy,
         bench_feature_injection,
         bench_machine_comparison,
+        bench_regression,
         bench_roofline,
         bench_scheduler,
         bench_timeseries,
@@ -33,6 +34,7 @@ def main() -> None:
         ("fig8_9_energy", bench_energy.run),
         ("roofline_table", bench_roofline.run),
         ("scheduler_and_store", bench_scheduler.run),
+        ("regression_gate", bench_regression.run),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -1,0 +1,57 @@
+"""Append synthetic slowed-down reports to a result-store prefix.
+
+CI helper for exercising the regression gate's failure path: after the smoke
+pipeline has built up healthy history, this makes the guarded metric jump by
+``--factor``, so the next ``python -m repro.core.cicd ... --gate`` run must
+exit 3 and name the injected sequence as the change point.
+
+    PYTHONPATH=src python scripts/ci_inject_slowdown.py \
+        --store gate_store --prefix ci.smoke --metric step_time_s \
+        --factor 20 --count 6
+"""
+
+from __future__ import annotations
+
+import argparse
+import statistics
+
+from repro.core.protocol import DataEntry, new_report
+from repro.core.store import ResultStore
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--store", required=True)
+    ap.add_argument("--store-backend", default="dir", choices=("dir", "jsonl"))
+    ap.add_argument("--prefix", default="ci.smoke")
+    ap.add_argument("--metric", default="step_time_s")
+    ap.add_argument("--factor", type=float, default=20.0)
+    ap.add_argument("--count", type=int, default=6)
+    args = ap.parse_args(argv)
+
+    store = ResultStore(args.store, backend=args.store_backend)
+    vals = [
+        float(d.metrics[args.metric])
+        for r in store.query(args.prefix)
+        for d in r.data
+        if args.metric in d.metrics
+    ]
+    if not vals:
+        raise SystemExit(f"no {args.metric!r} history under {args.prefix!r} "
+                         f"in {args.store}")
+    slow = statistics.median(vals) * args.factor
+    for i in range(args.count):
+        rep = new_report(system="synthetic-slowdown", variant="injected",
+                         usecase=args.prefix, pipeline_id=f"inject-{i}")
+        rep.data.append(DataEntry(success=True, runtime=slow,
+                                  metrics={args.metric: slow}))
+        store.append(args.prefix, rep)
+    print(f"appended {args.count} reports with {args.metric}={slow:.6g} "
+          f"to {args.prefix} (median was {statistics.median(vals):.6g})")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

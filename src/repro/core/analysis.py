@@ -12,6 +12,7 @@ exaCB workflow.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -41,7 +42,13 @@ class Regression:
 
     @property
     def relative(self) -> float:
-        return (self.value - self.baseline) / self.baseline if self.baseline else 0.0
+        if self.baseline:
+            return (self.value - self.baseline) / self.baseline
+        # Zero baseline: any deviation is an infinite relative change, not a
+        # silent 0.0 that downstream gates would read as "no regression".
+        if self.value == self.baseline:
+            return 0.0
+        return math.copysign(math.inf, self.value - self.baseline)
 
 
 def detect_regressions(
@@ -59,7 +66,10 @@ def detect_regressions(
     series flagging measurement noise).
     """
     out: List[Regression] = []
+    window = max(1, int(window))
     vals = np.array([v for _, v in series], dtype=np.float64)
+    if vals.size <= window:  # empty/singleton/short series: nothing to judge
+        return out
     for i in range(window, len(vals)):
         base = vals[i - window : i]
         med = float(np.median(base))

@@ -33,6 +33,7 @@ from repro.core.harness import BenchmarkSpec, ExecHarness, Harness, Injections
 from repro.core.orchestrator import (
     ExecutionOrchestrator,
     FeatureInjectionOrchestrator,
+    GateOrchestrator,
     PostProcessingOrchestrator,
 )
 from repro.core.scheduler import CampaignScheduler, Task
@@ -44,7 +45,13 @@ SUPPORTED = {
     "time-series": (3,),
     "machine-comparison": (3,),
     "scalability": (3,),
+    "gate": (1,),
 }
+
+# ``cicd --gate`` exit code when a gate component reports a regression —
+# distinct from 1 (component/infrastructure error) so CI can tell "the
+# benchmark got slower" from "the pipeline broke".
+EXIT_REGRESSION = 3
 
 
 class PipelineError(ValueError):
@@ -108,7 +115,8 @@ def parse_pipeline_text(text: str) -> List[ComponentCall]:
         if re.match(r"\s*inputs:\s*$", line):
             in_inputs = True
             continue
-        m = re.match(r"\s*([\w\-]+):\s*(.+)$", line)
+        # Dots in input keys carry detector tuning (``mad.z_threshold: 6``).
+        m = re.match(r"\s*([\w.\-]+):\s*(.+)$", line)
         if m and in_inputs:
             inputs[m.group(1)] = _parse_scalar(m.group(2))
             continue
@@ -154,7 +162,7 @@ _PRODUCERS = ("execution", "feature-injection")
 def _consumed_prefixes(call: ComponentCall) -> List[str]:
     """Store prefixes a component reads — its upstream edges."""
     inp = call.inputs
-    if call.name in ("time-series", "scalability"):
+    if call.name in ("time-series", "scalability", "gate"):
         return [inp["source_prefix"]] if "source_prefix" in inp else []
     if call.name == "machine-comparison":
         out = []
@@ -260,6 +268,8 @@ def _run_component(
             mode=inp.get("mode", "strong"),
         )
         return {"component": "scalability", "table": out["table"]}
+    if call.name == "gate":
+        return GateOrchestrator(store=store, inputs=inp).run()
     raise PipelineError(call.name)  # pragma: no cover — guarded by _split_component
 
 
@@ -317,6 +327,13 @@ def main(argv=None):
     ap.add_argument("--store-backend", default="dir", choices=("dir", "jsonl"))
     ap.add_argument("--parallelism", type=int, default=None,
                     help="worker pool bound (default: max parallelism input)")
+    ap.add_argument("--gate", action="store_true",
+                    help="enforce regression gates: exit 3 when any gate "
+                         "component reports a regression, and write the gate "
+                         "report (JSON + markdown twin)")
+    ap.add_argument("--gate-report", default="gate_report.json",
+                    help="gate report path used with --gate; a .md summary "
+                         "suitable for a PR comment lands next to it")
     args = ap.parse_args(argv)
     calls = parse_pipeline_text(Path(args.pipeline).read_text())
     results = run_pipeline(
@@ -325,7 +342,34 @@ def main(argv=None):
         parallelism=args.parallelism,
     )
     print(json.dumps(results, indent=2, default=str))
-    return 0 if all(not r.get("error") for r in results) else 1
+    component_error = any(r.get("error") for r in results)
+    if not args.gate:
+        return 0 if not component_error else 1
+
+    from repro.core import regression
+
+    summaries = [r for r in results
+                 if r.get("component") == "gate" and "status" in r]
+    status = regression.worst(s["status"] for s in summaries)
+    # Infrastructure failure trumps the gate verdict: a crashed component
+    # means the store may be missing results a gate needed to judge.
+    exit_code = 1 if component_error else (
+        EXIT_REGRESSION if status == regression.FAIL else 0)
+    md = regression.gate_markdown(summaries)
+    report = {
+        "status": status,
+        "exit_code": exit_code,
+        "pipeline": str(args.pipeline),
+        "store": str(args.store),
+        "gates": [g for s in summaries for g in s["gates"]],
+        "markdown": md,
+    }
+    path = Path(args.gate_report)
+    path.write_text(
+        json.dumps(regression.json_safe(report), indent=2, default=str) + "\n")
+    path.with_suffix(".md").write_text(md + "\n")
+    print(md)
+    return exit_code
 
 
 if __name__ == "__main__":

@@ -26,6 +26,7 @@ from repro.core import analysis
 from repro.core.harness import BenchmarkSpec, Harness, Injections
 from repro.core.protocol import DataEntry, Report, new_report
 from repro.core.readiness import Readiness, classify
+from repro.core.regression import RegressionGate
 from repro.core.scheduler import CampaignScheduler, TaskResult
 from repro.core.store import ResultStore
 
@@ -283,6 +284,28 @@ class PostProcessingOrchestrator:
             f"n{n}_efficiency": v["efficiency"] for n, v in table.items()
         }, source_prefix)
         return out
+
+
+class GateOrchestrator:
+    """Enforces regression gates over stored results (paper §IV: continuous
+    benchmarking pays off when CI *acts* on performance data).
+
+    A thin adapter: the statistical machinery lives in
+    ``repro.core.regression``; this class gives it the same declarative
+    ``inputs`` interface as the other orchestrators, so a pipeline document
+    can declare what a gate guards exactly like it declares an execution.
+    Like post-processing, a gate only reads the store — it runs after its
+    producers via the component DAG and never re-executes benchmarks.
+    """
+
+    component = "gate@v1"
+
+    def __init__(self, *, store: ResultStore, inputs: Dict[str, Any]):
+        self.store = store
+        self.inputs = dict(inputs)
+
+    def run(self) -> Dict[str, Any]:
+        return RegressionGate.from_inputs(self.inputs).run(self.store)
 
 
 def _flatten(d: Dict[str, Any], prefix: str = "") -> List[Tuple[str, float]]:

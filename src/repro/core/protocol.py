@@ -14,8 +14,9 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import math
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 PROTOCOL_VERSION = "2"
 SUPPORTED_VERSIONS = ("1", "2")
@@ -155,6 +156,71 @@ def migrate(doc: Dict[str, Any]) -> Dict[str, Any]:
         doc["data"] = new_data
         doc["version"] = "2"
     return doc
+
+
+# ---------------------------------------------------------------------------
+# Envelopes — protocol-compliant carriers for derived state (baselines, gate
+# verdicts, ...).  Wrapping a payload in a full Report means it persists
+# through any ResultStore backend with provenance, digest integrity, and the
+# same query/index machinery as benchmark results.
+# ---------------------------------------------------------------------------
+
+ENVELOPE_PARAMETER = "envelope"
+
+
+def wrap_envelope(
+    kind: str,
+    payload: Dict[str, Any],
+    *,
+    system: str = "exacb",
+    source: str = "",
+    variant: Optional[str] = None,
+    pipeline_id: str = "",
+    commit: str = "",
+) -> Report:
+    """Wrap a derived artifact in a protocol report.
+
+    ``kind`` names the payload schema (e.g. ``baseline``, ``gate-verdict``);
+    ``source`` records the store prefix the artifact was derived from;
+    ``variant`` is index-filterable, so callers storing many envelope streams
+    under one prefix (one baseline per metric) can query without parsing.
+    Top-level finite numeric payload values are mirrored into the data
+    entry's ``metrics`` so exporters see envelopes like any other report.
+    """
+    if not isinstance(payload, dict):
+        raise ProtocolError("envelope payload must be a dict")
+    rep = new_report(
+        system=system,
+        variant=variant if variant is not None else f"envelope.{kind}",
+        usecase=source,
+        pipeline_id=pipeline_id,
+        commit=commit,
+    )
+    rep.parameter[ENVELOPE_PARAMETER] = {"kind": str(kind), "payload": payload}
+    rep.data.append(DataEntry(success=True, runtime=0.0, metrics={
+        k: float(v) for k, v in payload.items()
+        if isinstance(v, (int, float)) and not isinstance(v, bool)
+        and math.isfinite(float(v))
+    }))
+    return rep
+
+
+def is_envelope(report: Report, kind: Optional[str] = None) -> bool:
+    env = report.parameter.get(ENVELOPE_PARAMETER)
+    ok = isinstance(env, dict) and "kind" in env
+    return bool(ok and (kind is None or str(env["kind"]) == kind))
+
+
+def unwrap_envelope(report: Report) -> Tuple[str, Dict[str, Any]]:
+    """(kind, payload) of an envelope report; raises ``ProtocolError`` on a
+    plain benchmark report so consumers cannot silently misread one."""
+    env = report.parameter.get(ENVELOPE_PARAMETER)
+    if not isinstance(env, dict) or "kind" not in env:
+        raise ProtocolError("report is not an envelope")
+    payload = env.get("payload", {})
+    if not isinstance(payload, dict):
+        raise ProtocolError("malformed envelope payload")
+    return str(env["kind"]), payload
 
 
 def new_report(

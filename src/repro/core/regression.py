@@ -1,0 +1,802 @@
+"""Statistical regression gating: baselines + noise-aware detectors for the
+CI/CD pipeline layer (paper §IV "early detection of regressions").
+
+The paper's argument for continuous benchmarking is that it only pays off
+when the workflow can *act* on performance data — a regression must block a
+merge, not surface in an offline plot weeks later.  This module supplies the
+three pieces that turn stored benchmark history into an enforceable gate:
+
+* **BaselineManager** — rolling per-(prefix, metric) baselines persisted
+  through any ``ResultStore`` backend as protocol envelopes, with explicit
+  ``promote`` / ``pin`` / ``expire`` semantics.  Baselines only roll forward
+  on green runs, so a regression can never launder itself into the
+  reference; a known-good commit can be pinned as a frozen reference.
+* **Detectors** — pluggable, each returning a structured :class:`Verdict`
+  (status, signed effect size, confidence) instead of a bool:
+
+  - ``mad``       sliding-window median/MAD robust z-score of the candidate
+                  against the baseline window (cheap, catches step changes);
+  - ``bootstrap`` confidence-interval comparison of candidate vs baseline
+                  means via deterministic bootstrap resampling (calibrated
+                  under noise, no distributional assumptions);
+  - ``cusum``     CUSUM change-point locator over the recent *history*
+                  series — it both detects a shift and names the store
+                  sequence that introduced it, even when the shift landed
+                  between gate runs (e.g. data ingested out-of-band).
+
+* **RegressionGate** — a ``gate`` pipeline component: declares which
+  execution prefix and metrics it guards (with per-metric direction and
+  tolerance), runs after its producers via the component DAG, records its
+  verdicts back into the store, and drives ``python -m repro.core.cicd
+  ... --gate`` exit codes (0 pass, 3 regression).
+
+CLI (baseline lifecycle + standalone gating)::
+
+    PYTHONPATH=src python -m repro.core.regression --store S show ci.smoke
+    PYTHONPATH=src python -m repro.core.regression --store S pin ci.smoke \
+        step_time_s --last 8 --commit abc123
+    PYTHONPATH=src python -m repro.core.regression --store S gate ci.smoke
+
+See ``docs/regression_gating.md`` for the full lifecycle and YAML syntax.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.protocol import ProtocolError, unwrap_envelope, wrap_envelope
+from repro.core.store import ResultStore
+
+PASS, WARN, FAIL = "pass", "warn", "fail"
+_ORDER = {PASS: 0, WARN: 1, FAIL: 2}
+
+BASELINE_KIND = "baseline"
+VERDICT_KIND = "gate-verdict"
+
+# Confidence bars for the shared verdict policy (see ``classify``).
+FAIL_CONFIDENCE = 0.9
+WARN_CONFIDENCE = 0.5
+
+
+class GateError(ValueError):
+    pass
+
+
+def worst(statuses: Iterable[str]) -> str:
+    return max(statuses, key=_ORDER.__getitem__, default=PASS)
+
+
+def json_safe(obj):
+    """Recursively replace non-finite floats (a zero-baseline effect is
+    ±inf) with their string form, so persisted reports stay strict JSON —
+    ``json.dumps`` would otherwise emit the non-standard ``Infinity`` token
+    that jq / JSON.parse consumers reject."""
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return repr(obj)  # 'inf' / '-inf' / 'nan'
+    if isinstance(obj, dict):
+        return {k: json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [json_safe(v) for v in obj]
+    return obj
+
+
+# ---------------------------------------------------------------------------
+# Metric specification — direction + tolerance, the per-metric gate contract.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """What "worse" means for one metric.
+
+    ``direction="lower"`` guards lower-is-better metrics (step time, energy);
+    ``"higher"`` guards higher-is-better ones (throughput, MFU).
+    ``tolerance`` is the minimum relative shift considered meaningful — the
+    noise floor of the deployment, not a statistical parameter.
+    """
+
+    name: str
+    direction: str = "lower"
+    tolerance: float = 0.05
+
+    def __post_init__(self):
+        if self.direction not in ("lower", "higher"):
+            raise GateError(f"bad metric direction {self.direction!r} "
+                            "(want 'lower' or 'higher')")
+        if self.tolerance < 0:
+            raise GateError("tolerance must be >= 0")
+
+    @staticmethod
+    def parse(spec: Any, *, direction: str = "lower",
+              tolerance: float = 0.05) -> "MetricSpec":
+        """``"name"`` | ``"name:direction"`` | ``"name:direction:tolerance"``
+        — the compact per-metric form usable inside a YAML list."""
+        parts = str(spec).split(":")
+        name = parts[0]
+        if not name:
+            raise GateError(f"empty metric name in {spec!r}")
+        if len(parts) > 1 and parts[1]:
+            direction = parts[1]
+        if len(parts) > 2 and parts[2]:
+            tolerance = float(parts[2])
+        return MetricSpec(name, direction, tolerance)
+
+    def worse(self, candidate_stat: float, baseline_stat: float) -> float:
+        """Signed absolute shift in the 'worse' direction (+ = regression)."""
+        d = candidate_stat - baseline_stat
+        return d if self.direction == "lower" else -d
+
+    def effect(self, candidate_stat: float, baseline_stat: float) -> float:
+        """Signed relative shift (+ = regression); ±inf on a zero baseline."""
+        w = self.worse(candidate_stat, baseline_stat)
+        if baseline_stat == 0:
+            return 0.0 if w == 0 else math.copysign(math.inf, w)
+        return w / abs(baseline_stat)
+
+
+@dataclasses.dataclass
+class Verdict:
+    """Structured detector output — what a bool can never carry: how big the
+    shift is, how sure the detector is, and where the shift started."""
+
+    status: str
+    detector: str
+    metric: str
+    prefix: str
+    effect: float = 0.0        # signed relative shift, + = worse
+    confidence: float = 0.0    # 0..1
+    baseline_n: int = 0
+    candidate_n: int = 0
+    change_seq: Optional[int] = None  # store sequence that introduced the shift
+    detail: str = ""
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(doc: Dict[str, Any]) -> "Verdict":
+        known = {f.name for f in dataclasses.fields(Verdict)}
+        return Verdict(**{k: v for k, v in doc.items() if k in known})
+
+
+def classify(effect: float, confidence: float, spec: MetricSpec) -> str:
+    """Shared verdict policy: fail needs a meaningful effect AND high
+    confidence; either one alone is at most a warning.  This is what keeps
+    ultra-low-variance series (tiny sigma, huge z, microscopic effect) and
+    single noisy outliers (big effect, low confidence) from blocking CI."""
+    if effect >= spec.tolerance and confidence >= FAIL_CONFIDENCE:
+        return FAIL
+    if effect >= spec.tolerance and confidence >= WARN_CONFIDENCE:
+        return WARN
+    if confidence >= FAIL_CONFIDENCE and effect >= spec.tolerance / 2:
+        return WARN
+    return PASS
+
+
+# ---------------------------------------------------------------------------
+# Detectors
+# ---------------------------------------------------------------------------
+
+class Detector:
+    """Pluggable detector interface.  ``scans_history=True`` detectors are
+    fed the raw store history instead of the managed baseline window — they
+    localize shifts anywhere in the recent series, including ones that
+    landed between gate runs."""
+
+    name = "abstract"
+    scans_history = False
+
+    def verdict(
+        self,
+        baseline: Sequence[float],
+        candidate: Sequence[float],
+        spec: MetricSpec,
+        *,
+        prefix: str = "",
+        baseline_seqs: Optional[Sequence[int]] = None,
+        candidate_seqs: Optional[Sequence[int]] = None,
+    ) -> Verdict:
+        raise NotImplementedError
+
+    def _skip(self, spec: MetricSpec, prefix: str, nb: int, nc: int,
+              detail: str) -> Verdict:
+        return Verdict(PASS, self.name, spec.name, prefix,
+                       baseline_n=nb, candidate_n=nc, detail=detail)
+
+
+class MadZScoreDetector(Detector):
+    """Robust z-score of the candidate median against the baseline window's
+    median/MAD — the noise-aware upgrade of the seed's threshold check."""
+
+    name = "mad"
+
+    def __init__(self, z_threshold: float = 4.0):
+        self.z_threshold = max(1e-6, float(z_threshold))
+
+    def verdict(self, baseline, candidate, spec, *, prefix="",
+                baseline_seqs=None, candidate_seqs=None) -> Verdict:
+        base = np.asarray(baseline, dtype=np.float64)
+        cand = np.asarray(candidate, dtype=np.float64)
+        if base.size == 0 or cand.size == 0:
+            return self._skip(spec, prefix, base.size, cand.size, "empty window")
+        med = float(np.median(base))
+        mad = float(np.median(np.abs(base - med)))
+        # Sigma floor: an all-identical baseline must not turn measurement
+        # epsilon into an infinite z — the effect bar in classify() still
+        # guards, but the confidence should stay proportionate too.
+        sigma = max(1.4826 * mad, 1e-9 * max(abs(med), 1.0))
+        cmed = float(np.median(cand))
+        z = spec.worse(cmed, med) / sigma
+        confidence = min(1.0, max(0.0, z) / self.z_threshold)
+        effect = spec.effect(cmed, med)
+        return Verdict(
+            status=classify(effect, confidence, spec),
+            detector=self.name, metric=spec.name, prefix=prefix,
+            effect=effect, confidence=confidence,
+            baseline_n=int(base.size), candidate_n=int(cand.size),
+            detail=f"z={z:.2f}, median {med:.6g} -> {cmed:.6g}",
+        )
+
+
+class BootstrapDetector(Detector):
+    """Bootstrap confidence-interval comparison of candidate vs baseline
+    means.  Confidence is the bootstrap probability that the candidate is
+    worse at all; the effect bar supplies the practical-significance gate.
+    Deterministically seeded so CI verdicts are reproducible."""
+
+    name = "bootstrap"
+
+    def __init__(self, n_boot: int = 400, seed: int = 0):
+        self.n_boot = max(10, int(n_boot))
+        self.seed = int(seed)
+
+    def verdict(self, baseline, candidate, spec, *, prefix="",
+                baseline_seqs=None, candidate_seqs=None) -> Verdict:
+        base = np.asarray(baseline, dtype=np.float64)
+        cand = np.asarray(candidate, dtype=np.float64)
+        if base.size == 0 or cand.size == 0:
+            return self._skip(spec, prefix, base.size, cand.size, "empty window")
+        rng = np.random.default_rng(self.seed)
+        bm = rng.choice(base, (self.n_boot, base.size), replace=True).mean(axis=1)
+        cm = rng.choice(cand, (self.n_boot, cand.size), replace=True).mean(axis=1)
+        diff = cm - bm if spec.direction == "lower" else bm - cm
+        confidence = float(np.mean(diff > 0))
+        effect = spec.effect(float(cand.mean()), float(base.mean()))
+        lo, hi = np.percentile(diff, [2.5, 97.5])
+        return Verdict(
+            status=classify(effect, confidence, spec),
+            detector=self.name, metric=spec.name, prefix=prefix,
+            effect=effect, confidence=confidence,
+            baseline_n=int(base.size), candidate_n=int(cand.size),
+            detail=f"95% CI of worse-shift [{lo:.6g}, {hi:.6g}]",
+        )
+
+
+class CusumDetector(Detector):
+    """CUSUM change-point locator over the recent history series.
+
+    Unlike the window detectors it scans history+candidate jointly: the
+    cumulative-sum excursion finds *where* the mean shifted, a permutation
+    test (deterministically seeded) says how unlikely that excursion is
+    under exchangeability, and the verdict names the store sequence right
+    after the change point — the commit that introduced the regression.
+    """
+
+    name = "cusum"
+    scans_history = True
+
+    def __init__(self, n_permutations: int = 128, seed: int = 0):
+        self.n_permutations = max(20, int(n_permutations))
+        self.seed = int(seed)
+
+    def verdict(self, baseline, candidate, spec, *, prefix="",
+                baseline_seqs=None, candidate_seqs=None) -> Verdict:
+        x = np.concatenate([
+            np.asarray(baseline, dtype=np.float64),
+            np.asarray(candidate, dtype=np.float64),
+        ])
+        seqs = list(baseline_seqs or []) + list(candidate_seqs or [])
+        n = int(x.size)
+        if n < 4:
+            return self._skip(spec, prefix, len(baseline), len(candidate),
+                              "series too short for change-point analysis")
+        s = np.cumsum(x - x.mean())
+        k = int(np.argmax(np.abs(s)))  # shift lies between k and k+1
+        before, after = x[:k + 1], x[k + 1:]
+        if after.size == 0:
+            return self._skip(spec, prefix, len(baseline), len(candidate),
+                              "no post-change samples")
+        effect = spec.effect(float(after.mean()), float(before.mean()))
+        obs = float(s.max() - s.min())
+        rng = np.random.default_rng(self.seed)
+        perms = rng.permuted(np.tile(x, (self.n_permutations, 1)), axis=1)
+        sp = np.cumsum(perms - x.mean(), axis=1)
+        confidence = float(np.mean(sp.max(axis=1) - sp.min(axis=1) < obs))
+        change_seq = seqs[k + 1] if len(seqs) == n else None
+        return Verdict(
+            status=classify(effect, confidence, spec),
+            detector=self.name, metric=spec.name, prefix=prefix,
+            effect=effect, confidence=confidence,
+            baseline_n=len(baseline), candidate_n=len(candidate),
+            change_seq=change_seq,
+            detail=(f"shift after index {k}: mean "
+                    f"{float(before.mean()):.6g} -> {float(after.mean()):.6g}"),
+        )
+
+
+DETECTORS = {
+    MadZScoreDetector.name: MadZScoreDetector,
+    BootstrapDetector.name: BootstrapDetector,
+    CusumDetector.name: CusumDetector,
+}
+
+DEFAULT_DETECTORS = ("mad", "bootstrap", "cusum")
+
+
+def get_detector(name: str, **params) -> Detector:
+    try:
+        cls = DETECTORS[name]
+    except KeyError:
+        raise GateError(
+            f"unknown detector {name!r} (have {sorted(DETECTORS)})"
+        ) from None
+    return cls(**params)
+
+
+# ---------------------------------------------------------------------------
+# Baseline manager — promote / pin / expire, persisted as envelopes.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Baseline:
+    """Reference window for one (source prefix, metric)."""
+
+    metric: str
+    source_prefix: str
+    values: List[float]
+    seqs: List[int]          # store sequences the values came from
+    pinned: bool = False
+    commit: str = ""
+    expired: bool = False
+
+    def to_payload(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_payload(doc: Dict[str, Any]) -> "Baseline":
+        known = {f.name for f in dataclasses.fields(Baseline)}
+        return Baseline(**{k: v for k, v in doc.items() if k in known})
+
+
+class BaselineManager:
+    """Append-only baseline history in the result store, latest-wins.
+
+    Each state change (promote/pin/unpin/expire) appends one envelope report
+    under ``<baseline prefix>.<source prefix>`` with the metric name as the
+    report variant — so ``current`` is a single index-filtered ``latest``
+    and the full lifecycle stays auditable like any benchmark history.
+
+    * ``promote`` rolls green values into the window (no-op while pinned —
+      a pinned reference defends itself until explicitly released);
+    * ``pin`` freezes a known-good reference (by values, or the newest
+      ``last`` store points);
+    * ``expire`` drops the baseline; the next gate re-seeds from history.
+    """
+
+    def __init__(self, store: ResultStore, *, prefix: str = "baseline",
+                 window: int = 32):
+        self.store = store
+        self.prefix = prefix
+        self.window = max(1, int(window))
+
+    def storage_prefix(self, source_prefix: str) -> str:
+        return f"{self.prefix}.{source_prefix}"
+
+    def current(self, source_prefix: str, metric: str) -> Optional[Baseline]:
+        rep = self.store.latest(self.storage_prefix(source_prefix), variant=metric)
+        if rep is None:
+            return None
+        try:
+            kind, payload = unwrap_envelope(rep)
+        except ProtocolError:
+            return None
+        if kind != BASELINE_KIND:
+            return None
+        b = Baseline.from_payload(payload)
+        return None if b.expired else b
+
+    def _record(self, b: Baseline) -> Baseline:
+        rep = wrap_envelope(
+            BASELINE_KIND, b.to_payload(),
+            system="baseline-manager", source=b.source_prefix, variant=b.metric,
+        )
+        self.store.append(self.storage_prefix(b.source_prefix), rep)
+        return b
+
+    def promote(self, source_prefix: str, metric: str,
+                values: Sequence[float], seqs: Sequence[int],
+                commit: str = "") -> Baseline:
+        cur = self.current(source_prefix, metric)
+        if cur is not None and cur.pinned:
+            return cur
+        old_v = list(cur.values) if cur else []
+        old_s = list(cur.seqs) if cur else []
+        # A sequence already in the window is a re-judged point, not new
+        # evidence (a gate re-run over an unchanged store): skip it, or the
+        # window degenerates into copies of the newest candidate and MAD's
+        # sigma collapses.  Duplicates *within* one batch are legitimate —
+        # one report can carry several data entries at the same sequence.
+        seen = set(old_s)
+        fresh = [(float(v), int(s)) for v, s in zip(values, seqs)
+                 if s not in seen]
+        if not fresh and cur is not None:
+            return cur
+        merged_v = (old_v + [v for v, _ in fresh])[-self.window:]
+        merged_s = (old_s + [s for _, s in fresh])[-self.window:]
+        return self._record(Baseline(metric, source_prefix, merged_v, merged_s,
+                                     commit=commit))
+
+    def pin(self, source_prefix: str, metric: str, *,
+            values: Optional[Sequence[float]] = None,
+            seqs: Optional[Sequence[int]] = None,
+            last: Optional[int] = None, commit: str = "") -> Baseline:
+        if values is None and last is not None:
+            pairs = self.store.query_with_entries(source_prefix, last=None)
+            series = _series(pairs, metric)[-max(1, int(last)):]
+            if not series:
+                raise GateError(f"no {metric!r} history under {source_prefix!r}")
+            seqs = [s for s, _ in series]
+            values = [v for _, v in series]
+        if values is None:
+            cur = self.current(source_prefix, metric)
+            if cur is None:
+                raise GateError(
+                    f"no baseline for ({source_prefix!r}, {metric!r}) to pin; "
+                    "pass values or --last")
+            values, seqs = cur.values, cur.seqs
+        return self._record(Baseline(
+            metric, source_prefix,
+            [float(v) for v in values], [int(s) for s in (seqs or [])],
+            pinned=True, commit=commit,
+        ))
+
+    def unpin(self, source_prefix: str, metric: str) -> Baseline:
+        cur = self.current(source_prefix, metric)
+        if cur is None:
+            raise GateError(f"no baseline for ({source_prefix!r}, {metric!r})")
+        return self._record(dataclasses.replace(cur, pinned=False))
+
+    def expire(self, source_prefix: str, metric: str) -> Baseline:
+        return self._record(Baseline(metric, source_prefix, [], [], expired=True))
+
+    def metrics(self, source_prefix: str) -> List[str]:
+        """Metric names with any baseline history under a source prefix."""
+        reports = self.store.query(self.storage_prefix(source_prefix))
+        return sorted({r.experiment.variant for r in reports})
+
+
+# ---------------------------------------------------------------------------
+# The gate
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GateSpec:
+    """Declarative gate configuration (the pipeline component's inputs)."""
+
+    source_prefix: str
+    metrics: List[MetricSpec]
+    detectors: Tuple[str, ...] = DEFAULT_DETECTORS
+    window: int = 32          # baseline rolling-window size
+    candidate: int = 1        # newest points treated as "this run"
+    min_points: int = 3       # minimum baseline points before judging
+    history: int = 512        # store tail pulled for history-scanning detectors
+    update_baseline: bool = True
+    warn_only: bool = False   # report, but never block (staged rollout)
+    baseline_prefix: str = "baseline"
+    record_prefix: str = ""   # "" -> gate.<source_prefix>; "none" disables
+    detector_params: Dict[str, Dict[str, Any]] = dataclasses.field(
+        default_factory=dict)
+
+    @staticmethod
+    def from_inputs(inputs: Dict[str, Any]) -> "GateSpec":
+        inp = dict(inputs)
+        source = inp.get("source_prefix")
+        if not source:
+            raise GateError("gate component needs a source_prefix input")
+        direction = str(inp.get("direction", "lower"))
+        tolerance = float(inp.get("tolerance", 0.05))
+        raw = inp.get("metrics", ["step_time_s"])
+        if isinstance(raw, str):
+            raw = [raw]
+        metrics = [MetricSpec.parse(m, direction=direction, tolerance=tolerance)
+                   for m in raw]
+        dets = inp.get("detectors", list(DEFAULT_DETECTORS))
+        if isinstance(dets, str):
+            dets = [d.strip() for d in dets.split(",") if d.strip()]
+        for d in dets:
+            if d not in DETECTORS:
+                raise GateError(f"unknown detector {d!r} (have {sorted(DETECTORS)})")
+        # Detector tuning: nested {"mad": {"z_threshold": 6}} (JSON
+        # pipelines / library use) or flat dotted keys ``mad.z_threshold: 6``
+        # (the YAML subset has no nested mappings).
+        params: Dict[str, Dict[str, Any]] = {
+            k: dict(v) for k, v in inp.get("detector_params", {}).items()
+            if isinstance(v, dict)
+        }
+        for key, val in inp.items():
+            if "." in key:
+                det, _, param = key.partition(".")
+                if det in DETECTORS:
+                    params.setdefault(det, {})[param] = val
+        return GateSpec(
+            source_prefix=str(source),
+            metrics=metrics,
+            detectors=tuple(dets),
+            window=int(inp.get("window", 32)),
+            candidate=int(inp.get("candidate", 1)),
+            min_points=int(inp.get("min_points", 3)),
+            history=int(inp.get("history", 512)),
+            update_baseline=bool(inp.get("update_baseline", True)),
+            warn_only=bool(inp.get("warn_only", False)),
+            baseline_prefix=str(inp.get("baseline_prefix", "baseline")),
+            record_prefix=str(inp.get("prefix", inp.get("record_prefix", ""))),
+            detector_params=params,
+        )
+
+
+class RegressionGate:
+    """Runs every configured detector over every guarded metric and reduces
+    to one enforceable status; ``cicd --gate`` maps it to exit codes."""
+
+    def __init__(self, spec: GateSpec):
+        self.spec = spec
+
+    @staticmethod
+    def from_inputs(inputs: Dict[str, Any]) -> "RegressionGate":
+        return RegressionGate(GateSpec.from_inputs(inputs))
+
+    def run(self, store: ResultStore) -> Dict[str, Any]:
+        sp = self.spec
+        mgr = BaselineManager(store, prefix=sp.baseline_prefix, window=sp.window)
+        pairs = store.query_with_entries(sp.source_prefix, last=sp.history)
+        gates = [self._gate_metric(mgr, pairs, m) for m in sp.metrics]
+        status = worst(g["status"] for g in gates)
+        summary = {
+            "component": "gate",
+            "source_prefix": sp.source_prefix,
+            "status": status,
+            "gates": gates,
+        }
+        summary["markdown"] = gate_markdown([summary])
+        if sp.record_prefix != "none":
+            record_prefix = sp.record_prefix or f"gate.{sp.source_prefix}"
+            store.append(record_prefix, wrap_envelope(
+                VERDICT_KIND, json_safe({"status": status, "gates": gates}),
+                system="gate", source=sp.source_prefix,
+            ))
+        return summary
+
+    def _gate_metric(self, mgr: BaselineManager,
+                     pairs: Sequence[Tuple[Any, Any]],
+                     mspec: MetricSpec) -> Dict[str, Any]:
+        sp = self.spec
+        series = _series(pairs, mspec.name)
+        split = max(0, len(series) - max(0, sp.candidate))
+        hist, cand = series[:split], series[split:]
+        hist_vals = [v for _, v in hist]
+        hist_seqs = [s for s, _ in hist]
+        cvals = [v for _, v in cand]
+        cseqs = [s for s, _ in cand]
+        base = mgr.current(sp.source_prefix, mspec.name)
+        if base is not None:
+            bvals, bseqs, pinned = base.values, base.seqs, base.pinned
+        else:
+            bvals, bseqs, pinned = hist_vals[-sp.window:], hist_seqs[-sp.window:], False
+        out: Dict[str, Any] = {
+            "prefix": sp.source_prefix,
+            "metric": mspec.name,
+            "direction": mspec.direction,
+            "tolerance": mspec.tolerance,
+            "baseline": {
+                "n": len(bvals),
+                "pinned": pinned,
+                "median": float(np.median(bvals)) if bvals else None,
+            },
+            "candidate_seqs": cseqs,
+            "warn_only": sp.warn_only,
+        }
+        if len(bvals) < sp.min_points or not cvals:
+            verdicts = [Verdict(
+                PASS, "none", mspec.name, sp.source_prefix,
+                baseline_n=len(bvals), candidate_n=len(cvals),
+                detail=f"insufficient history to judge "
+                       f"(baseline {len(bvals)} < {sp.min_points} "
+                       f"or no candidate points)",
+            )]
+        else:
+            verdicts = []
+            for name in sp.detectors:
+                det = get_detector(name, **sp.detector_params.get(name, {}))
+                if det.scans_history:
+                    v = det.verdict(hist_vals, cvals, mspec,
+                                    prefix=sp.source_prefix,
+                                    baseline_seqs=hist_seqs,
+                                    candidate_seqs=cseqs)
+                else:
+                    v = det.verdict(bvals, cvals, mspec,
+                                    prefix=sp.source_prefix,
+                                    baseline_seqs=bseqs,
+                                    candidate_seqs=cseqs)
+                verdicts.append(v)
+        raw_status = worst(v.status for v in verdicts)
+        out["verdicts"] = [v.to_dict() for v in verdicts]
+        out["change_seq"] = next(
+            (v.change_seq for v in verdicts if v.change_seq is not None), None)
+        # Only green runs roll the baseline forward — a failed candidate must
+        # never become part of the reference it just violated.
+        if sp.update_baseline and raw_status != FAIL and cvals:
+            if base is None:
+                mgr.promote(sp.source_prefix, mspec.name,
+                            bvals + cvals, bseqs + cseqs)
+            else:
+                mgr.promote(sp.source_prefix, mspec.name, cvals, cseqs)
+        out["status"] = WARN if (sp.warn_only and raw_status == FAIL) else raw_status
+        return out
+
+
+def _series(pairs: Sequence[Tuple[Any, Any]], metric: str) -> List[Tuple[int, float]]:
+    """(store sequence, value) points for one metric, successful entries only
+    — failed runs must not poison baselines or trip detectors."""
+    out: List[Tuple[int, float]] = []
+    for entry, report in pairs:
+        for d in report.data:
+            if not d.success:
+                continue
+            if metric in d.metrics:
+                try:
+                    out.append((entry.seq, float(d.metrics[metric])))
+                except (TypeError, ValueError):
+                    continue
+            elif metric == "runtime":
+                out.append((entry.seq, float(d.runtime)))
+    return out
+
+
+_ICON = {PASS: "✅", WARN: "⚠️", FAIL: "❌"}
+
+
+def gate_markdown(summaries: Sequence[Dict[str, Any]]) -> str:
+    """PR-comment-ready summary of one or more gate component results."""
+    if not summaries:
+        return "## Benchmark regression gate\n\nNo gate components ran.\n"
+    lines = [
+        "## Benchmark regression gate",
+        "",
+        "| prefix | metric | status | effect | confidence | detector | change seq |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for s in summaries:
+        for g in s.get("gates", []):
+            vs = g.get("verdicts", [])
+            w = max(vs, key=lambda v: (_ORDER.get(v.get("status"), 0),
+                                       v.get("confidence", 0.0)),
+                    default={"effect": 0.0, "confidence": 0.0, "detector": "none"})
+            seq = g.get("change_seq")
+            lines.append(
+                f"| {g['prefix']} | {g['metric']} "
+                f"| {_ICON.get(g['status'], '')} {g['status']} "
+                f"| {w.get('effect', 0.0):+.1%} | {w.get('confidence', 0.0):.2f} "
+                f"| {w.get('detector', '')} | {seq if seq is not None else '—'} |"
+            )
+    lines += [
+        "",
+        "_effect: relative shift in the guarded direction (+ = worse); "
+        "confidence: detector certainty the shift is real; change seq: store "
+        "sequence that introduced it (CUSUM)._",
+    ]
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# CLI — baseline lifecycle + standalone gating (CI-scriptable, exit 0/3).
+# ---------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    import argparse
+    import json as _json
+
+    ap = argparse.ArgumentParser(prog="repro.core.regression",
+                                 description=__doc__)
+    ap.add_argument("--store", default="exacb_data")
+    ap.add_argument("--store-backend", default="dir", choices=("dir", "jsonl"))
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    show = sub.add_parser("show", help="print current baselines for a prefix")
+    show.add_argument("source_prefix")
+    show.add_argument("--metric", default=None)
+
+    pin = sub.add_parser("pin", help="pin a known-good reference")
+    pin.add_argument("source_prefix")
+    pin.add_argument("metric")
+    pin.add_argument("--last", type=int, default=None,
+                     help="pin the newest N store points (default: pin the "
+                          "current rolling baseline)")
+    pin.add_argument("--commit", default="")
+
+    unpin = sub.add_parser("unpin", help="release a pinned reference")
+    unpin.add_argument("source_prefix")
+    unpin.add_argument("metric")
+
+    exp = sub.add_parser("expire", help="drop a baseline (next gate re-seeds)")
+    exp.add_argument("source_prefix")
+    exp.add_argument("metric")
+
+    gate = sub.add_parser("gate", help="run the gate standalone (exit 0/3)")
+    gate.add_argument("source_prefix")
+    gate.add_argument("--metrics", default="step_time_s",
+                      help="comma-separated metric specs "
+                           "(name[:direction[:tolerance]])")
+    gate.add_argument("--direction", default="lower", choices=("lower", "higher"))
+    gate.add_argument("--tolerance", type=float, default=0.05)
+    gate.add_argument("--detectors", default=",".join(DEFAULT_DETECTORS))
+    gate.add_argument("--candidate", type=int, default=1)
+    gate.add_argument("--min-points", type=int, default=3)
+    gate.add_argument("--window", type=int, default=32)
+    gate.add_argument("--no-update-baseline", action="store_true")
+    gate.add_argument("--report", default=None,
+                      help="write the gate report JSON here")
+
+    args = ap.parse_args(argv)
+    store = ResultStore(args.store, backend=args.store_backend)
+    mgr = BaselineManager(store)
+
+    if args.cmd == "show":
+        metrics = [args.metric] if args.metric else mgr.metrics(args.source_prefix)
+        out = {}
+        for m in metrics:
+            b = mgr.current(args.source_prefix, m)
+            out[m] = b.to_payload() if b else None
+        print(_json.dumps(out, indent=2))
+        return 0
+    if args.cmd == "pin":
+        b = mgr.pin(args.source_prefix, args.metric, last=args.last,
+                    commit=args.commit)
+        print(_json.dumps(b.to_payload(), indent=2))
+        return 0
+    if args.cmd == "unpin":
+        b = mgr.unpin(args.source_prefix, args.metric)
+        print(_json.dumps(b.to_payload(), indent=2))
+        return 0
+    if args.cmd == "expire":
+        mgr.expire(args.source_prefix, args.metric)
+        print(f"expired baseline(s) for ({args.source_prefix}, {args.metric})")
+        return 0
+
+    # gate
+    summary = RegressionGate(GateSpec.from_inputs({
+        "source_prefix": args.source_prefix,
+        "metrics": [m.strip() for m in args.metrics.split(",") if m.strip()],
+        "direction": args.direction,
+        "tolerance": args.tolerance,
+        "detectors": args.detectors,
+        "candidate": args.candidate,
+        "min_points": args.min_points,
+        "window": args.window,
+        "update_baseline": not args.no_update_baseline,
+    })).run(store)
+    if args.report:
+        from pathlib import Path
+
+        Path(args.report).write_text(
+            _json.dumps(json_safe(summary), indent=2, default=str) + "\n")
+    print(summary["markdown"])
+    return 3 if summary["status"] == FAIL else 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -507,7 +507,7 @@ class ResultStore:
             self._cache[prefix] = (fp, index, parsed)
             return index, parsed
 
-    def query(
+    def query_with_entries(
         self,
         prefix: str,
         *,
@@ -516,18 +516,32 @@ class ResultStore:
         since: Optional[float] = None,
         until: Optional[float] = None,
         trusted_only: bool = False,
-    ) -> List[Report]:
+        last: Optional[int] = None,
+    ) -> List[Tuple[IndexEntry, Report]]:
+        """Like ``query`` but pairs each report with its manifest entry, so
+        consumers (regression gating, change-point naming) see the store
+        *sequence* a result landed at.
+
+        ``last=N`` keeps only the newest N matching entries — the slice
+        happens on the index before any record is fetched, so tailing a long
+        history parses O(N) reports, not O(history).
+        """
         index, parsed = self._indexed(prefix)
         wanted = [e for e in index if e.matches(
             variant=variant, system=system, since=since, until=until,
             trusted_only=trusted_only,
         )]
+        if last is not None:
+            wanted = wanted[-max(0, int(last)):] if last > 0 else []
         missing = [e for e in wanted if e.key not in parsed]
         if missing:
             fetched = self.backend.fetch(prefix, missing)
             with self._cache_lock:
                 parsed.update(fetched)
-        return [parsed[e.key] for e in wanted if e.key in parsed]
+        return [(e, parsed[e.key]) for e in wanted if e.key in parsed]
+
+    def query(self, prefix: str, **kw) -> List[Report]:
+        return [r for _, r in self.query_with_entries(prefix, **kw)]
 
     def latest(self, prefix: str, **kw) -> Optional[Report]:
         rs = self.query(prefix, **kw)

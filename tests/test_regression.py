@@ -1,0 +1,480 @@
+"""Tests for the regression-gating subsystem: detectors, baseline lifecycle,
+gate exit codes through the CI/CD layer, and the protocol envelope."""
+
+import json
+import math
+
+import pytest
+
+from repro.core import analysis
+from repro.core.cicd import component_dag, main as cicd_main, parse_pipeline_text
+from repro.core.protocol import (
+    DataEntry,
+    ProtocolError,
+    new_report,
+    unwrap_envelope,
+    wrap_envelope,
+)
+from repro.core.regression import (
+    FAIL,
+    PASS,
+    WARN,
+    BaselineManager,
+    GateError,
+    GateSpec,
+    MetricSpec,
+    RegressionGate,
+    Verdict,
+    get_detector,
+    worst,
+)
+from repro.core.store import ResultStore
+
+STABLE = [1.0, 1.02, 0.99, 1.01, 1.0, 0.98, 1.03, 1.0, 1.01, 0.99]
+
+
+def _append(store, prefix, value, metric="step_time_s", system="t",
+            success=True):
+    r = new_report(system=system, variant="v", usecase="u", pipeline_id="p")
+    r.data.append(DataEntry(success=success, runtime=max(value, 0.0),
+                            metrics={metric: value}))
+    store.append(prefix, r)
+
+
+def _seed(store, prefix, values, **kw):
+    for v in values:
+        _append(store, prefix, v, **kw)
+
+
+# ---------------------------------------------------------------------------
+# metric specs + verdicts
+# ---------------------------------------------------------------------------
+
+def test_metric_spec_parse():
+    m = MetricSpec.parse("step_time_s")
+    assert (m.name, m.direction, m.tolerance) == ("step_time_s", "lower", 0.05)
+    m = MetricSpec.parse("tokens_per_s:higher", tolerance=0.1)
+    assert (m.direction, m.tolerance) == ("higher", 0.1)
+    m = MetricSpec.parse("x:lower:0.2")
+    assert m.tolerance == 0.2
+    with pytest.raises(GateError):
+        MetricSpec.parse("x:sideways")
+
+
+def test_metric_spec_direction_and_effect():
+    lower = MetricSpec("t", "lower", 0.05)
+    higher = MetricSpec("tput", "higher", 0.05)
+    assert lower.effect(1.2, 1.0) == pytest.approx(0.2)    # slower = worse
+    assert higher.effect(1.2, 1.0) == pytest.approx(-0.2)  # faster = better
+    assert higher.effect(0.8, 1.0) == pytest.approx(0.2)
+    # Zero baseline: infinite relative change, not a silent zero.
+    assert lower.effect(1.0, 0.0) == math.inf
+    assert lower.effect(0.0, 0.0) == 0.0
+
+
+def test_verdict_round_trip():
+    v = Verdict(FAIL, "cusum", "step_time_s", "p", effect=0.5,
+                confidence=0.99, baseline_n=10, candidate_n=2,
+                change_seq=12, detail="d")
+    doc = json.loads(json.dumps(v.to_dict()))
+    assert Verdict.from_dict(doc) == v
+    # Unknown keys from a future schema are tolerated.
+    doc["novel_field"] = 1
+    assert Verdict.from_dict(doc) == v
+
+
+def test_worst_ordering():
+    assert worst([]) == PASS
+    assert worst([PASS, WARN, PASS]) == WARN
+    assert worst([WARN, FAIL, PASS]) == FAIL
+
+
+# ---------------------------------------------------------------------------
+# detectors
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["mad", "bootstrap", "cusum"])
+def test_detectors_pass_on_stable(name):
+    det = get_detector(name)
+    v = det.verdict(STABLE, [1.0, 1.01], MetricSpec("step_time_s"),
+                    baseline_seqs=list(range(10)), candidate_seqs=[10, 11])
+    assert v.status == PASS, v
+
+
+@pytest.mark.parametrize("name", ["mad", "bootstrap"])
+def test_window_detectors_fail_on_slowdown(name):
+    det = get_detector(name)
+    v = det.verdict(STABLE, [2.0, 2.1], MetricSpec("step_time_s"))
+    assert v.status == FAIL
+    assert v.effect > 0.5 and v.confidence >= 0.9
+
+
+def test_cusum_localizes_change_point():
+    det = get_detector("cusum")
+    series = STABLE + STABLE + [5.0] * 6
+    v = det.verdict(series[:-2], series[-2:], MetricSpec("step_time_s"),
+                    baseline_seqs=list(range(len(series) - 2)),
+                    candidate_seqs=[len(series) - 2, len(series) - 1])
+    assert v.status == FAIL
+    assert v.change_seq == 20  # first slow point
+    assert v.effect > 1.0
+
+
+def test_higher_is_better_direction():
+    spec = MetricSpec("tokens_per_s", "higher", 0.05)
+    det = get_detector("mad")
+    drop = det.verdict([100.0] * 8, [50.0], spec)
+    rise = det.verdict([100.0] * 8, [200.0], spec)
+    assert drop.status == FAIL and drop.effect == pytest.approx(0.5)
+    assert rise.status == PASS and rise.effect < 0
+
+
+def test_detectors_are_deterministic():
+    for name in ("bootstrap", "cusum"):
+        det = get_detector(name)
+        a = det.verdict(STABLE, [1.5], MetricSpec("m"))
+        b = get_detector(name).verdict(STABLE, [1.5], MetricSpec("m"))
+        assert a == b
+
+
+def test_unknown_detector_rejected():
+    with pytest.raises(GateError):
+        get_detector("ouija")
+    with pytest.raises(GateError):
+        GateSpec.from_inputs({"source_prefix": "p", "detectors": "ouija"})
+
+
+# ---------------------------------------------------------------------------
+# protocol envelope
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["dir", "jsonl"])
+def test_envelope_round_trip_through_store(tmp_path, backend):
+    store = ResultStore(tmp_path / backend, backend=backend)
+    payload = {"metric": "step_time_s", "values": [1.0, 2.0], "pinned": False,
+               "n": 2, "note": None}
+    rep = wrap_envelope("baseline", payload, system="mgr", source="src.p",
+                        variant="step_time_s")
+    store.append("baseline.src.p", rep)
+    got = store.latest("baseline.src.p", variant="step_time_s")
+    kind, back = unwrap_envelope(got)
+    assert kind == "baseline" and back == payload
+    # Finite numeric payload values are mirrored into metrics.
+    assert got.data[0].metrics == {"n": 2.0}
+
+
+def test_unwrap_rejects_plain_report():
+    r = new_report(system="s", variant="v")
+    with pytest.raises(ProtocolError):
+        unwrap_envelope(r)
+    with pytest.raises(ProtocolError):
+        wrap_envelope("k", "not-a-dict")  # type: ignore[arg-type]
+
+
+# ---------------------------------------------------------------------------
+# baseline manager lifecycle
+# ---------------------------------------------------------------------------
+
+def test_baseline_promote_rolls_window(tmp_path):
+    store = ResultStore(tmp_path)
+    mgr = BaselineManager(store, window=4)
+    mgr.promote("p", "m", [1.0, 2.0, 3.0], [0, 1, 2])
+    b = mgr.promote("p", "m", [4.0, 5.0], [3, 4])
+    assert b.values == [2.0, 3.0, 4.0, 5.0] and b.seqs == [1, 2, 3, 4]
+    assert mgr.current("p", "m").values == [2.0, 3.0, 4.0, 5.0]
+
+
+def test_baseline_promote_dedupes_rejudged_sequences(tmp_path):
+    store = ResultStore(tmp_path)
+    mgr = BaselineManager(store, window=8)
+    mgr.promote("p", "m", [1.0, 2.0], [0, 1])
+    # Re-promoting the same sequences (a gate re-run over an unchanged
+    # store) must be a no-op, not window-filling duplication.
+    b = mgr.promote("p", "m", [1.0, 2.0], [0, 1])
+    assert b.values == [1.0, 2.0] and b.seqs == [0, 1]
+    # Same-sequence duplicates within one batch (multi-entry report) stay.
+    b = mgr.promote("p", "m", [3.0, 3.5], [2, 2])
+    assert b.values == [1.0, 2.0, 3.0, 3.5] and b.seqs == [0, 1, 2, 2]
+
+
+def test_gate_rerun_on_unchanged_store_is_stable(tmp_path):
+    store = ResultStore(tmp_path)
+    _seed(store, "p", STABLE)
+    gate = _gate("p")
+    gate.run(store)
+    first = BaselineManager(store).current("p", "step_time_s")
+    for _ in range(5):
+        assert gate.run(store)["status"] == PASS
+    after = BaselineManager(store).current("p", "step_time_s")
+    assert (after.values, after.seqs) == (first.values, first.seqs)
+
+
+def test_baseline_pin_freezes_until_unpin(tmp_path):
+    store = ResultStore(tmp_path)
+    mgr = BaselineManager(store, window=8)
+    mgr.pin("p", "m", values=[1.0, 1.0], seqs=[0, 1], commit="good")
+    after = mgr.promote("p", "m", [9.0], [2])  # must not roll a pinned ref
+    assert after.pinned and after.values == [1.0, 1.0] and after.commit == "good"
+    mgr.unpin("p", "m")
+    rolled = mgr.promote("p", "m", [9.0], [2])
+    assert not rolled.pinned and rolled.values == [1.0, 1.0, 9.0]
+
+
+def test_baseline_expire_and_pin_from_history(tmp_path):
+    store = ResultStore(tmp_path)
+    mgr = BaselineManager(store)
+    _seed(store, "p", [1.0, 2.0, 3.0, 4.0])
+    b = mgr.pin("p", "step_time_s", last=2)
+    assert b.values == [3.0, 4.0] and b.seqs == [2, 3] and b.pinned
+    mgr.expire("p", "step_time_s")
+    assert mgr.current("p", "step_time_s") is None
+    with pytest.raises(GateError):
+        mgr.unpin("p", "step_time_s")
+
+
+# ---------------------------------------------------------------------------
+# the gate
+# ---------------------------------------------------------------------------
+
+def _gate(source, **kw):
+    inputs = {"source_prefix": source, "metrics": ["step_time_s"],
+              "candidate": 1, "tolerance": 0.2, "min_points": 4}
+    inputs.update(kw)
+    return RegressionGate.from_inputs(inputs)
+
+
+def test_gate_insufficient_history_passes(tmp_path):
+    store = ResultStore(tmp_path)
+    _seed(store, "p", [1.0, 1.0])
+    s = _gate("p").run(store)
+    assert s["status"] == PASS
+    assert "insufficient history" in s["gates"][0]["verdicts"][0]["detail"]
+
+
+def test_gate_ignores_failed_runs(tmp_path):
+    store = ResultStore(tmp_path)
+    _seed(store, "p", STABLE)
+    _append(store, "p", 50.0, success=False)  # crashed run, huge bogus value
+    _append(store, "p", 1.0)
+    s = _gate("p").run(store)
+    assert s["status"] == PASS
+
+
+def test_gate_fail_defends_baseline(tmp_path):
+    store = ResultStore(tmp_path)
+    _seed(store, "p", STABLE)
+    gate = _gate("p")
+    assert gate.run(store)["status"] == PASS
+    good = BaselineManager(store).current("p", "step_time_s")
+    _seed(store, "p", [5.0] * 4)
+    s = gate.run(store)
+    assert s["status"] == FAIL
+    assert s["gates"][0]["change_seq"] == 10  # first slow store sequence
+    # The failing candidate must NOT have been promoted into the baseline.
+    after = BaselineManager(store).current("p", "step_time_s")
+    assert after.values == good.values
+
+
+def test_gate_warn_only_demotes_fail(tmp_path):
+    store = ResultStore(tmp_path)
+    _seed(store, "p", STABLE + [5.0])
+    s = _gate("p", warn_only=True).run(store)
+    assert s["status"] == WARN
+    assert s["gates"][0]["warn_only"] is True
+
+
+def test_pinned_baseline_override(tmp_path):
+    """A pinned reference catches a slow drift that the rolling baseline
+    would have absorbed."""
+    store = ResultStore(tmp_path)
+    _seed(store, "p", [3.0] * 12)  # drifted state is all the store knows
+    rolling = _gate("p").run(store)
+    assert rolling["status"] == PASS  # rolling baseline: 3.0 looks normal
+    BaselineManager(store).pin("p", "step_time_s", values=[1.0] * 8,
+                               seqs=list(range(8)), commit="known-good")
+    pinned = _gate("p").run(store)
+    assert pinned["status"] == FAIL
+    assert pinned["gates"][0]["baseline"]["pinned"] is True
+    BaselineManager(store).expire("p", "step_time_s")
+    assert _gate("p").run(store)["status"] == PASS
+
+
+def test_gate_records_verdict_envelope(tmp_path):
+    store = ResultStore(tmp_path)
+    _seed(store, "p", STABLE)
+    _gate("p").run(store)
+    rec = store.latest("gate.p")
+    kind, payload = unwrap_envelope(rec)
+    assert kind == "gate-verdict" and payload["status"] == PASS
+
+
+# ---------------------------------------------------------------------------
+# CI/CD integration: DAG placement + exit codes
+# ---------------------------------------------------------------------------
+
+GATE_YML = """\
+include:
+  - component: gate@v1
+    inputs:
+      source_prefix: "t.gate"
+      metrics: [step_time_s]
+      candidate: 1
+      tolerance: 0.2
+      min_points: 4
+"""
+
+EXEC_PLUS_GATE_YML = """\
+include:
+  - component: execution@v3
+    inputs:
+      prefix: "t.gate"
+      arch: "a0"
+  - component: gate@v1
+    inputs:
+      source_prefix: "t.gate"
+      metrics: [step_time_s]
+"""
+
+
+def test_gate_waits_for_its_producers():
+    calls = parse_pipeline_text(EXEC_PLUS_GATE_YML)
+    assert [c.name for c in calls] == ["execution", "gate"]
+    assert component_dag(calls) == [[], [0]]
+
+
+@pytest.mark.parametrize("backend", ["dir", "jsonl"])
+def test_cicd_gate_exit_codes(tmp_path, capsys, backend):
+    """The acceptance path: identical history passes (exit 0), an appended
+    synthetic slowdown fails (exit 3) with the offending prefix/metric and
+    change-point sequence in gate_report.json."""
+    yml = tmp_path / "gate.yml"
+    yml.write_text(GATE_YML)
+    store_root = tmp_path / "store"
+    report = tmp_path / "gate_report.json"
+    store = ResultStore(store_root, backend=backend)
+    _seed(store, "t.gate", STABLE)
+
+    argv = [str(yml), "--store", str(store_root), "--store-backend", backend,
+            "--gate", "--gate-report", str(report)]
+    assert cicd_main(argv) == 0
+    doc = json.loads(report.read_text())
+    assert doc["status"] == PASS and doc["exit_code"] == 0
+    assert report.with_suffix(".md").exists()
+
+    _seed(store, "t.gate", [5.0] * 4)
+    assert cicd_main(argv) == 3
+    doc = json.loads(report.read_text())
+    assert doc["status"] == FAIL and doc["exit_code"] == 3
+    g = doc["gates"][0]
+    assert g["prefix"] == "t.gate" and g["metric"] == "step_time_s"
+    assert g["change_seq"] == 10  # first injected sequence
+    assert "fail" in report.with_suffix(".md").read_text()
+    capsys.readouterr()
+
+
+def test_gate_report_is_strict_json_on_zero_baseline(tmp_path, capsys):
+    """A zero-valued baseline metric yields an infinite effect; the written
+    report must still be strict JSON (no bare ``Infinity`` token)."""
+    yml = tmp_path / "gate.yml"
+    yml.write_text(GATE_YML)
+    store = ResultStore(tmp_path / "store")
+    _seed(store, "t.gate", [0.0] * 8 + [1.0] * 2)
+    report = tmp_path / "gate_report.json"
+    code = cicd_main([str(yml), "--store", str(tmp_path / "store"),
+                      "--gate", "--gate-report", str(report)])
+    def no_constants(s):
+        raise AssertionError(f"non-standard JSON token {s!r} in report")
+    doc = json.loads(report.read_text(), parse_constant=no_constants)
+    assert code == 3 and doc["status"] == FAIL
+    assert any(v["effect"] == "inf" for g in doc["gates"]
+               for v in g["verdicts"])
+    capsys.readouterr()
+
+
+def test_detector_params_from_inputs():
+    spec = GateSpec.from_inputs({
+        "source_prefix": "p",
+        "detector_params": {"bootstrap": {"n_boot": 50}},
+        "mad.z_threshold": 6.0,
+    })
+    assert spec.detector_params == {"bootstrap": {"n_boot": 50},
+                                    "mad": {"z_threshold": 6.0}}
+    # And dotted keys survive the YAML-subset parser.
+    calls = parse_pipeline_text(
+        "include:\n"
+        "  - component: gate@v1\n"
+        "    inputs:\n"
+        "      source_prefix: \"p\"\n"
+        "      mad.z_threshold: 6\n"
+    )
+    assert GateSpec.from_inputs(calls[0].inputs).detector_params == {
+        "mad": {"z_threshold": 6}}
+
+
+def test_cicd_without_gate_flag_keeps_seed_exit_semantics(tmp_path, capsys):
+    yml = tmp_path / "gate.yml"
+    yml.write_text(GATE_YML)
+    store = ResultStore(tmp_path / "store")
+    _seed(store, "t.gate", STABLE + [5.0] * 4)
+    # Gate component runs and reports fail, but without --gate the CLI keeps
+    # the seed's 0/1 semantics.
+    assert cicd_main([str(yml), "--store", str(tmp_path / "store")]) == 0
+    capsys.readouterr()
+
+
+def test_regression_cli_lifecycle(tmp_path, capsys):
+    from repro.core.regression import main as reg_main
+
+    store = str(tmp_path / "store")
+    s = ResultStore(store)
+    _seed(s, "p", STABLE)
+    assert reg_main(["--store", store, "gate", "p", "--tolerance", "0.2",
+                     "--min-points", "4"]) == 0
+    assert reg_main(["--store", store, "pin", "p", "step_time_s",
+                     "--last", "4", "--commit", "abc"]) == 0
+    assert reg_main(["--store", store, "show", "p"]) == 0
+    out = capsys.readouterr().out
+    assert '"pinned": true' in out and "abc" in out
+    _seed(s, "p", [5.0] * 4)
+    assert reg_main(["--store", store, "gate", "p", "--tolerance", "0.2",
+                     "--min-points", "4",
+                     "--report", str(tmp_path / "r.json")]) == 3
+    assert json.loads((tmp_path / "r.json").read_text())["status"] == FAIL
+    capsys.readouterr()
+
+
+# ---------------------------------------------------------------------------
+# store tail + analysis edge cases (satellites)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["dir", "jsonl"])
+def test_query_last_slices_index_before_fetch(tmp_path, backend):
+    store = ResultStore(tmp_path, backend=backend)
+    _seed(store, "p", [float(i) for i in range(10)])
+    pairs = store.query_with_entries("p", last=3)
+    assert [e.seq for e, _ in pairs] == [7, 8, 9]
+    assert [r.data[0].metrics["step_time_s"] for _, r in pairs] == [7.0, 8.0, 9.0]
+    assert store.query_with_entries("p", last=0) == []
+    assert len(store.query("p")) == 10
+
+
+def test_detect_regressions_edge_cases():
+    # Empty and singleton series must not raise.
+    assert analysis.detect_regressions([]) == []
+    assert analysis.detect_regressions([(0.0, 1.0)]) == []
+    # A degenerate window is clamped, not a crash: the doubled point may
+    # legitimately flag, but nothing raises and relatives stay well-defined.
+    regs = analysis.detect_regressions([(0.0, 1.0), (1.0, 2.0)], window=0)
+    assert all(math.isfinite(r.relative) for r in regs)
+
+
+def test_regression_relative_zero_baseline():
+    r = analysis.Regression(index=1, timestamp=0.0, value=1.0, baseline=0.0,
+                            sigma=1.0)
+    assert r.relative == math.inf
+    r = analysis.Regression(index=1, timestamp=0.0, value=-1.0, baseline=0.0,
+                            sigma=1.0)
+    assert r.relative == -math.inf
+    r = analysis.Regression(index=1, timestamp=0.0, value=0.0, baseline=0.0,
+                            sigma=1.0)
+    assert r.relative == 0.0
