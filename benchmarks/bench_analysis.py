@@ -1,0 +1,212 @@
+"""Columnar analysis-plane benchmark: warm gate + time-series + campaign
+analysis over a multi-thousand-report history, columnar vs. report-object.
+
+The report-object path re-materializes ``Report`` objects via the (warm,
+PR-1) query cache and walks Python dicts per metric — O(history) Python per
+call.  The columnar plane keeps the same data as contiguous numpy columns
+behind a fingerprint/watermark, so a warm call is a stat + mask (+ memo hit
+for derived artifacts) regardless of history length.  Asserted here:
+
+* warm ``RegressionGate.run`` (mad detector — the data-plane comparison;
+  the statistical cost of bootstrap/CUSUM is identical on both paths and
+  would only dilute the ratio) is **>= 10x** faster columnar;
+* warm ``PostProcessingOrchestrator.time_series`` is **>= 10x** faster
+  columnar;
+* both paths produce **identical** outputs (gate verdict JSON and
+  time-series/regression structures) before any timing starts.
+
+Also measured (reported, not asserted): machine-comparison, campaign-frame
+summary across prefixes, cold columnar build, and the incremental O(delta)
+refresh after a single append.
+
+    PYTHONPATH=src python -m benchmarks.bench_analysis
+"""
+
+from __future__ import annotations
+
+import json
+import tempfile
+import time
+from pathlib import Path
+from typing import Callable, Dict
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import analysis
+from repro.core.orchestrator import PostProcessingOrchestrator
+from repro.core.protocol import DataEntry, new_report
+from repro.core.regression import GateSpec, MetricSpec, RegressionGate, json_safe
+from repro.core.store import ResultStore
+
+N_REPORTS = 6000
+N_CAMPAIGN_PREFIXES = 12
+CAMPAIGN_REPORTS_EACH = 200
+WARM_REPEATS = 15
+SPEEDUP_FLOOR = 10.0
+PREFIX = "bench.analysis"
+
+
+def _seed(store: ResultStore, prefix: str, n: int, *, seed: int = 0) -> None:
+    rng = np.random.default_rng(seed)
+    t0 = 1.7e9
+    for i in range(n):
+        v = float(1.0 + rng.normal(0, 0.02))
+        r = new_report(system=f"sys{i % 3}", variant="v", usecase="u",
+                       pipeline_id=f"p{i}")
+        r.experiment.timestamp = t0 + i
+        r.data.append(DataEntry(
+            success=True, runtime=v, nodes=1 + i % 4,
+            metrics={"step_time_s": v, "throughput_tok_s": 1.0 / v},
+        ))
+        store.append(prefix, r)
+
+
+def _median_s(fn: Callable[[], object], repeats: int = WARM_REPEATS) -> float:
+    fn()  # warm
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def bench_gate(store: ResultStore, out: Dict[str, float]) -> None:
+    kw = dict(source_prefix=PREFIX, metrics=[MetricSpec("step_time_s")],
+              history=N_REPORTS, window=64, candidate=8, min_points=3,
+              update_baseline=False, record_prefix="none", detectors=("mad",))
+    col = RegressionGate(GateSpec(**kw, use_columnar=True))
+    obj = RegressionGate(GateSpec(**kw, use_columnar=False))
+    # Parity first: identical verdict JSON, then race.
+    a, b = json_safe(col.run(store)), json_safe(obj.run(store))
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True), \
+        "columnar vs report-object gate verdicts diverged"
+    col_s = _median_s(lambda: col.run(store))
+    obj_s = _median_s(lambda: obj.run(store))
+    speedup = obj_s / col_s
+    emit("analysis.gate_warm.report_objects", obj_s * 1e6, f"{N_REPORTS}reports")
+    emit("analysis.gate_warm.columnar", col_s * 1e6,
+         f"speedup={speedup:.1f}x floor={SPEEDUP_FLOOR:.0f}x")
+    out["gate_warm_obj_ms"] = obj_s * 1e3
+    out["gate_warm_col_ms"] = col_s * 1e3
+    out["gate_speedup"] = speedup
+    assert speedup >= SPEEDUP_FLOOR, (
+        f"warm columnar gate only {speedup:.1f}x faster "
+        f"(need >= {SPEEDUP_FLOOR:.0f}x)")
+
+    # Full default detector set, for context: bootstrap/CUSUM statistics
+    # dominate both paths equally, so the ratio is smaller by construction.
+    kwf = dict(kw, detectors=("mad", "bootstrap", "cusum"))
+    colf = RegressionGate(GateSpec(**kwf, use_columnar=True))
+    objf = RegressionGate(GateSpec(**kwf, use_columnar=False))
+    colf_s = _median_s(lambda: colf.run(store), repeats=5)
+    objf_s = _median_s(lambda: objf.run(store), repeats=5)
+    emit("analysis.gate_warm_all_detectors.columnar", colf_s * 1e6,
+         f"speedup={objf_s / colf_s:.1f}x (statistics-bound)")
+    out["gate_all_detectors_speedup"] = objf_s / colf_s
+
+
+def bench_time_series(store: ResultStore, out: Dict[str, float]) -> None:
+    pp_col = PostProcessingOrchestrator(store=store, inputs={"record": False})
+    pp_obj = PostProcessingOrchestrator(
+        store=store, inputs={"record": False, "columnar": False})
+    call_col = lambda: pp_col.time_series(  # noqa: E731
+        source_prefix=PREFIX, data_labels=["step_time_s"])
+    call_obj = lambda: pp_obj.time_series(  # noqa: E731
+        source_prefix=PREFIX, data_labels=["step_time_s"])
+    assert call_col() == call_obj(), \
+        "columnar vs report-object time-series outputs diverged"
+    col_s = _median_s(call_col)
+    obj_s = _median_s(call_obj)
+    speedup = obj_s / col_s
+    emit("analysis.timeseries_warm.report_objects", obj_s * 1e6,
+         f"{N_REPORTS}reports")
+    emit("analysis.timeseries_warm.columnar", col_s * 1e6,
+         f"speedup={speedup:.1f}x floor={SPEEDUP_FLOOR:.0f}x")
+    out["timeseries_warm_obj_ms"] = obj_s * 1e3
+    out["timeseries_warm_col_ms"] = col_s * 1e3
+    out["timeseries_speedup"] = speedup
+    assert speedup >= SPEEDUP_FLOOR, (
+        f"warm columnar time-series only {speedup:.1f}x faster "
+        f"(need >= {SPEEDUP_FLOOR:.0f}x)")
+
+    mc_col = _median_s(lambda: pp_col.machine_comparison(
+        selectors=[{"prefix": PREFIX}], metric="step_time_s"))
+    mc_obj = _median_s(lambda: pp_obj.machine_comparison(
+        selectors=[{"prefix": PREFIX}], metric="step_time_s"))
+    emit("analysis.machine_comparison_warm.columnar", mc_col * 1e6,
+         f"speedup={mc_obj / mc_col:.1f}x")
+    out["machine_comparison_speedup"] = mc_obj / mc_col
+
+
+def bench_campaign(tmp: Path, out: Dict[str, float]) -> None:
+    """CampaignFrame: one metric across many prefixes in one scan."""
+    store = ResultStore(tmp / "campaign", backend="jsonl")
+    for p in range(N_CAMPAIGN_PREFIXES):
+        _seed(store, f"app{p:02d}", CAMPAIGN_REPORTS_EACH, seed=p)
+    frame = store.columnar.frame()
+
+    def obj_summary():
+        return {
+            p: analysis.summary_stats([
+                float(d.metrics["step_time_s"])
+                for r in store.query(p) for d in r.data
+                if d.success and "step_time_s" in d.metrics
+            ])
+            for p in store.prefixes()
+        }
+
+    assert frame.summary("step_time_s") == obj_summary(), \
+        "campaign summary diverged from the report-object reduction"
+    col_s = _median_s(lambda: frame.summary("step_time_s"))
+    obj_s = _median_s(obj_summary)
+    emit("analysis.campaign_summary.columnar", col_s * 1e6,
+         f"{N_CAMPAIGN_PREFIXES}prefixes x {CAMPAIGN_REPORTS_EACH} "
+         f"speedup={obj_s / col_s:.1f}x")
+    out["campaign_prefixes"] = N_CAMPAIGN_PREFIXES
+    out["campaign_summary_speedup"] = obj_s / col_s
+
+
+def bench_incremental(store: ResultStore, out: Dict[str, float]) -> None:
+    """Cold build vs. the O(delta) refresh after a single append."""
+    stats0 = dict(store.columnar.stats)
+    r = new_report(system="sys0", variant="v", usecase="u", pipeline_id="tail")
+    r.data.append(DataEntry(success=True, runtime=1.0,
+                            metrics={"step_time_s": 1.0}))
+    store.append(PREFIX, r)
+    t0 = time.perf_counter()
+    store.columnar.table(PREFIX)
+    delta_s = time.perf_counter() - t0
+    stats1 = store.columnar.stats
+    assert stats1["incremental"] == stats0["incremental"] + 1, (stats0, stats1)
+    assert stats1["rebuilds"] == stats0["rebuilds"], "append forced a rebuild"
+    emit("analysis.columnar_refresh_after_append", delta_s * 1e6,
+         "1 new report (no rebuild)")
+    out["incremental_refresh_ms"] = delta_s * 1e3
+
+
+def run() -> Dict[str, float]:
+    out: Dict[str, float] = {"n_reports": N_REPORTS}
+    with tempfile.TemporaryDirectory(prefix="exacb_bench_analysis_") as tmp:
+        tmp = Path(tmp)
+        store = ResultStore(tmp / "store", backend="jsonl")
+        t0 = time.perf_counter()
+        _seed(store, PREFIX, N_REPORTS)
+        emit("analysis.seed_store", (time.perf_counter() - t0) * 1e6,
+             f"{N_REPORTS}reports jsonl")
+        t0 = time.perf_counter()
+        store.columnar.table(PREFIX)  # cold build (parses everything once)
+        emit("analysis.columnar_cold_build", (time.perf_counter() - t0) * 1e6,
+             f"{N_REPORTS}reports")
+        bench_gate(store, out)
+        bench_time_series(store, out)
+        bench_incremental(store, out)
+        bench_campaign(tmp, out)
+    return out
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    print(json.dumps(run(), indent=2))

@@ -1,21 +1,48 @@
 """Benchmark harness entry point — one bench per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines (plus a summary).  Heavy
-dry-run-derived benches read stored records under ``results/dryrun`` (the
-sweep produces them); measured micro-benches run live on this host.
+Prints ``name,us_per_call,derived`` CSV lines (plus a summary), and appends
+one machine-readable run entry to the ``BENCH_analysis.json`` trajectory
+(``--out``; default at the repo root) so the repo's performance history —
+per-bench wall-clock plus the derived numbers a bench reports, e.g. the
+columnar-vs-report-object speedups from ``bench_analysis`` — is tracked
+across PRs.  CI uploads the file as an artifact on every run.
 
-    PYTHONPATH=src python -m benchmarks.run
+Heavy dry-run-derived benches read stored records under ``results/dryrun``
+(the sweep produces them); measured micro-benches run live on this host.
+
+    PYTHONPATH=src python -m benchmarks.run [--out BENCH_analysis.json]
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 import traceback
+from pathlib import Path
+
+TRAJECTORY_SCHEMA = 1
 
 
-def main() -> None:
+def _load_trajectory(path: Path) -> dict:
+    if path.exists():
+        try:
+            doc = json.loads(path.read_text())
+            if doc.get("schema") == TRAJECTORY_SCHEMA and isinstance(
+                    doc.get("runs"), list):
+                return doc
+            print(f"warning: {path} has an unknown trajectory schema; "
+                  "restarting the perf history", file=sys.stderr)
+        except (json.JSONDecodeError, OSError) as e:
+            print(f"warning: could not read trajectory {path} ({e}); "
+                  "restarting the perf history", file=sys.stderr)
+    return {"schema": TRAJECTORY_SCHEMA, "runs": []}
+
+
+def main(argv=None) -> None:
     from benchmarks import (
+        bench_analysis,
         bench_energy,
         bench_feature_injection,
         bench_machine_comparison,
@@ -26,6 +53,14 @@ def main() -> None:
         bench_weak_scaling,
     )
 
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parents[1]
+                                         / "BENCH_analysis.json"),
+                    help="benchmark trajectory JSON (appended per run)")
+    ap.add_argument("--only", default=None,
+                    help="run a single bench by name (substring match)")
+    args = ap.parse_args(argv)
+
     benches = [
         ("fig3_4_timeseries", bench_timeseries.run),
         ("fig5_machine_comparison", bench_machine_comparison.run),
@@ -35,18 +70,47 @@ def main() -> None:
         ("roofline_table", bench_roofline.run),
         ("scheduler_and_store", bench_scheduler.run),
         ("regression_gate", bench_regression.run),
+        ("analysis_columnar", bench_analysis.run),
     ]
+    if args.only:
+        benches = [(n, f) for n, f in benches if args.only in n]
+
     print("name,us_per_call,derived")
     failures = 0
+    rows = []
     for name, fn in benches:
         t0 = time.perf_counter()
+        row = {"name": name, "ok": True, "derived": {}}
         try:
-            fn()
+            result = fn()
+            if isinstance(result, dict):
+                # A bench may return structured numbers (speedups, detected
+                # indices, ...) — they ride along in the trajectory.
+                row["derived"] = result
             print(f"{name}.total,{(time.perf_counter()-t0)*1e6:.0f},ok")
         except Exception as e:  # noqa: BLE001
             failures += 1
+            row["ok"] = False
+            row["error"] = f"{type(e).__name__}: {e}"
             print(f"{name}.total,0,FAILED {type(e).__name__}: {e}")
             traceback.print_exc(limit=4, file=sys.stderr)
+        row["wall_s"] = round(time.perf_counter() - t0, 3)
+        rows.append(row)
+
+    # Atomic replace: the trajectory is the cross-PR perf history — a crash
+    # mid-write (or a concurrent run) must never leave a truncated file the
+    # next run's loader would reset.
+    from repro.core.store import _atomic_write
+
+    out = Path(args.out)
+    doc = _load_trajectory(out)
+    doc["runs"].append({
+        "timestamp": time.time(),
+        "ok": failures == 0,
+        "benches": rows,
+    })
+    _atomic_write(out, json.dumps(doc, indent=2, default=str) + "\n")
+    print(f"trajectory: {out} ({len(doc['runs'])} runs)", file=sys.stderr)
     if failures:
         sys.exit(1)
 

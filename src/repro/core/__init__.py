@@ -1,10 +1,12 @@
 """exaCB core — the paper's primary contribution: protocol, result store,
 readiness levels, harness adapters, the three orchestrators, the campaign
-scheduler, analysis, and energy-launcher injection."""
+scheduler, the incremental columnar metrics plane, analysis, and
+energy-launcher injection."""
 
 from repro.core.harness import BenchmarkSpec, ExecHarness, Injections  # noqa: F401
 from repro.core.protocol import DataEntry, Experiment, Report, Reporter, new_report  # noqa: F401
 from repro.core.readiness import Readiness, classify  # noqa: F401
 from repro.core.scheduler import CampaignScheduler, Task, TaskResult  # noqa: F401
 from repro.core.store import DirBackend, JsonlBackend, ResultStore  # noqa: F401
+from repro.core.columnar import CampaignFrame, ColumnTable, ColumnarIndex, MetricSeries  # noqa: F401
 from repro.core.cicd import parse_pipeline_text, run_pipeline  # noqa: F401

@@ -15,7 +15,12 @@ This module is the runner for that interface: a pipeline document (JSON, or
 the built-in minimal YAML subset — no external deps) is parsed into component
 invocations and dispatched to the orchestrators.  Components are versioned
 (``execution@v3``); unknown majors are rejected, matching the paper's
-schema-evolution discipline.
+schema-evolution discipline.  Analysis components (``time-series``,
+``machine-comparison``, ``scalability``, ``gate``) read the store through
+the incremental columnar plane (``repro.core.columnar``) by default; pass
+``columnar: false`` in a component's inputs for the report-object reference
+path.  The cross-prefix ``campaign-report`` is columnar-native — the
+``CampaignFrame`` one-scan query *is* the feature, so it has no report path.
 
     PYTHONPATH=src python -m repro.core.cicd examples/pipelines/collection.yml
 """
@@ -46,6 +51,7 @@ SUPPORTED = {
     "machine-comparison": (3,),
     "scalability": (3,),
     "gate": (1,),
+    "campaign-report": (1,),
 }
 
 # ``cicd --gate`` exit code when a gate component reports a regression —
@@ -169,6 +175,8 @@ def _consumed_prefixes(call: ComponentCall) -> List[str]:
         for sel in inp.get("selector", []):
             out.append(sel if isinstance(sel, str) else sel.get("prefix"))
         return [p for p in out if p]
+    if call.name == "campaign-report":
+        return [p for p in inp.get("prefixes", []) if p]
     return []
 
 
@@ -178,17 +186,25 @@ def component_dag(calls: List[ComponentCall]) -> List[List[int]]:
     A post-processing component depends on every earlier component that
     produces a prefix it consumes; producers are mutually independent, so a
     collection's executions fan out across the worker pool while each
-    analysis still sees all of its upstream reports.
+    analysis still sees all of its upstream reports.  A ``campaign-report``
+    without an explicit ``prefixes`` input reads the *whole* store, so it
+    waits for every earlier producer.
     """
     produced: Dict[str, List[int]] = {}
+    producers: List[int] = []
     deps: List[List[int]] = []
     for i, call in enumerate(calls):
-        mine = sorted({j for p in _consumed_prefixes(call) for j in produced.get(p, [])})
+        if call.name == "campaign-report" and not call.inputs.get("prefixes"):
+            mine = list(producers)
+        else:
+            mine = sorted({j for p in _consumed_prefixes(call)
+                           for j in produced.get(p, [])})
         deps.append(mine)
         if call.name in _PRODUCERS:
             # Mirror ExecutionOrchestrator.prefix: no explicit input means
             # the cell records under "default" — still a produced prefix.
             produced.setdefault(call.inputs.get("prefix") or "default", []).append(i)
+            producers.append(i)
     return deps
 
 
@@ -270,6 +286,22 @@ def _run_component(
         return {"component": "scalability", "table": out["table"]}
     if call.name == "gate":
         return GateOrchestrator(store=store, inputs=inp).run()
+    if call.name == "campaign-report":
+        from repro.core import analysis
+        from repro.core.columnar import CampaignFrame
+
+        metric = inp.get("metric", "step_time_s")
+        frame = CampaignFrame(store, prefixes=inp.get("prefixes") or None)
+        table = frame.summary(metric)
+        return {
+            "component": "campaign-report",
+            "metric": metric,
+            "prefixes": len(table),
+            "table": table,
+            "watermarks": frame.watermarks(),
+            "markdown": analysis.to_markdown(
+                table, f"campaign summary: {metric}"),
+        }
     raise PipelineError(call.name)  # pragma: no cover — guarded by _split_component
 
 

@@ -1,0 +1,703 @@
+"""Incremental columnar metrics plane (paper §IV-F / §V-C at JUREAP scale).
+
+exaCB's analyses — regression gates, time-series, machine comparison,
+scaling, exports — all reduce to *per-(prefix, metric) series with a few
+dimension filters*.  Re-materializing whole ``Report`` objects and walking
+Python dicts per call makes every warm analysis O(history); this module
+keeps the same data as contiguous numpy columns so analysis cost is
+O(delta) on append and vectorized on read:
+
+* :class:`ColumnTable` — one row per stored ``DataEntry`` with value columns
+  (``seq``, ``timestamp``, ``runtime``, per-metric value+presence columns)
+  and dictionary-encoded dimension columns (system, variant, queue, job id,
+  pipeline id, injection config), plus ``success``/``trusted`` flags and
+  node/task/thread counts.
+* **Watermark + sidecar** — each table records the store index entries it
+  covers (``entry_seqs`` + a ``cover_hash`` over their ``seq:digest`` pairs)
+  and the backend fingerprint it was built at, and persists as one compact
+  ``.npz`` sidecar via the backend's ``sidecar_path`` hook.  On access:
+
+  - unchanged fingerprint        -> O(1) cache hit (memory or sidecar);
+  - appended-only transition with
+    an intact covered prefix     -> fetch + encode only the delta;
+  - anything else (prune, tamper,
+    torn sidecar)                -> one-shot rebuild.
+
+* :class:`ColumnarIndex` — the per-store manager that does the above,
+  reachable as ``ResultStore.columnar``.
+* :class:`MetricSeries` — the array-native query result consumed by the
+  vectorized analysis layer and the regression detectors.
+* :class:`CampaignFrame` — a cross-prefix view answering campaign-wide
+  questions ("metric X across all 70 prefixes") in one scan.
+
+Column extraction reproduces the report-object semantics *exactly* (runtime
+fallback for the ``runtime`` pseudo-metric, success filtering, last-N store
+entries, first-appearance grouping order), so every vectorized path is
+asserted byte-identical against the report path in ``tests/test_columnar.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+import threading
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.protocol import is_envelope
+from repro.core.store import IndexEntry, ResultStore
+
+COLUMNS_VERSION = 1
+SIDECAR_NAME = "columns.npz"
+
+# Dictionary-encoded dimension columns (int32 codes into a per-table vocab).
+DIMENSIONS = ("system", "variant", "queue", "job_id", "pipeline", "injection")
+
+_NUMERIC = ("seq", "timestamp", "runtime", "nodes", "tasks_per_node",
+            "threads_per_task")
+_FLAGS = ("success", "trusted", "envelope")
+
+
+def _cover_hash(entries: Sequence[IndexEntry]) -> str:
+    """Watermark integrity token: which store entries the columns cover.
+    Digests make the hash sensitive to record *content*, so a same-sequence
+    rewrite cannot masquerade as the covered history."""
+    h = hashlib.sha256()
+    for e in entries:
+        h.update(f"{e.seq}:{e.digest}\n".encode())
+    return h.hexdigest()
+
+
+def _tuplize(x):
+    return tuple(_tuplize(i) for i in x) if isinstance(x, list) else x
+
+
+@dataclasses.dataclass
+class MetricSeries:
+    """Array-native series for one metric: aligned ``(seq, timestamp,
+    value)`` columns, already filtered.  ``*_points`` materialize the exact
+    list shapes the report-object analysis functions produce."""
+
+    metric: str
+    seqs: np.ndarray        # int64
+    timestamps: np.ndarray  # float64
+    values: np.ndarray      # float64
+
+    @property
+    def n(self) -> int:
+        return int(self.values.size)
+
+    def sorted_by_time(self) -> "MetricSeries":
+        """Lexsorted by (timestamp, value) — the exact tuple ordering
+        ``sorted()`` gives ``analysis.to_series``, kept as arrays so the
+        vectorized detector can consume it without a list round-trip."""
+        order = np.lexsort((self.values, self.timestamps))
+        return MetricSeries(self.metric, self.seqs[order],
+                            self.timestamps[order], self.values[order])
+
+    def time_points(self) -> List[Tuple[float, float]]:
+        """``sorted((timestamp, value))`` — ``analysis.to_series`` parity."""
+        s = self.sorted_by_time()
+        return list(zip(s.timestamps.tolist(), s.values.tolist()))
+
+    def seq_points(self) -> List[Tuple[int, float]]:
+        """``(store sequence, value)`` in store order — gate-series parity."""
+        return list(zip(self.seqs.tolist(), self.values.tolist()))
+
+
+class ColumnTable:
+    """Immutable columnar snapshot of one prefix (see module docstring)."""
+
+    def __init__(
+        self,
+        prefix: str,
+        columns: Dict[str, np.ndarray],
+        codes: Dict[str, np.ndarray],
+        vocabs: Dict[str, List[str]],
+        metric_names: List[str],
+        metric_values: np.ndarray,   # (n_metrics, n_rows) float64
+        metric_present: np.ndarray,  # (n_metrics, n_rows) bool
+        extras: Dict[int, Dict[str, Any]],
+        entry_seqs: np.ndarray,      # int64, every covered index entry
+        cover_hash: str,
+        fingerprint: Tuple,
+    ):
+        self.prefix = prefix
+        self.columns = columns
+        self.codes = codes
+        self.vocabs = vocabs
+        self.metric_names = metric_names
+        self.metric_values = metric_values
+        self.metric_present = metric_present
+        self.extras = extras
+        self.entry_seqs = entry_seqs
+        self.cover_hash = cover_hash
+        self.fingerprint = fingerprint
+        self._metric_idx = {m: i for i, m in enumerate(metric_names)}
+        self._vocab_idx = {d: {v: i for i, v in enumerate(vocabs[d])}
+                           for d in DIMENSIONS}
+        # Derived-result memo: a table is immutable for its lifetime (any
+        # store change yields a *new* table), so consumers (time-series
+        # analysis, exports) key computed artifacts here and inherit exactly
+        # the right invalidation — warm unchanged analyses become O(1)
+        # lookups.  Treat cached values as frozen.
+        self.cache: Dict[Any, Any] = {}
+
+    # ---- shape ----
+    @property
+    def n_rows(self) -> int:
+        return int(self.columns["seq"].size)
+
+    @property
+    def n_entries(self) -> int:
+        """Covered store index entries — the incremental watermark count
+        (entries without data rows still advance it)."""
+        return int(self.entry_seqs.size)
+
+    @property
+    def watermark(self) -> int:
+        """Highest covered store sequence (-1 when empty)."""
+        return int(self.entry_seqs[-1]) if self.entry_seqs.size else -1
+
+    # ---- construction ----
+    @staticmethod
+    def build(prefix: str, pairs, index: Sequence[IndexEntry],
+              fingerprint: Tuple) -> "ColumnTable":
+        return _encode(prefix, pairs, index, fingerprint, base=None)
+
+    def extended(self, pairs, index: Sequence[IndexEntry],
+                 fingerprint: Tuple) -> "ColumnTable":
+        """New table = these columns + encoded delta rows; O(delta) encode
+        plus array concatenation."""
+        return _encode(self.prefix, pairs, index, fingerprint, base=self)
+
+    def with_fingerprint(self, fingerprint: Tuple) -> "ColumnTable":
+        """Same content observed under a newer fingerprint (e.g. a torn
+        trailing line grew the file without completing a record)."""
+        t = ColumnTable(
+            self.prefix, self.columns, self.codes, self.vocabs,
+            self.metric_names, self.metric_values, self.metric_present,
+            self.extras, self.entry_seqs, self.cover_hash, fingerprint,
+        )
+        t.cache = self.cache  # identical content — derived results survive
+        return t
+
+    # ---- metric access (report-object semantics, vectorized) ----
+    def _metric_column(self, metric: str, runtime_fallback: bool = True):
+        i = self._metric_idx.get(metric)
+        if i is None:
+            vals = np.zeros(self.n_rows, dtype=np.float64)
+            present = np.zeros(self.n_rows, dtype=bool)
+        else:
+            vals, present = self.metric_values[i], self.metric_present[i]
+        if runtime_fallback and metric == "runtime":
+            # Entries without an explicit "runtime" metric fall back to the
+            # Table-I runtime field — exactly `to_series`/`_series` behavior.
+            vals = np.where(present, vals, self.columns["runtime"])
+            present = np.ones(self.n_rows, dtype=bool)
+        return vals, present
+
+    def _dim_code(self, dim: str, value: str) -> int:
+        return self._vocab_idx[dim].get(value, -1)
+
+    def series(
+        self,
+        metric: str,
+        *,
+        success_only: bool = False,
+        trusted_only: bool = False,
+        runtime_fallback: bool = True,
+        include_envelopes: bool = True,
+        since: Optional[float] = None,
+        until: Optional[float] = None,
+        system: Optional[str] = None,
+        variant: Optional[str] = None,
+        pipelines: Optional[Sequence[str]] = None,
+        last_entries: Optional[int] = None,
+    ) -> MetricSeries:
+        """Filtered series for one metric, in store order.
+
+        ``last_entries=N`` keeps rows from the newest N covered *store
+        entries* (not points) — the columnar twin of
+        ``query_with_entries(last=N)``.  ``include_envelopes=False`` drops
+        rows carried by envelope reports (baseline/gate bookkeeping, which
+        mirror payload numerics into their metrics) — the report-path
+        analyses do not filter these, so parity consumers keep the default.
+        """
+        vals, mask = self._metric_column(metric, runtime_fallback)
+        mask = mask.copy()
+        if success_only:
+            mask &= self.columns["success"]
+        if trusted_only:
+            mask &= self.columns["trusted"]
+        if not include_envelopes:
+            mask &= ~self.columns["envelope"]
+        if since is not None:
+            mask &= self.columns["timestamp"] >= since
+        if until is not None:
+            mask &= self.columns["timestamp"] <= until
+        if system is not None:
+            mask &= self.codes["system"] == self._dim_code("system", system)
+        if variant is not None:
+            mask &= self.codes["variant"] == self._dim_code("variant", variant)
+        if pipelines is not None:
+            codes = [self._dim_code("pipeline", p) for p in pipelines]
+            mask &= np.isin(self.codes["pipeline"], codes)
+        if last_entries is not None:
+            last = int(last_entries)
+            if last <= 0:
+                mask &= False
+            elif self.entry_seqs.size > last:
+                mask &= self.columns["seq"] >= int(self.entry_seqs[-last])
+        return MetricSeries(metric, self.columns["seq"][mask],
+                            self.columns["timestamp"][mask], vals[mask])
+
+    def metrics(self) -> List[str]:
+        """Metric names with at least one stored value."""
+        return list(self.metric_names)
+
+    def system_groups(
+        self, metric: str, *, system: Optional[str] = None
+    ) -> List[Tuple[str, np.ndarray]]:
+        """(system, values) groups in first-appearance order — the exact
+        grouping ``analysis.compare_systems`` builds by dict insertion."""
+        key = ("system_groups", metric, system)
+        hit = self.cache.get(key)
+        if hit is not None:
+            return hit
+        vals, mask = self._metric_column(metric, runtime_fallback=True)
+        if system is not None:
+            mask = mask & (self.codes["system"] == self._dim_code("system", system))
+        codes = self.codes["system"][mask]
+        vals = vals[mask]
+        if codes.size == 0:
+            out: List[Tuple[str, np.ndarray]] = []
+        else:
+            uniq, first = np.unique(codes, return_index=True)
+            order = np.argsort(first, kind="stable")
+            out = [(self.vocabs["system"][int(c)], vals[codes == c])
+                   for c in uniq[order]]
+        self.cache[key] = out
+        return out
+
+    def scaling_points(self, metric: str) -> Dict[int, float]:
+        """{nodes: value} with last-write-wins per node count —
+        ``PostProcessingOrchestrator.scalability`` parity (no runtime
+        fallback: only entries carrying the metric participate)."""
+        vals, mask = self._metric_column(metric, runtime_fallback=False)
+        nodes = self.columns["nodes"][mask]
+        return dict(zip(nodes.tolist(), vals[mask].tolist()))
+
+    def injection_comparison(self, metric: str, knob: str) -> Dict[str, float]:
+        """Metric as a function of an injected knob value (Fig. 6).  The
+        injection config is dictionary-encoded per row, so the JSON decode
+        happens once per *unique* config, not once per report."""
+        vals, mask = self._metric_column(metric, runtime_fallback=False)
+        codes = self.codes["injection"][mask]
+        key_of: Dict[int, str] = {}
+        for c in np.unique(codes).tolist():
+            inj = json.loads(self.vocabs["injection"][c])
+            key_of[c] = str(inj.get("env", {}).get(
+                knob, inj.get("overrides", {}).get(knob, "default")))
+        out: Dict[str, float] = {}
+        for c, v in zip(codes.tolist(), vals[mask].tolist()):
+            out[key_of[c]] = v
+        return out
+
+    def job_records(self) -> List[Dict[str, Any]]:
+        """LLview-style job records (one per row) reconstructed from the
+        columns — no report is parsed.  Memoized per table (a fresh outer
+        list is returned each call; treat the records as frozen)."""
+        hit = self.cache.get("job_records")
+        if hit is not None:
+            return list(hit)
+        cols = self.columns
+        n = self.n_rows
+        jobs = [self.vocabs["job_id"][c] for c in self.codes["job_id"].tolist()]
+        systems = [self.vocabs["system"][c] for c in self.codes["system"].tolist()]
+        queues = [self.vocabs["queue"][c] for c in self.codes["queue"].tolist()]
+        nodes = cols["nodes"].tolist()
+        runtime = cols["runtime"].tolist()
+        success = cols["success"].tolist()
+        ts = cols["timestamp"].tolist()
+        mvals = [v.tolist() for v in self.metric_values]
+        mpres = [p.tolist() for p in self.metric_present]
+        out = []
+        for i in range(n):
+            metrics = {m: mvals[j][i]
+                       for j, m in enumerate(self.metric_names) if mpres[j][i]}
+            metrics.update(self.extras.get(i, {}))
+            out.append({
+                "jobid": jobs[i],
+                "system": systems[i],
+                "queue": queues[i],
+                "nodes": nodes[i],
+                "runtime": runtime[i],
+                "state": "COMPLETED" if success[i] else "FAILED",
+                "ts": ts[i],
+                "metrics": metrics,
+            })
+        self.cache["job_records"] = out
+        return list(out)
+
+    # ---- sidecar persistence ----
+    def save(self, path: Path) -> None:
+        header = {
+            "version": COLUMNS_VERSION,
+            "prefix": self.prefix,
+            "cover_hash": self.cover_hash,
+            "fingerprint": self.fingerprint,
+            "vocabs": self.vocabs,
+            "metrics": self.metric_names,
+            "extras": {str(k): v for k, v in self.extras.items()},
+        }
+        arrays: Dict[str, np.ndarray] = {
+            "header": np.array(json.dumps(header, default=str)),
+            "entry_seqs": self.entry_seqs,
+            "metric_values": self.metric_values,
+            "metric_present": self.metric_present,
+        }
+        for k, arr in self.columns.items():
+            arrays[f"col_{k}"] = arr
+        for d, arr in self.codes.items():
+            arrays[f"code_{d}"] = arr
+        # Binary streaming twin of store._atomic_write (np.savez needs the
+        # open file object, so the text helper cannot be reused directly).
+        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, **arrays)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    @staticmethod
+    def load(path: Path) -> Optional["ColumnTable"]:
+        """Parse a sidecar; any inconsistency returns None (-> rebuild)."""
+        try:
+            with np.load(path, allow_pickle=False) as z:
+                header = json.loads(str(z["header"]))
+                if header.get("version") != COLUMNS_VERSION:
+                    return None
+                columns = {k: z[f"col_{k}"] for k in _NUMERIC + _FLAGS}
+                codes = {d: z[f"code_{d}"] for d in DIMENSIONS}
+                return ColumnTable(
+                    prefix=str(header["prefix"]),
+                    columns=columns,
+                    codes=codes,
+                    vocabs={d: list(header["vocabs"][d]) for d in DIMENSIONS},
+                    metric_names=list(header["metrics"]),
+                    metric_values=z["metric_values"],
+                    metric_present=z["metric_present"],
+                    extras={int(k): v for k, v in header["extras"].items()},
+                    entry_seqs=z["entry_seqs"],
+                    cover_hash=str(header["cover_hash"]),
+                    fingerprint=_tuplize(header["fingerprint"]),
+                )
+        except Exception:  # noqa: BLE001 — a bad sidecar must only cost a rebuild
+            return None
+
+
+def _encode(prefix: str, pairs, index: Sequence[IndexEntry],
+            fingerprint: Tuple, base: Optional[ColumnTable]) -> ColumnTable:
+    """Encode (entry, report) pairs into columns, appended to ``base``."""
+    vocabs = ({d: list(base.vocabs[d]) for d in DIMENSIONS} if base
+              else {d: [] for d in DIMENSIONS})
+    vmaps = {d: {v: i for i, v in enumerate(vocabs[d])} for d in DIMENSIONS}
+    metric_names = list(base.metric_names) if base else []
+    midx = {m: i for i, m in enumerate(metric_names)}
+
+    def code(dim: str, value: str) -> int:
+        c = vmaps[dim].get(value)
+        if c is None:
+            c = vmaps[dim][value] = len(vocabs[dim])
+            vocabs[dim].append(value)
+        return c
+
+    cols: Dict[str, list] = {k: [] for k in _NUMERIC + _FLAGS}
+    codes: Dict[str, list] = {d: [] for d in DIMENSIONS}
+    scatter: Dict[str, List[Tuple[int, float]]] = {}
+    extras: Dict[int, Dict[str, Any]] = {}
+    base_rows = base.n_rows if base else 0
+    row = 0
+    for entry, report in pairs:
+        inj = json.dumps(report.parameter.get("injections", {}),
+                         sort_keys=True, default=str)
+        for d in report.data:
+            cols["seq"].append(entry.seq)
+            cols["timestamp"].append(report.experiment.timestamp)
+            cols["runtime"].append(d.runtime)
+            cols["nodes"].append(d.nodes)
+            cols["tasks_per_node"].append(d.tasks_per_node)
+            cols["threads_per_task"].append(d.threads_per_task)
+            cols["success"].append(bool(d.success))
+            cols["trusted"].append(bool(report.reporter.chain_of_trust))
+            cols["envelope"].append(is_envelope(report))
+            codes["system"].append(code("system", report.experiment.system))
+            codes["variant"].append(code("variant", report.experiment.variant))
+            codes["queue"].append(code("queue", d.queue))
+            codes["job_id"].append(code("job_id", d.job_id))
+            codes["pipeline"].append(code("pipeline", report.reporter.pipeline_id))
+            codes["injection"].append(code("injection", inj))
+            for k, v in d.metrics.items():
+                try:
+                    fv = float(v)
+                except (TypeError, ValueError):
+                    # Non-numeric metric: preserved verbatim in the sparse
+                    # extras map so job_records stays lossless.
+                    extras.setdefault(base_rows + row, {})[k] = v
+                    continue
+                if type(v) is not float:
+                    # int/bool/str-numeric: the float64 column serves the
+                    # analyses, but the original typed value also rides in
+                    # extras so exports round-trip exactly (5 stays 5, not
+                    # 5.0).
+                    extras.setdefault(base_rows + row, {})[k] = v
+                if k not in midx:
+                    midx[k] = len(metric_names)
+                    metric_names.append(k)
+                scatter.setdefault(k, []).append((row, fv))
+            row += 1
+
+    n_new = row
+    new_cols = {
+        "seq": np.asarray(cols["seq"], dtype=np.int64),
+        "timestamp": np.asarray(cols["timestamp"], dtype=np.float64),
+        "runtime": np.asarray(cols["runtime"], dtype=np.float64),
+        "nodes": np.asarray(cols["nodes"], dtype=np.int64),
+        "tasks_per_node": np.asarray(cols["tasks_per_node"], dtype=np.int64),
+        "threads_per_task": np.asarray(cols["threads_per_task"], dtype=np.int64),
+        "success": np.asarray(cols["success"], dtype=bool),
+        "trusted": np.asarray(cols["trusted"], dtype=bool),
+        "envelope": np.asarray(cols["envelope"], dtype=bool),
+    }
+    new_codes = {d: np.asarray(codes[d], dtype=np.int32) for d in DIMENSIONS}
+    new_vals = np.zeros((len(metric_names), n_new), dtype=np.float64)
+    new_pres = np.zeros((len(metric_names), n_new), dtype=bool)
+    for m, hits in scatter.items():
+        i = midx[m]
+        rows = np.fromiter((r for r, _ in hits), dtype=np.int64, count=len(hits))
+        new_vals[i, rows] = np.fromiter((v for _, v in hits), dtype=np.float64,
+                                        count=len(hits))
+        new_pres[i, rows] = True
+
+    if base is not None:
+        out_cols = {k: np.concatenate([base.columns[k], new_cols[k]])
+                    for k in new_cols}
+        out_codes = {d: np.concatenate([base.codes[d], new_codes[d]])
+                     for d in DIMENSIONS}
+        old_m = len(base.metric_names)
+        old_vals, old_pres = base.metric_values, base.metric_present
+        if len(metric_names) > old_m:  # metrics first seen in the delta
+            pad = (len(metric_names) - old_m, base_rows)
+            old_vals = np.concatenate([old_vals, np.zeros(pad, np.float64)])
+            old_pres = np.concatenate([old_pres, np.zeros(pad, bool)])
+        metric_values = np.concatenate([old_vals, new_vals], axis=1)
+        metric_present = np.concatenate([old_pres, new_pres], axis=1)
+        extras = {**base.extras, **extras}
+    else:
+        out_cols, out_codes = new_cols, new_codes
+        metric_values, metric_present = new_vals, new_pres
+
+    return ColumnTable(
+        prefix=prefix,
+        columns=out_cols,
+        codes=out_codes,
+        vocabs=vocabs,
+        metric_names=metric_names,
+        metric_values=metric_values,
+        metric_present=metric_present,
+        extras=extras,
+        entry_seqs=np.asarray([e.seq for e in index], dtype=np.int64),
+        cover_hash=_cover_hash(index),
+        fingerprint=fingerprint,
+    )
+
+
+class ColumnarIndex:
+    """Per-store manager of incremental column tables (``store.columnar``).
+
+    Thread-safe; ``stats`` counts cache behavior so tests (and operators)
+    can assert the watermark semantics: an append extends, an unchanged
+    fingerprint hits, a prune/mutation rebuilds exactly once.
+    """
+
+    # Persist an extended table only once this many entries have accumulated
+    # past the last written sidecar: rewriting the .npz is O(history), so a
+    # 1-row append must not pay full-history disk I/O on every refresh.  The
+    # in-memory table is always current; a lagging sidecar just means the
+    # next cold start does one small incremental extend from its watermark.
+    SAVE_EVERY = 64
+
+    def __init__(self, store: ResultStore):
+        self.store = store
+        self._mem: Dict[str, ColumnTable] = {}
+        self._persisted: Dict[str, int] = {}  # prefix -> n_entries on disk
+        self._locks: Dict[str, threading.Lock] = {}
+        self._guard = threading.Lock()
+        self.stats = {"hits": 0, "incremental": 0, "rebuilds": 0,
+                      "sidecar_loads": 0, "sidecar_saves": 0}
+
+    def _prefix_lock(self, prefix: str) -> threading.Lock:
+        with self._guard:
+            return self._locks.setdefault(prefix, threading.Lock())
+
+    def _sidecar(self, prefix: str) -> Path:
+        return self.store.backend.sidecar_path(prefix, SIDECAR_NAME)
+
+    def table(self, prefix: str) -> ColumnTable:
+        """The current column table for one prefix (hit / extend / rebuild
+        per the module docstring)."""
+        backend = self.store.backend
+        fp = backend.fingerprint(prefix)
+        with self._guard:
+            mem = self._mem.get(prefix)
+        if mem is not None and mem.fingerprint == fp:
+            self.stats["hits"] += 1
+            return mem
+        with self._prefix_lock(prefix):
+            with self._guard:
+                mem = self._mem.get(prefix)
+            fp = backend.fingerprint(prefix)
+            if mem is not None and mem.fingerprint == fp:
+                self.stats["hits"] += 1
+                return mem
+            base = mem
+            if base is None:
+                base = ColumnTable.load(self._sidecar(prefix))
+                if base is not None:
+                    self.stats["sidecar_loads"] += 1
+                    self._persisted[prefix] = base.n_entries
+            table = persist = None
+            if base is not None and base.fingerprint == fp:
+                table = base  # sidecar written by a finished writer — trust it
+            index = self.store.index(prefix) if table is None else None
+            if (table is None and base is not None
+                    and base.n_entries <= len(index)
+                    and backend.appended_only(base.fingerprint, fp)
+                    and _cover_hash(index[:base.n_entries]) == base.cover_hash):
+                fresh = index[base.n_entries:]
+                if fresh:
+                    pairs = self.store.fetch_entries(prefix, fresh)
+                    table = base.extended(pairs, index, fp)
+                    self.stats["incremental"] += 1
+                    # Deferred persistence (see SAVE_EVERY).
+                    behind = table.n_entries - self._persisted.get(prefix, 0)
+                    if behind >= self.SAVE_EVERY:
+                        persist = table
+                else:
+                    table = base.with_fingerprint(fp)
+            if table is None:
+                pairs = self.store.fetch_entries(prefix, index)
+                table = persist = ColumnTable.build(prefix, pairs, index, fp)
+                self.stats["rebuilds"] += 1
+            # Empty tables are not persisted: a query for a prefix that was
+            # never written must not materialize backend state for it.
+            if persist is not None and persist.n_entries:
+                try:
+                    self.save(persist)
+                    self._persisted[prefix] = persist.n_entries
+                    self.stats["sidecar_saves"] += 1
+                except OSError:
+                    pass  # read-only deployment: memory cache still serves
+            with self._guard:
+                self._mem[prefix] = table
+            return table
+
+    def save(self, table: ColumnTable) -> None:
+        path = self._sidecar(table.prefix)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        table.save(path)
+
+    def flush(self, prefix: Optional[str] = None) -> None:
+        """Force-persist in-memory tables whose sidecar lags (deferred by
+        ``SAVE_EVERY``) — e.g. before process shutdown."""
+        with self._guard:
+            tables = [t for p, t in self._mem.items()
+                      if prefix is None or p == prefix]
+        for t in tables:
+            if t.n_entries and self._persisted.get(t.prefix, 0) != t.n_entries:
+                self.save(t)
+                self._persisted[t.prefix] = t.n_entries
+                self.stats["sidecar_saves"] += 1
+
+    def series(self, prefix: str, metric: str, **kw) -> MetricSeries:
+        return self.table(prefix).series(metric, **kw)
+
+    def frame(self, prefixes: Optional[Sequence[str]] = None) -> "CampaignFrame":
+        return CampaignFrame(self.store, prefixes=prefixes)
+
+
+class CampaignFrame:
+    """Cross-prefix columnar view (paper §IV-F: system-wide analysis over
+    the full JUREAP collection).  One scan touches each prefix's column
+    table exactly once; warm calls are pure fingerprint checks."""
+
+    def __init__(self, store: ResultStore,
+                 prefixes: Optional[Sequence[str]] = None):
+        self.store = store
+        self._prefixes = list(prefixes) if prefixes is not None else None
+
+    def prefixes(self) -> List[str]:
+        if self._prefixes is not None:
+            return list(self._prefixes)
+        return self.store.prefixes()
+
+    def tables(self) -> Dict[str, ColumnTable]:
+        return {p: self.store.columnar.table(p) for p in self.prefixes()}
+
+    def series(self, metric: str, *, include_envelopes: bool = False,
+               **kw) -> Dict[str, MetricSeries]:
+        """{prefix: series} for every prefix that has any matching points.
+
+        Unlike the single-prefix parity paths, campaign-wide queries skip
+        envelope rows by default: a default (all-prefix) frame sweeps the
+        baseline/gate bookkeeping prefixes too, and their envelope rows
+        (runtime 0.0, mirrored payload numerics) would otherwise pollute
+        campaign summaries of e.g. ``runtime``.
+        """
+        out = {}
+        for p, t in self.tables().items():
+            s = t.series(metric, include_envelopes=include_envelopes, **kw)
+            if s.n:
+                out[p] = s
+        return out
+
+    def summary(self, metric: str, *, success_only: bool = True,
+                **kw) -> Dict[str, Dict[str, float]]:
+        """Per-prefix summary statistics of one metric across the campaign —
+        the 'metric X across all 70 prefixes' query as one vectorized pass
+        (envelope bookkeeping rows excluded; see ``series``)."""
+        from repro.core import analysis
+
+        return {p: analysis.summary_stats(s.values)
+                for p, s in self.series(metric, success_only=success_only,
+                                        **kw).items()}
+
+    def compare_systems(self, selectors: Sequence[Dict[str, str]],
+                        metric: str) -> Dict[str, Dict[str, float]]:
+        """``analysis.compare_systems`` over many prefixes without report
+        objects; selector order and first-appearance grouping match the
+        report path exactly."""
+        from repro.core import analysis
+
+        groups: Dict[str, List[np.ndarray]] = {}
+        for sel in selectors:
+            t = self.store.columnar.table(sel["prefix"])
+            for sysname, arr in t.system_groups(metric,
+                                                system=sel.get("system")):
+                groups.setdefault(sysname, []).append(arr)
+        return {s: analysis.summary_stats(np.concatenate(arrs))
+                for s, arrs in groups.items()}
+
+    def watermarks(self) -> Dict[str, int]:
+        """Per-prefix covered store sequence — campaign freshness at a
+        glance."""
+        return {p: t.watermark for p, t in self.tables().items()}

@@ -2,15 +2,23 @@
 exported to external monitoring and visualization systems, such as Grafana
 or LLview").
 
-Two exporters over the result store:
+Exporters over the result store, all served by the incremental columnar
+plane (``store.columnar``): one cached column-table fetch per prefix feeds
+every exporter, so a combined export (``write_exports``) no longer issues
+independent full ``store.query()`` scans per format — warm exports parse no
+report at all.
 
 * ``grafana_table`` — Grafana's simple-JSON table datasource format
   (columns + rows) for one metric over one prefix.
 * ``llview_jobs``  — LLview-style job-records list (one record per data
-  entry with the Table-I fields + metrics).
+  entry with the Table-I fields + metrics), reconstructed from columns.
+* ``campaign_table`` — per-prefix summary of one metric across the whole
+  campaign (a :class:`repro.core.columnar.CampaignFrame` in one scan).
 
 Plus ``ascii_timeseries``: a dependency-free terminal sparkline/plot used by
-the examples and the post-processing reports (the paper's Figs. 3/4 as text).
+the examples and the post-processing reports (the paper's Figs. 3/4 as
+text), and ``ascii_timeseries_report`` which renders a stored prefix with
+regression flags straight from the columnar series.
 """
 
 from __future__ import annotations
@@ -20,14 +28,12 @@ import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import analysis
+from repro.core.columnar import CampaignFrame
 from repro.core.store import ResultStore
 
 
-def grafana_table(
-    store: ResultStore, prefix: str, metric: str, *, since: Optional[float] = None
-) -> Dict[str, Any]:
-    reports = store.query(prefix, since=since)
-    series = analysis.to_series(reports, metric)
+def _grafana_payload(metric: str,
+                     series: Sequence[Tuple[float, float]]) -> Dict[str, Any]:
     return {
         "columns": [
             {"text": "Time", "type": "time"},
@@ -38,21 +44,39 @@ def grafana_table(
     }
 
 
+def grafana_table(
+    store: ResultStore, prefix: str, metric: str, *, since: Optional[float] = None
+) -> Dict[str, Any]:
+    return _grafana_payload(
+        metric,
+        store.columnar.table(prefix).series(metric, since=since).time_points(),
+    )
+
+
 def llview_jobs(store: ResultStore, prefix: str) -> List[Dict[str, Any]]:
-    out = []
-    for r in store.query(prefix):
-        for d in r.data:
-            out.append({
-                "jobid": d.job_id,
-                "system": r.experiment.system,
-                "queue": d.queue,
-                "nodes": d.nodes,
-                "runtime": d.runtime,
-                "state": "COMPLETED" if d.success else "FAILED",
-                "ts": r.experiment.timestamp,
-                "metrics": dict(d.metrics),
-            })
-    return out
+    """LLview job records for one prefix.
+
+    The records are memoized on the columnar table (the outer list is fresh
+    per call, the record dicts are shared) — treat them as read-only; copy
+    before mutating.
+    """
+    return store.columnar.table(prefix).job_records()
+
+
+def campaign_table(
+    store: ResultStore, metric: str, *, prefixes: Optional[Sequence[str]] = None
+) -> Dict[str, Any]:
+    """Campaign-wide export: one metric summarized over every prefix (the
+    paper's 70-application JUREAP view) in a single columnar scan."""
+    frame = CampaignFrame(store, prefixes=prefixes)
+    table = frame.summary(metric)
+    return {
+        "metric": metric,
+        "prefixes": sorted(table),
+        "table": table,
+        "watermarks": frame.watermarks(),
+        "generated_at": time.time(),
+    }
 
 
 def write_exports(store: ResultStore, prefix: str, metric: str, outdir) -> Dict[str, str]:
@@ -60,11 +84,20 @@ def write_exports(store: ResultStore, prefix: str, metric: str, outdir) -> Dict[
 
     d = Path(outdir)
     d.mkdir(parents=True, exist_ok=True)
+    # One columnar fetch serves all formats (and its sidecar persists, so
+    # the next export process starts warm too).
+    table = store.columnar.table(prefix)
     g = d / f"grafana.{prefix}.{metric}.json"
     l = d / f"llview.{prefix}.json"
-    g.write_text(json.dumps(grafana_table(store, prefix, metric), indent=2))
-    l.write_text(json.dumps(llview_jobs(store, prefix), indent=2, default=str))
-    return {"grafana": str(g), "llview": str(l)}
+    a = d / f"ascii.{prefix}.{metric}.txt"
+    series = table.series(metric).time_points()
+    g.write_text(json.dumps(_grafana_payload(metric, series), indent=2))
+    l.write_text(json.dumps(table.job_records(), indent=2, default=str))
+    a.write_text(ascii_timeseries(
+        series, title=f"{prefix}:{metric}",
+        regressions=[r.index for r in analysis.detect_regressions(series)],
+    ))
+    return {"grafana": str(g), "llview": str(l), "ascii": str(a)}
 
 
 # ---------------------------------------------------------------------------
@@ -100,3 +133,16 @@ def ascii_timeseries(
     lines.append(f"min={lo:.4g} max={hi:.4g} n={len(series)}"
                  + (f" regressions@{sorted(marks)}" if marks else ""))
     return "\n".join(lines) + "\n"
+
+
+def ascii_timeseries_report(
+    store: ResultStore, prefix: str, metric: str, *,
+    width: int = 64, detector: Optional[Dict[str, Any]] = None,
+) -> str:
+    """Render a stored metric straight from the columnar series, regression
+    flags included — the one-call terminal twin of the Fig. 3/4 plots."""
+    ms = store.columnar.table(prefix).series(metric)
+    series = ms.time_points()
+    regs = analysis.detect_regressions(series, **(detector or {}))
+    return ascii_timeseries(series, title=f"{prefix}:{metric}", width=width,
+                            regressions=[r.index for r in regs])

@@ -23,6 +23,7 @@ import traceback
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import analysis
+from repro.core.columnar import CampaignFrame
 from repro.core.harness import BenchmarkSpec, Harness, Injections
 from repro.core.protocol import DataEntry, Report, new_report
 from repro.core.readiness import Readiness, classify
@@ -190,18 +191,30 @@ class FeatureInjectionOrchestrator:
 class PostProcessingOrchestrator:
     """Analysis over stored results only — fully decoupled from execution
     (paper §V-A2).  Emits protocol-compliant evaluation reports back into
-    the store under an ``evaluation.<prefix>`` namespace."""
+    the store under an ``evaluation.<prefix>`` namespace.
+
+    Analyses read the store through the incremental columnar plane
+    (``store.columnar``) by default: metric series arrive as numpy columns
+    extended in O(delta) per append, so warm analysis over a long history
+    never re-materializes report objects.  ``inputs={"columnar": False}``
+    selects the report-object reference path (outputs are identical — the
+    parity is test-enforced); ``inputs={"record": False}`` skips writing the
+    evaluation report back into the store (pure read-side analysis).
+    """
 
     component = "post-processing@v3"
 
     def __init__(self, *, store: ResultStore, inputs: Dict[str, Any]):
         self.store = store
         self.inputs = dict(inputs)
+        self.use_columnar = bool(self.inputs.get("columnar", True))
 
     def _eval_prefix(self) -> str:
         return self.inputs.get("prefix", "evaluation")
 
-    def _record(self, kind: str, payload: Dict[str, Any], source_prefix: str) -> Report:
+    def _record(self, kind: str, payload: Dict[str, Any], source_prefix: str) -> Optional[Report]:
+        if not self.inputs.get("record", True):
+            return None
         rep = new_report(
             system=self.inputs.get("machine", "analysis"),
             variant=kind,
@@ -233,15 +246,40 @@ class PostProcessingOrchestrator:
         calibration for its Fig. 8 scopes).
         """
         since, until = (time_span or (None, None))
-        reports = self.store.query(source_prefix, since=since, until=until)
-        if pipeline:
-            reports = [r for r in reports if r.reporter.pipeline_id in set(pipeline)]
         out: Dict[str, Any] = {"prefix": source_prefix, "series": {}, "regressions": {}}
+        if self.use_columnar:
+            table = self.store.columnar.table(source_prefix)
+            reports = None
+        else:
+            reports = self.store.query(source_prefix, since=since, until=until)
+            if pipeline:
+                reports = [r for r in reports
+                           if r.reporter.pipeline_id in set(pipeline)]
+        det_key = tuple(sorted((detector or {}).items()))
         for label in data_labels:
-            series = analysis.to_series(reports, label)
-            regs = analysis.detect_regressions(series, **(detector or {}))
-            out["series"][label] = series
-            out["regressions"][label] = [dataclasses.asdict(r) for r in regs]
+            if reports is None:
+                # Memoized on the (immutable) table: a warm re-analysis of
+                # an unchanged prefix is a dict lookup, and any store change
+                # swaps the table (and thus the memo) out from under us.
+                key = ("time-series", label, since, until,
+                       tuple(pipeline), det_key)
+                hit = table.cache.get(key)
+                if hit is None:
+                    ms = table.series(
+                        label, since=since, until=until,
+                        pipelines=list(pipeline) if pipeline else None,
+                    ).sorted_by_time()
+                    regs = analysis.detect_regressions(ms, **(detector or {}))
+                    hit = (list(zip(ms.timestamps.tolist(), ms.values.tolist())),
+                           [dataclasses.asdict(r) for r in regs])
+                    table.cache[key] = hit
+                series, reg_dicts = hit
+            else:
+                series = analysis.to_series(reports, label)
+                regs = analysis.detect_regressions(series, **(detector or {}))
+                reg_dicts = [dataclasses.asdict(r) for r in regs]
+            out["series"][label] = list(series)
+            out["regressions"][label] = list(reg_dicts)
         self._record("time-series", {
             f"{l}_points": len(out["series"][l]) for l in data_labels
         } | {
@@ -253,12 +291,17 @@ class PostProcessingOrchestrator:
         self, *, selectors: Sequence[Dict[str, str]], metric: str
     ) -> Dict[str, Any]:
         """Fig. 5: one metric across systems/prefixes."""
-        reports = []
-        for sel in selectors:
-            reports.extend(
-                self.store.query(sel["prefix"], system=sel.get("system"))
-            )
-        table = analysis.compare_systems(reports, metric)
+        if self.use_columnar:
+            # compare_systems scopes itself to the selectors; the frame's
+            # prefix list is irrelevant here.
+            table = CampaignFrame(self.store).compare_systems(selectors, metric)
+        else:
+            reports = []
+            for sel in selectors:
+                reports.extend(
+                    self.store.query(sel["prefix"], system=sel.get("system"))
+                )
+            table = analysis.compare_systems(reports, metric)
         out = {"metric": metric, "table": table,
                "markdown": analysis.to_markdown(table, f"machine comparison: {metric}")}
         self._record("machine-comparison", {
@@ -270,13 +313,15 @@ class PostProcessingOrchestrator:
         self, *, source_prefix: str, metric: str = "step_time_s", mode: str = "strong"
     ) -> Dict[str, Any]:
         """Fig. 5/7: scaling efficiency across node counts."""
-        reports = self.store.query(source_prefix)
-        points: Dict[int, float] = {}
-        for r in reports:
-            for d in r.data:
-                v = d.metrics.get(metric)
-                if v is not None:
-                    points[d.nodes] = float(v)
+        if self.use_columnar:
+            points = self.store.columnar.table(source_prefix).scaling_points(metric)
+        else:
+            points: Dict[int, float] = {}
+            for r in self.store.query(source_prefix):
+                for d in r.data:
+                    v = d.metrics.get(metric)
+                    if v is not None:
+                        points[d.nodes] = float(v)
         fn = analysis.strong_scaling if mode == "strong" else analysis.weak_scaling
         table = fn(points)
         out = {"mode": mode, "points": points, "table": table}

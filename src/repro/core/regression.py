@@ -28,7 +28,13 @@ three pieces that turn stored benchmark history into an enforceable gate:
   execution prefix and metrics it guards (with per-metric direction and
   tolerance), runs after its producers via the component DAG, records its
   verdicts back into the store, and drives ``python -m repro.core.cicd
-  ... --gate`` exit codes (0 pass, 3 regression).
+  ... --gate`` exit codes (0 pass, 3 regression).  By default the gate
+  judges straight from the incremental columnar plane
+  (``repro.core.columnar``) — metric series arrive as contiguous numpy
+  columns extended in O(delta) per append, so a warm gate over a
+  multi-thousand-report history costs fractions of a millisecond;
+  ``columnar: false`` (CLI ``--no-columnar``) re-parses report objects,
+  and both paths are asserted verdict-identical in tests.
 
 CLI (baseline lifecycle + standalone gating)::
 
@@ -298,7 +304,9 @@ class CusumDetector(Detector):
             np.asarray(baseline, dtype=np.float64),
             np.asarray(candidate, dtype=np.float64),
         ])
-        seqs = list(baseline_seqs or []) + list(candidate_seqs or [])
+        # `is not None` (not truthiness): numpy arrays are valid seq inputs.
+        seqs = (list(baseline_seqs) if baseline_seqs is not None else []) + \
+               (list(candidate_seqs) if candidate_seqs is not None else [])
         n = int(x.size)
         if n < 4:
             return self._skip(spec, prefix, len(baseline), len(candidate),
@@ -315,7 +323,7 @@ class CusumDetector(Detector):
         perms = rng.permuted(np.tile(x, (self.n_permutations, 1)), axis=1)
         sp = np.cumsum(perms - x.mean(), axis=1)
         confidence = float(np.mean(sp.max(axis=1) - sp.min(axis=1) < obs))
-        change_seq = seqs[k + 1] if len(seqs) == n else None
+        change_seq = int(seqs[k + 1]) if len(seqs) == n else None
         return Verdict(
             status=classify(effect, confidence, spec),
             detector=self.name, metric=spec.name, prefix=prefix,
@@ -497,6 +505,7 @@ class GateSpec:
     warn_only: bool = False   # report, but never block (staged rollout)
     baseline_prefix: str = "baseline"
     record_prefix: str = ""   # "" -> gate.<source_prefix>; "none" disables
+    use_columnar: bool = True  # series from the columnar plane (O(delta) warm)
     detector_params: Dict[str, Dict[str, Any]] = dataclasses.field(
         default_factory=dict)
 
@@ -543,6 +552,7 @@ class GateSpec:
             warn_only=bool(inp.get("warn_only", False)),
             baseline_prefix=str(inp.get("baseline_prefix", "baseline")),
             record_prefix=str(inp.get("prefix", inp.get("record_prefix", ""))),
+            use_columnar=bool(inp.get("columnar", True)),
             detector_params=params,
         )
 
@@ -561,8 +571,20 @@ class RegressionGate:
     def run(self, store: ResultStore) -> Dict[str, Any]:
         sp = self.spec
         mgr = BaselineManager(store, prefix=sp.baseline_prefix, window=sp.window)
-        pairs = store.query_with_entries(sp.source_prefix, last=sp.history)
-        gates = [self._gate_metric(mgr, pairs, m) for m in sp.metrics]
+        if sp.use_columnar:
+            # Columnar fast path: O(delta) refresh + one mask per metric —
+            # no report object is materialized on the warm path.
+            table = store.columnar.table(sp.source_prefix)
+            series_for = {
+                m.name: table.series(m.name, success_only=True,
+                                     last_entries=sp.history)
+                for m in sp.metrics
+            }
+        else:
+            pairs = store.query_with_entries(sp.source_prefix, last=sp.history)
+            series_for = {m.name: _series(pairs, m.name) for m in sp.metrics}
+        gates = [self._gate_metric(mgr, series_for[m.name], m)
+                 for m in sp.metrics]
         status = worst(g["status"] for g in gates)
         summary = {
             "component": "gate",
@@ -579,41 +601,50 @@ class RegressionGate:
             ))
         return summary
 
-    def _gate_metric(self, mgr: BaselineManager,
-                     pairs: Sequence[Tuple[Any, Any]],
+    def _gate_metric(self, mgr: BaselineManager, series: Any,
                      mspec: MetricSpec) -> Dict[str, Any]:
         sp = self.spec
-        series = _series(pairs, mspec.name)
-        split = max(0, len(series) - max(0, sp.candidate))
-        hist, cand = series[:split], series[split:]
-        hist_vals = [v for _, v in hist]
-        hist_seqs = [s for s, _ in hist]
-        cvals = [v for _, v in cand]
-        cseqs = [s for s, _ in cand]
+        # ``series`` is either a columnar ``MetricSeries`` (arrays, no
+        # conversion) or the report-path ``[(seq, value), ...]`` list; both
+        # are normalized to aligned numpy columns once, here.
+        if hasattr(series, "seqs"):
+            seqs = np.asarray(series.seqs, dtype=np.int64)
+            vals = np.asarray(series.values, dtype=np.float64)
+        else:
+            n = len(series)
+            seqs = np.fromiter((s for s, _ in series), dtype=np.int64, count=n)
+            vals = np.fromiter((v for _, v in series), dtype=np.float64, count=n)
+        split = max(0, int(seqs.size) - max(0, sp.candidate))
+        hist_vals, hist_seqs = vals[:split], seqs[:split]
+        cvals, cseqs = vals[split:], seqs[split:]
+        cseq_list = cseqs.tolist()
         base = mgr.current(sp.source_prefix, mspec.name)
         if base is not None:
-            bvals, bseqs, pinned = base.values, base.seqs, base.pinned
+            bvals = np.asarray(base.values, dtype=np.float64)
+            bseqs, pinned = list(base.seqs), base.pinned
         else:
-            bvals, bseqs, pinned = hist_vals[-sp.window:], hist_seqs[-sp.window:], False
+            bvals = hist_vals[-sp.window:]
+            bseqs, pinned = hist_seqs[-sp.window:].tolist(), False
+        nb, nc = int(bvals.size), int(cvals.size)
         out: Dict[str, Any] = {
             "prefix": sp.source_prefix,
             "metric": mspec.name,
             "direction": mspec.direction,
             "tolerance": mspec.tolerance,
             "baseline": {
-                "n": len(bvals),
+                "n": nb,
                 "pinned": pinned,
-                "median": float(np.median(bvals)) if bvals else None,
+                "median": float(np.median(bvals)) if nb else None,
             },
-            "candidate_seqs": cseqs,
+            "candidate_seqs": cseq_list,
             "warn_only": sp.warn_only,
         }
-        if len(bvals) < sp.min_points or not cvals:
+        if nb < sp.min_points or not nc:
             verdicts = [Verdict(
                 PASS, "none", mspec.name, sp.source_prefix,
-                baseline_n=len(bvals), candidate_n=len(cvals),
+                baseline_n=nb, candidate_n=nc,
                 detail=f"insufficient history to judge "
-                       f"(baseline {len(bvals)} < {sp.min_points} "
+                       f"(baseline {nb} < {sp.min_points} "
                        f"or no candidate points)",
             )]
         else:
@@ -623,13 +654,13 @@ class RegressionGate:
                 if det.scans_history:
                     v = det.verdict(hist_vals, cvals, mspec,
                                     prefix=sp.source_prefix,
-                                    baseline_seqs=hist_seqs,
-                                    candidate_seqs=cseqs)
+                                    baseline_seqs=hist_seqs.tolist(),
+                                    candidate_seqs=cseq_list)
                 else:
                     v = det.verdict(bvals, cvals, mspec,
                                     prefix=sp.source_prefix,
                                     baseline_seqs=bseqs,
-                                    candidate_seqs=cseqs)
+                                    candidate_seqs=cseq_list)
                 verdicts.append(v)
         raw_status = worst(v.status for v in verdicts)
         out["verdicts"] = [v.to_dict() for v in verdicts]
@@ -637,12 +668,13 @@ class RegressionGate:
             (v.change_seq for v in verdicts if v.change_seq is not None), None)
         # Only green runs roll the baseline forward — a failed candidate must
         # never become part of the reference it just violated.
-        if sp.update_baseline and raw_status != FAIL and cvals:
+        if sp.update_baseline and raw_status != FAIL and nc:
             if base is None:
                 mgr.promote(sp.source_prefix, mspec.name,
-                            bvals + cvals, bseqs + cseqs)
+                            np.concatenate([bvals, cvals]),
+                            bseqs + cseq_list)
             else:
-                mgr.promote(sp.source_prefix, mspec.name, cvals, cseqs)
+                mgr.promote(sp.source_prefix, mspec.name, cvals, cseq_list)
         out["status"] = WARN if (sp.warn_only and raw_status == FAIL) else raw_status
         return out
 
@@ -746,6 +778,9 @@ def main(argv=None) -> int:
     gate.add_argument("--min-points", type=int, default=3)
     gate.add_argument("--window", type=int, default=32)
     gate.add_argument("--no-update-baseline", action="store_true")
+    gate.add_argument("--no-columnar", action="store_true",
+                      help="judge from report objects instead of the "
+                           "columnar plane (debug/parity checks)")
     gate.add_argument("--report", default=None,
                       help="write the gate report JSON here")
 
@@ -786,6 +821,7 @@ def main(argv=None) -> int:
         "min_points": args.min_points,
         "window": args.window,
         "update_baseline": not args.no_update_baseline,
+        "columnar": not args.no_columnar,
     })).run(store)
     if args.report:
         from pathlib import Path

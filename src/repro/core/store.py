@@ -20,6 +20,12 @@ parse the records a filter actually selects, and ``ResultStore`` keeps an
 mtime/size-invalidated cache of parsed reports so repeated queries over an
 unchanged prefix re-parse nothing.
 
+On top of the report cache, ``ResultStore.columnar`` exposes the incremental
+columnar metrics plane (``repro.core.columnar``): per-prefix numpy column
+arrays persisted as a compact sidecar next to each backend's data (the
+``sidecar_path`` hook), extended in O(delta) on append and rebuilt once when
+a prefix is pruned or mutated (the ``appended_only`` hook decides which).
+
 Writes are atomic, never mutated, and digest-verified on read — so partially
 failed pipelines cannot corrupt earlier results (the paper's resilience
 argument for splitting execution from post-processing).  Externally produced
@@ -144,6 +150,19 @@ class StoreBackend:
         """Subset of a stale parsed-report cache still valid under the new
         fingerprint.  Default: nothing (full re-parse on any change)."""
         return {}
+
+    def sidecar_path(self, prefix: str, name: str) -> Path:
+        """Where a derived per-prefix sidecar (e.g. the columnar index) is
+        persisted for this layout.  Sidecars must never collide with the
+        record/manifest namespace — ``scan``/``fingerprint`` ignore them."""
+        raise NotImplementedError
+
+    def appended_only(self, old_fp: Tuple, new_fp: Tuple) -> bool:
+        """True when the fingerprint transition can only have *appended*
+        records (every record covered by ``old_fp`` is untouched).  This is
+        what lets incremental consumers (the columnar plane) extend instead
+        of rebuild; a prune or in-place mutation must return False."""
+        return False
 
 
 class DirBackend(StoreBackend):
@@ -291,6 +310,15 @@ class DirBackend(StoreBackend):
         stable = {t[0] for t in set(old_fp) & set(new_fp)}
         return {k: r for k, r in parsed.items() if k in stable}
 
+    def sidecar_path(self, prefix: str, name: str) -> Path:
+        # Leading underscore keeps it out of _REPORT_RE (scan/fingerprint).
+        return self._dir(prefix) / f"_{name}"
+
+    def appended_only(self, old_fp: Tuple, new_fp: Tuple) -> bool:
+        # Append-only iff every previously fingerprinted report file is
+        # stat-identical — a deleted or touched file forces a rebuild.
+        return set(old_fp).issubset(set(new_fp))
+
 
 class JsonlBackend(StoreBackend):
     """Compact one-file-per-prefix layout with a sidecar offset index."""
@@ -428,11 +456,38 @@ class JsonlBackend(StoreBackend):
                       if p.name.endswith(".jsonl"))
 
     def fingerprint(self, prefix: str) -> Tuple:
-        data = self._data(prefix)
-        if not data.exists():
+        # Single stat, no exists() pre-check: this runs on every warm query
+        # and every columnar-table hit, so one syscall matters.
+        try:
+            st = self._data(prefix).stat()
+        except OSError:
             return ()
-        st = data.stat()
         return (st.st_size, st.st_mtime_ns)
+
+    def retained(self, old_fp: Tuple, new_fp: Tuple,
+                 parsed: Dict[str, Report]) -> Dict[str, Report]:
+        # Envelope lines are immutable once written: a pure append only ever
+        # grows the file, so every previously parsed record stays valid and
+        # a warm query after an append re-parses only the new tail.  A
+        # same-size mtime change or a shrink can be a rewrite — drop all.
+        # Trade-off (mirrors DirBackend's stat-identity trust): size growth
+        # is taken as append evidence, so an out-of-band mid-file rewrite
+        # that also grows the file can keep stale in-memory parses for this
+        # process's lifetime — a fresh process re-parses (and digest-checks)
+        # everything, and the columnar plane independently re-verifies the
+        # covered region via its cover hash.
+        if old_fp and new_fp and new_fp[0] > old_fp[0]:
+            return dict(parsed)
+        return {}
+
+    def sidecar_path(self, prefix: str, name: str) -> Path:
+        # ``.jsonl.<name>`` — prefixes() only lists names ending in .jsonl.
+        return self.root / f"{_safe(prefix)}.jsonl.{name}"
+
+    def appended_only(self, old_fp: Tuple, new_fp: Tuple) -> bool:
+        # The single data file only grows under append; any transition that
+        # is not a strict size increase may be a prune/rewrite.
+        return not old_fp or bool(new_fp and new_fp[0] > old_fp[0])
 
 
 _BACKENDS = {"dir": DirBackend, "jsonl": JsonlBackend}
@@ -460,6 +515,7 @@ class ResultStore:
         # prefix -> (fingerprint, index, {key: parsed report})
         self._cache: Dict[str, Tuple[Tuple, List[IndexEntry], Dict[str, Report]]] = {}
         self._cache_lock = threading.Lock()
+        self._columnar = None
 
     # ---- write path ----
     def append(self, prefix: str, report: Report) -> Path:
@@ -533,12 +589,32 @@ class ResultStore:
         )]
         if last is not None:
             wanted = wanted[-max(0, int(last)):] if last > 0 else []
-        missing = [e for e in wanted if e.key not in parsed]
+        return self._fetch(prefix, wanted, parsed)
+
+    def index(self, prefix: str) -> List[IndexEntry]:
+        """The (cached) manifest index for one prefix, in sequence order —
+        metadata only, no report is parsed."""
+        return self._indexed(prefix)[0]
+
+    def fetch_entries(
+        self, prefix: str, entries: List[IndexEntry]
+    ) -> List[Tuple[IndexEntry, Report]]:
+        """Parse the named entries through the warm-report cache; corrupt
+        records are dropped (same contract as ``query``).  This is the fetch
+        primitive the columnar plane uses to pull exactly the delta past its
+        watermark."""
+        _, parsed = self._indexed(prefix)
+        return self._fetch(prefix, entries, parsed)
+
+    def _fetch(
+        self, prefix: str, entries: List[IndexEntry], parsed: Dict[str, Report]
+    ) -> List[Tuple[IndexEntry, Report]]:
+        missing = [e for e in entries if e.key not in parsed]
         if missing:
             fetched = self.backend.fetch(prefix, missing)
             with self._cache_lock:
                 parsed.update(fetched)
-        return [(e, parsed[e.key]) for e in wanted if e.key in parsed]
+        return [(e, parsed[e.key]) for e in entries if e.key in parsed]
 
     def query(self, prefix: str, **kw) -> List[Report]:
         return [r for _, r in self.query_with_entries(prefix, **kw)]
@@ -546,6 +622,24 @@ class ResultStore:
     def latest(self, prefix: str, **kw) -> Optional[Report]:
         rs = self.query(prefix, **kw)
         return rs[-1] if rs else None
+
+    # ---- columnar metrics plane ----
+    @property
+    def columnar(self):
+        """The incremental columnar index over this store (lazily built;
+        see ``repro.core.columnar``)."""
+        if self._columnar is None:
+            from repro.core.columnar import ColumnarIndex  # avoid cycle
+
+            with self._cache_lock:
+                if self._columnar is None:
+                    self._columnar = ColumnarIndex(self)
+        return self._columnar
+
+    def metric_series(self, prefix: str, metric: str, **kw):
+        """Vectorized ``(seq, timestamp, value)`` arrays for one metric —
+        the columnar fast path (``repro.core.columnar.MetricSeries``)."""
+        return self.columnar.table(prefix).series(metric, **kw)
 
 
 def _atomic_write(path: Path, payload: str) -> None:

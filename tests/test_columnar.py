@@ -1,0 +1,493 @@
+"""Tests for the incremental columnar metrics plane: watermark semantics
+(incremental append extends, fingerprint mutation rebuilds), sidecar
+persistence, and byte-identical parity between the vectorized column-backed
+analysis paths and the report-object reference paths — on both store
+backends."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import analysis, export
+from repro.core.cicd import component_dag, parse_pipeline_text, run_pipeline
+from repro.core.columnar import CampaignFrame, ColumnTable, MetricSeries
+from repro.core.harness import BenchmarkSpec, Harness
+from repro.core.orchestrator import PostProcessingOrchestrator
+from repro.core.protocol import DataEntry, new_report
+from repro.core.regression import (
+    GateSpec,
+    MetricSpec,
+    RegressionGate,
+    json_safe,
+)
+from repro.core.store import ResultStore
+
+
+def _mk(system="s", variant="v", metrics=None, ts=1.0, nodes=1, success=True,
+        pid="p1", job="j", injections=None, entries=1):
+    r = new_report(system=system, variant=variant, usecase="u", pipeline_id=pid)
+    r.experiment.timestamp = ts
+    if injections is not None:
+        r.parameter["injections"] = injections
+    for k in range(entries):
+        r.data.append(DataEntry(success=success, runtime=1.0 + ts / 10 + k,
+                                nodes=nodes, metrics=dict(metrics or {}),
+                                job_id=f"{job}{k}" if entries > 1 else job))
+    return r
+
+
+def _seed_mixed(store, prefix="p", n=20):
+    for i in range(n):
+        store.append(prefix, _mk(
+            system=f"sys{i % 2}", variant=f"v{i % 3}", ts=float(i),
+            nodes=1 + i % 4, success=(i % 7 != 0), pid=f"pl{i % 3}",
+            metrics={"m": float(i), "runtime": 100.0 + i} if i % 5 == 0
+            else {"m": float(i)},
+        ))
+
+
+@pytest.fixture(params=["dir", "jsonl"])
+def any_store(request, tmp_path):
+    return ResultStore(tmp_path, backend=request.param)
+
+
+# ---------------------------------------------------------------------------
+# watermark semantics: hit / extend / rebuild
+# ---------------------------------------------------------------------------
+
+def test_incremental_append_extends_without_rebuild(any_store):
+    _seed_mixed(any_store, n=10)
+    t = any_store.columnar.table("p")
+    assert t.n_rows == 10 and t.n_entries == 10 and t.watermark == 9
+    assert any_store.columnar.stats["rebuilds"] == 1
+    # Unchanged fingerprint: pure cache hit.
+    t2 = any_store.columnar.table("p")
+    assert t2 is t and any_store.columnar.stats["hits"] == 1
+    # Append: columns extend in O(delta), no rebuild.
+    for i in range(10, 15):
+        any_store.append("p", _mk(ts=float(i), metrics={"m": float(i)}))
+    t3 = any_store.columnar.table("p")
+    assert t3.n_rows == 15 and t3.watermark == 14
+    assert any_store.columnar.stats["incremental"] == 1
+    assert any_store.columnar.stats["rebuilds"] == 1
+    # A metric first seen mid-history back-fills absent for earlier rows.
+    any_store.append("p", _mk(ts=99.0, metrics={"late_metric": 7.0}))
+    t4 = any_store.columnar.table("p")
+    s = t4.series("late_metric")
+    assert s.n == 1 and s.values[0] == 7.0
+    assert any_store.columnar.stats["rebuilds"] == 1
+
+
+def test_sidecar_persists_across_store_instances(any_store):
+    _seed_mixed(any_store, n=8)
+    any_store.columnar.table("p")
+    fresh = ResultStore(any_store.root, backend=any_store.backend)
+    t = fresh.columnar.table("p")
+    assert fresh.columnar.stats["sidecar_loads"] == 1
+    assert fresh.columnar.stats["rebuilds"] == 0
+    assert fresh.columnar.stats["incremental"] == 0
+    assert t.n_rows == 8
+    # And the loaded table still answers queries identically.
+    assert t.series("m").time_points() == \
+        analysis.to_series(fresh.query("p"), "m")
+
+
+def test_deferred_sidecar_persistence_and_flush(any_store):
+    _seed_mixed(any_store, n=10)
+    any_store.columnar.table("p")  # rebuild persists immediately
+    assert any_store.columnar.stats["sidecar_saves"] == 1
+    any_store.append("p", _mk(ts=50.0, metrics={"m": 50.0}))
+    any_store.columnar.table("p")  # 1 entry behind < SAVE_EVERY: deferred
+    assert any_store.columnar.stats["sidecar_saves"] == 1
+    # A fresh process loads the lagging sidecar and extends — no rebuild.
+    fresh = ResultStore(any_store.root, backend=any_store.backend)
+    assert fresh.columnar.table("p").n_rows == 11
+    assert fresh.columnar.stats["rebuilds"] == 0
+    assert fresh.columnar.stats["incremental"] == 1
+    # flush() forces persistence; the next instance starts fully warm.
+    fresh.columnar.flush()
+    warm = ResultStore(any_store.root, backend=any_store.backend)
+    assert warm.columnar.table("p").n_rows == 11
+    assert warm.columnar.stats["incremental"] == 0
+    assert warm.columnar.stats["rebuilds"] == 0
+
+
+def test_empty_prefix_builds_no_backend_state(any_store):
+    t = any_store.columnar.table("never_written")
+    assert t.n_rows == 0 and t.n_entries == 0 and t.watermark == -1
+    assert t.series("m").n == 0
+    # The read must not have materialized the prefix in the store.
+    assert any_store.prefixes() == []
+
+
+def test_dir_mutation_invalidates_and_rebuilds(tmp_path):
+    store = ResultStore(tmp_path)  # dir backend
+    _seed_mixed(store, n=6)
+    p1 = store.append("p", _mk(ts=50.0, metrics={"m": 50.0}))
+    assert store.columnar.table("p").n_rows == 7
+    # In-place tamper: fingerprint changes non-append-only -> one rebuild,
+    # and the corrupt record is dropped exactly like the report path drops it.
+    doc = json.loads(p1.read_text())
+    doc["data"][0]["runtime"] = 123456.0
+    p1.write_text(json.dumps(doc))
+    t = store.columnar.table("p")
+    assert store.columnar.stats["rebuilds"] == 2
+    assert t.n_rows == len(store.query("p")) == 6
+
+
+def test_jsonl_prune_invalidates_and_rebuilds(tmp_path):
+    store = ResultStore(tmp_path, backend="jsonl")
+    _seed_mixed(store, n=6)
+    assert store.columnar.table("p").n_rows == 6
+    # Prune the newest record (file shrinks): must rebuild, not extend.
+    data = tmp_path / "p.jsonl"
+    lines = data.read_text().splitlines()
+    data.write_text("\n".join(lines[:-1]) + "\n")
+    (tmp_path / "p.jsonl.idx").unlink()
+    t = store.columnar.table("p")
+    assert store.columnar.stats["rebuilds"] == 2
+    assert t.n_rows == len(store.query("p")) == 5
+
+
+def test_corrupt_sidecar_only_costs_a_rebuild(any_store):
+    _seed_mixed(any_store, n=5)
+    any_store.columnar.table("p")
+    sidecar = any_store.backend.sidecar_path("p", "columns.npz")
+    assert sidecar.exists()
+    sidecar.write_bytes(b"not an npz")
+    fresh = ResultStore(any_store.root, backend=any_store.backend)
+    assert fresh.columnar.table("p").n_rows == 5
+    assert fresh.columnar.stats["rebuilds"] == 1
+
+
+# ---------------------------------------------------------------------------
+# vectorized vs report-object parity
+# ---------------------------------------------------------------------------
+
+def test_series_parity_with_to_series(any_store):
+    _seed_mixed(any_store)
+    t = any_store.columnar.table("p")
+    for metric in ("m", "runtime", "missing_metric"):
+        assert t.series(metric).time_points() == \
+            analysis.to_series(any_store.query("p"), metric)
+    # Dimension filters mirror the index-entry filters.
+    for kw in ({"system": "sys1"}, {"variant": "v2"},
+               {"since": 3.0, "until": 11.0}, {"trusted_only": True}):
+        want = analysis.to_series(any_store.query("p", **{
+            k: v for k, v in kw.items() if k != "trusted_only"
+        } | ({"trusted_only": True} if kw.get("trusted_only") else {})), "m")
+        assert t.series("m", **kw).time_points() == want
+
+
+def test_series_last_entries_matches_query_last(any_store):
+    _seed_mixed(any_store, n=15)
+    t = any_store.columnar.table("p")
+    from repro.core.regression import _series
+
+    for last in (0, 3, 15, 99):
+        pairs = any_store.query_with_entries("p", last=last)
+        want = _series(pairs, "m")
+        got = t.series("m", success_only=True, last_entries=last).seq_points()
+        assert got == want, last
+
+
+def test_gate_parity_pass_and_fail(any_store):
+    rng = np.random.default_rng(0)
+    for i in range(40):
+        v = float(1.0 + rng.normal(0, 0.02))
+        any_store.append("g", _mk(ts=float(i), metrics={"step_time_s": v}))
+    kw = dict(source_prefix="g", metrics=[MetricSpec("step_time_s")],
+              window=16, candidate=4, min_points=3, history=100,
+              update_baseline=False, record_prefix="none")
+    col = RegressionGate(GateSpec(**kw, use_columnar=True)).run(any_store)
+    obj = RegressionGate(GateSpec(**kw, use_columnar=False)).run(any_store)
+    assert json.dumps(json_safe(col), sort_keys=True) == \
+        json.dumps(json_safe(obj), sort_keys=True)
+    assert col["status"] == "pass"
+    # Inject a slowdown: identical FAIL verdicts and change-point sequence.
+    for i in range(6):
+        any_store.append("g", _mk(ts=40.0 + i, metrics={"step_time_s": 5.0}))
+    col = RegressionGate(GateSpec(**kw, use_columnar=True)).run(any_store)
+    obj = RegressionGate(GateSpec(**kw, use_columnar=False)).run(any_store)
+    assert json.dumps(json_safe(col), sort_keys=True) == \
+        json.dumps(json_safe(obj), sort_keys=True)
+    assert col["status"] == "fail"
+    assert col["gates"][0]["change_seq"] == 40
+
+
+def test_post_processing_parity(any_store):
+    for i in range(24):
+        any_store.append("pp", _mk(
+            system=f"sys{i % 3}", ts=float(i), nodes=1 << (i % 4),
+            pid=f"pl{i % 2}",
+            metrics={"step_time_s": 1.0 + 0.1 * (i % 5)},
+            injections={"env": {"KNOB": str(i % 3)}} if i % 2 else None,
+        ))
+    col = PostProcessingOrchestrator(store=any_store, inputs={"record": False})
+    obj = PostProcessingOrchestrator(
+        store=any_store, inputs={"record": False, "columnar": False})
+    assert col.time_series(source_prefix="pp", data_labels=["step_time_s"]) \
+        == obj.time_series(source_prefix="pp", data_labels=["step_time_s"])
+    assert col.time_series(source_prefix="pp", data_labels=["step_time_s"],
+                           pipeline=["pl1"], time_span=(2.0, 20.0)) \
+        == obj.time_series(source_prefix="pp", data_labels=["step_time_s"],
+                           pipeline=["pl1"], time_span=(2.0, 20.0))
+    assert col.machine_comparison(
+        selectors=[{"prefix": "pp", "system": "sys1"}, {"prefix": "pp"}],
+        metric="step_time_s") == obj.machine_comparison(
+        selectors=[{"prefix": "pp", "system": "sys1"}, {"prefix": "pp"}],
+        metric="step_time_s")
+    for mode in ("strong", "weak"):
+        assert col.scalability(source_prefix="pp", metric="step_time_s",
+                               mode=mode) == \
+            obj.scalability(source_prefix="pp", metric="step_time_s",
+                            mode=mode)
+
+
+def test_time_series_memo_sees_new_appends(any_store):
+    for i in range(10):
+        any_store.append("pp", _mk(ts=float(i), metrics={"m": float(i)}))
+    pp = PostProcessingOrchestrator(store=any_store, inputs={"record": False})
+    first = pp.time_series(source_prefix="pp", data_labels=["m"])
+    again = pp.time_series(source_prefix="pp", data_labels=["m"])
+    assert first == again  # memo hit, same content
+    any_store.append("pp", _mk(ts=10.0, metrics={"m": 10.0}))
+    after = pp.time_series(source_prefix="pp", data_labels=["m"])
+    assert len(after["series"]["m"]) == 11  # table swap invalidated the memo
+
+
+def test_injection_comparison_parity(any_store):
+    for i, thresh in enumerate(["1024", "65536", "1048576"]):
+        any_store.append("inj", _mk(
+            ts=float(i), metrics={"bw": 10.0 * (i + 1)},
+            injections={"env": {"UCX_RNDV_THRESH": thresh}, "overrides": {}},
+        ))
+    any_store.append("inj", _mk(ts=9.0, metrics={"bw": 1.0}))  # no injection
+    want = analysis.injection_comparison(
+        any_store.query("inj"), "bw", "UCX_RNDV_THRESH")
+    got = any_store.columnar.table("inj").injection_comparison(
+        "bw", "UCX_RNDV_THRESH")
+    assert got == want
+    assert set(got) == {"1024", "65536", "1048576", "default"}
+
+
+def test_non_numeric_metrics_survive_in_extras(any_store):
+    any_store.append("x", _mk(ts=1.0, metrics={
+        "num": 3.5, "count": 5, "label": "fast-path", "flag": True}))
+    t = any_store.columnar.table("x")
+    assert t.series("num").n == 1
+    assert t.series("count").n == 1  # analyzable as a numeric column...
+    assert t.series("label").n == 0  # not a numeric column
+    rec = t.job_records()[0]
+    assert rec["metrics"]["label"] == "fast-path"
+    assert rec["metrics"]["num"] == 3.5
+    # ...while exports round-trip the original types exactly.
+    assert rec["metrics"]["count"] == 5 and type(rec["metrics"]["count"]) is int
+    assert rec["metrics"]["flag"] is True
+
+
+def test_multi_entry_reports_row_per_entry(any_store):
+    any_store.append("me", _mk(ts=1.0, metrics={"m": 1.0}, entries=3))
+    t = any_store.columnar.table("me")
+    assert t.n_rows == 3 and t.n_entries == 1
+    from repro.core.regression import _series
+
+    assert t.series("m", success_only=True).seq_points() == \
+        _series(any_store.query_with_entries("me"), "m")
+
+
+# ---------------------------------------------------------------------------
+# exports through the columnar plane
+# ---------------------------------------------------------------------------
+
+def test_exports_match_report_reference(any_store, tmp_path):
+    _seed_mixed(any_store, n=9)
+    reports = any_store.query("p")
+    # grafana: rows must equal the to_series-derived reference.
+    g = export.grafana_table(any_store, "p", "m")
+    assert g["rows"] == [[int(ts * 1000), v]
+                         for ts, v in analysis.to_series(reports, "m")]
+    # llview: same records the report path produced (order + content).
+    want = []
+    for r in reports:
+        for d in r.data:
+            want.append({
+                "jobid": d.job_id, "system": r.experiment.system,
+                "queue": d.queue, "nodes": d.nodes, "runtime": d.runtime,
+                "state": "COMPLETED" if d.success else "FAILED",
+                "ts": r.experiment.timestamp, "metrics": dict(d.metrics),
+            })
+    assert export.llview_jobs(any_store, "p") == want
+    out = export.write_exports(any_store, "p", "m", tmp_path / "out")
+    assert set(out) == {"grafana", "llview", "ascii"}
+    assert json.loads((tmp_path / "out" / "grafana.p.m.json").read_text()) == g
+    assert "p:m" in (tmp_path / "out" / "ascii.p.m.txt").read_text()
+    assert "p:m" in export.ascii_timeseries_report(any_store, "p", "m")
+
+
+# ---------------------------------------------------------------------------
+# campaign frame + cicd component
+# ---------------------------------------------------------------------------
+
+def test_campaign_frame_cross_prefix(any_store):
+    for p in range(3):
+        for i in range(6):
+            any_store.append(f"app{p}", _mk(
+                system=f"sys{p}", ts=float(i),
+                metrics={"m": float(10 * p + i)}))
+    frame = any_store.columnar.frame()
+    assert set(frame.prefixes()) == {"app0", "app1", "app2"}
+    summary = frame.summary("m")
+    for p in range(3):
+        vals = [10.0 * p + i for i in range(6)]
+        assert summary[f"app{p}"] == analysis.summary_stats(vals)
+    assert frame.watermarks() == {f"app{p}": 5 for p in range(3)}
+    # compare_systems across selectors == the report-object reduction.
+    sels = [{"prefix": "app0"}, {"prefix": "app2"}]
+    reports = [r for s in sels for r in any_store.query(s["prefix"])]
+    assert frame.compare_systems(sels, "m") == \
+        analysis.compare_systems(reports, "m")
+    # Restricting prefixes restricts the scan.
+    assert set(CampaignFrame(any_store, ["app1"]).summary("m")) == {"app1"}
+
+
+def test_campaign_summary_skips_envelope_bookkeeping(any_store):
+    """A default frame sweeps the whole store — baseline/gate envelope
+    prefixes included — but their bookkeeping rows (runtime 0.0, mirrored
+    payload numerics) must not pollute campaign summaries."""
+    rng = np.random.default_rng(1)
+    for i in range(12):
+        any_store.append("app", _mk(
+            ts=float(i), metrics={"step_time_s": float(1 + rng.normal(0, 0.01))}))
+    RegressionGate(GateSpec(
+        source_prefix="app", metrics=[MetricSpec("step_time_s")],
+        min_points=3, window=8,
+    )).run(any_store)  # writes baseline.app + gate.app envelope prefixes
+    frame = any_store.columnar.frame()
+    assert {"baseline.app", "gate.app"} <= set(frame.prefixes())
+    summary = frame.summary("runtime")
+    assert set(summary) == {"app"}, summary  # no envelope placeholder rows
+    # The single-prefix parity path is unchanged: envelopes stay visible.
+    t = any_store.columnar.table("gate.app")
+    assert t.series("runtime").n == 1
+
+
+class _StubHarness(Harness):
+    name = "stub"
+
+    def run(self, spec: BenchmarkSpec, injections=None):
+        r = new_report(system=spec.system, variant=spec.effective_variant(),
+                       usecase=spec.shape, pipeline_id="p")
+        r.data.append(DataEntry(success=True, runtime=0.1,
+                                metrics={"step_time_s": 1.0}))
+        return r
+
+
+CAMPAIGN_YML = """\
+include:
+  - component: execution@v3
+    inputs:
+      prefix: "c.one"
+      arch: "a0"
+  - component: execution@v3
+    inputs:
+      prefix: "c.two"
+      arch: "a0"
+  - component: campaign-report@v1
+    inputs:
+      metric: "step_time_s"
+"""
+
+
+def test_campaign_report_component(tmp_path):
+    calls = parse_pipeline_text(CAMPAIGN_YML)
+    # No explicit prefixes: the report waits for every producer.
+    assert component_dag(calls) == [[], [], [0, 1]]
+    store = ResultStore(tmp_path)
+    results = run_pipeline(calls, store=store, harness=_StubHarness())
+    rep = results[2]
+    assert rep["component"] == "campaign-report"
+    assert set(rep["table"]) == {"c.one", "c.two"}
+    assert rep["watermarks"] == {"c.one": 0, "c.two": 0}
+    assert "campaign summary" in rep["markdown"]
+    # Explicit prefixes create targeted DAG edges instead.
+    calls2 = parse_pipeline_text(CAMPAIGN_YML.replace(
+        'metric: "step_time_s"', 'metric: "step_time_s"\n      prefixes: [c.two]'))
+    assert component_dag(calls2) == [[], [], [1]]
+
+
+# ---------------------------------------------------------------------------
+# vectorized detector vs the seed loop
+# ---------------------------------------------------------------------------
+
+def _loop_detect(series, window=8, z_threshold=4.0, min_rel=0.05):
+    out = []
+    window = max(1, int(window))
+    vals = np.array([v for _, v in series], dtype=np.float64)
+    if vals.size <= window:
+        return out
+    for i in range(window, len(vals)):
+        base = vals[i - window:i]
+        med = float(np.median(base))
+        mad = float(np.median(np.abs(base - med)))
+        sigma = max(1.4826 * mad, 1e-12)
+        dev = abs(vals[i] - med)
+        if dev / sigma > z_threshold and (med == 0 or dev / abs(med) > min_rel):
+            out.append((i, series[i][0], float(vals[i]), med, dev / sigma))
+    return out
+
+
+def test_detect_regressions_matches_seed_loop():
+    rng = np.random.default_rng(7)
+    cases = [
+        [(float(i), float(1 + rng.normal(0, 0.02))) for i in range(200)],
+        [(float(i), float(1 + rng.normal(0, 0.02))) for i in range(100)]
+        + [(float(100 + i), float(2 + rng.normal(0, 0.02))) for i in range(50)],
+        [(float(i), float(rng.normal(0, 1.0))) for i in range(150)],
+        [(float(i), 0.0) for i in range(30)],
+        [(float(i), float(-5 + rng.normal(0, 0.3))) for i in range(80)],
+        [(float(i), v) for i, v in enumerate([1.0] * 20 + [1.051] + [1.0] * 20)],
+    ]
+    for w in (1, 2, 8, 13):
+        for z in (1.0, 4.0):
+            for mr in (0.0, 0.05, 0.3):
+                for c in cases:
+                    want = _loop_detect(c, w, z, mr)
+                    got = [(r.index, r.timestamp, r.value, r.baseline, r.sigma)
+                           for r in analysis.detect_regressions(
+                               c, window=w, z_threshold=z, min_rel=mr)]
+                    assert got == want, (w, z, mr)
+
+
+def test_detect_regressions_accepts_metric_series():
+    ts = np.arange(40, dtype=np.float64)
+    vals = np.concatenate([np.ones(30), np.full(10, 3.0)])
+    ms = MetricSeries("m", np.arange(40, dtype=np.int64), ts, vals)
+    as_list = list(zip(ts.tolist(), vals.tolist()))
+    a = analysis.detect_regressions(ms)
+    b = analysis.detect_regressions(as_list)
+    assert [(r.index, r.timestamp, r.value, r.baseline, r.sigma) for r in a] \
+        == [(r.index, r.timestamp, r.value, r.baseline, r.sigma) for r in b]
+    assert a and a[0].index == 30
+
+
+# ---------------------------------------------------------------------------
+# warm-append fetch economy (jsonl retained)
+# ---------------------------------------------------------------------------
+
+def test_jsonl_warm_append_fetches_only_the_tail(tmp_path):
+    store = ResultStore(tmp_path, backend="jsonl")
+    _seed_mixed(store, n=10)
+    assert len(store.query("p")) == 10  # warm the parsed-report cache
+    fetched = []
+    orig = store.backend.fetch
+
+    def counting_fetch(prefix, entries):
+        fetched.append(len(entries))
+        return orig(prefix, entries)
+
+    store.backend.fetch = counting_fetch
+    store.append("p", _mk(ts=50.0, metrics={"m": 50.0}))
+    assert len(store.query("p")) == 11
+    assert fetched == [1], fetched  # only the new record was parsed
