@@ -41,10 +41,10 @@ def main():
         BenchmarkSpec(arch="qwen3-moe-235b-a22b", shape="prefill_32k", system="cpu-smoke"),
     ]
 
-    # 2. execution orchestrator (component: execution@v3) on a worker pool —
+    # 2. execution orchestrator (component: execution@v4) on a worker pool —
     #    cells run concurrently, each report persists the moment it lands.
     ex = ExecutionOrchestrator(
-        inputs={"prefix": "jureap.mini", "machine": "cpu-smoke", "record": True,
+        inputs={"prefix": "jureap.mini", "system": "cpu-smoke", "record": True,
                 "parallelism": 2},
         harness=harness,
         store=store,

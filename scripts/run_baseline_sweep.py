@@ -45,7 +45,7 @@ def main():
         system = sysmap[skey]
         specs = collection(system, archs=args.archs, shapes=args.shapes)
         ex = ExecutionOrchestrator(
-            inputs={"prefix": f"baseline.{skey}", "machine": system, "record": True},
+            inputs={"prefix": f"baseline.{skey}", "system": system, "record": True},
             harness=harness,
             store=store,
             max_retries=1,

@@ -1,0 +1,15 @@
+"""``python -m repro`` — the campaign CLI over the ``Campaign`` facade.
+
+Subcommands::
+
+    python -m repro run examples/pipelines/smoke.yml --store S [--gate]
+    python -m repro validate examples/pipelines/smoke.yml
+    python -m repro components
+"""
+
+import sys
+
+from repro.core.api import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,12 +1,29 @@
 """exaCB core — the paper's primary contribution: protocol, result store,
-readiness levels, harness adapters, the three orchestrators, the campaign
-scheduler, the incremental columnar metrics plane, analysis, and
-energy-launcher injection."""
+readiness levels, harness adapters, the typed component API (schemas +
+registry + ``Campaign`` facade), the orchestrators, the campaign scheduler,
+the incremental columnar metrics plane, analysis, and energy-launcher
+injection."""
 
-from repro.core.harness import BenchmarkSpec, ExecHarness, Injections  # noqa: F401
+from repro.core.component import (  # noqa: F401
+    REGISTRY,
+    ComponentInputs,
+    ComponentRegistry,
+    ComponentSchema,
+    InputSpec,
+    PipelineError,
+)
+from repro.core.harness import (  # noqa: F401
+    BenchmarkSpec,
+    CapabilityError,
+    ExecHarness,
+    HarnessCapabilities,
+    Injections,
+    negotiate,
+)
 from repro.core.protocol import DataEntry, Experiment, Report, Reporter, new_report  # noqa: F401
-from repro.core.readiness import Readiness, classify  # noqa: F401
+from repro.core.readiness import Readiness, classify, parse_level  # noqa: F401
 from repro.core.scheduler import CampaignScheduler, Task, TaskResult  # noqa: F401
 from repro.core.store import DirBackend, JsonlBackend, ResultStore  # noqa: F401
 from repro.core.columnar import CampaignFrame, ColumnTable, ColumnarIndex, MetricSeries  # noqa: F401
-from repro.core.cicd import parse_pipeline_text, run_pipeline  # noqa: F401
+from repro.core.cicd import parse_pipeline_text, run_pipeline, validate_pipeline  # noqa: F401
+from repro.core.api import Campaign  # noqa: F401  (after cicd: api builds on it)

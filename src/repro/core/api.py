@@ -1,0 +1,215 @@
+"""The ``Campaign`` facade — exaCB's single documented entry point.
+
+Everything a continuous-benchmarking campaign needs sits behind one object:
+the component registry (typed, versioned schemas), the campaign scheduler,
+the result store, and the regression gates.  The ``python -m repro`` CLI
+(``run`` / ``validate`` / ``components``) is a thin wrapper over this class,
+and so is any library use::
+
+    from repro.core.api import Campaign
+
+    c = Campaign("exacb_data")
+    c.validate("examples/pipelines/smoke.yml")   # schema-check, no execution
+    results = c.run("examples/pipelines/smoke.yml", parallelism=2)
+    print(c.report()["markdown"])                # cross-prefix summary
+    verdict = c.gate("ci.smoke", metrics=["step_time_s"])
+
+See ``docs/component_api.md`` for the full contract (schemas, registry,
+migration shims, harness capability negotiation).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
+
+from repro.core import cicd
+from repro.core.component import (
+    REGISTRY,
+    ComponentContext,
+    ComponentRegistry,
+    PipelineError,
+)
+from repro.core.harness import Harness
+from repro.core.store import ResultStore
+
+
+def _pipeline_text(pipeline: Union[str, Path]) -> str:
+    """A path (existing file) or a literal document (anything with a
+    newline / JSON braces) — the CLI and tests use both freely."""
+    s = str(pipeline)
+    if "\n" not in s and not s.lstrip().startswith("{"):
+        p = Path(s)
+        if not p.exists():
+            raise PipelineError(f"pipeline file not found: {s}")
+        return p.read_text()
+    return s
+
+
+class Campaign:
+    """Registry → scheduler → store → gates behind one object."""
+
+    def __init__(
+        self,
+        store: Union[str, Path, ResultStore] = "exacb_data",
+        *,
+        backend: str = "dir",
+        harness: Optional[Harness] = None,
+        harness_factory: Optional[Callable[[Dict[str, Any]], Harness]] = None,
+        parallelism: Optional[int] = None,
+        registry: Optional[ComponentRegistry] = None,
+    ):
+        self._store_spec = store
+        self._backend = backend
+        self._store: Optional[ResultStore] = \
+            store if isinstance(store, ResultStore) else None
+        self.harness = harness
+        self.harness_factory = harness_factory
+        self.parallelism = parallelism
+        self.registry = registry or REGISTRY
+
+    @property
+    def store(self) -> ResultStore:
+        """Created lazily so read-only entry points (``validate``,
+        ``components``) never touch the filesystem."""
+        if self._store is None:
+            self._store = ResultStore(self._store_spec, backend=self._backend)
+        return self._store
+
+    # ------------------------------------------------------------ pipelines
+    def validate(self, pipeline: Union[str, Path]) -> List[Dict[str, Any]]:
+        """Schema-check a pipeline document without executing anything.
+        Returns one summary per component (resolved version, coerced inputs,
+        DAG edges); raises ``PipelineError`` naming the offending component
+        and field."""
+        return cicd.validate_pipeline(_pipeline_text(pipeline),
+                                      registry=self.registry)
+
+    def run(self, pipeline: Union[str, Path], *,
+            parallelism: Optional[int] = None) -> List[Dict[str, Any]]:
+        """Parse, validate, and dispatch a pipeline document through the
+        component DAG and the campaign scheduler."""
+        calls = cicd.parse_pipeline_text(_pipeline_text(pipeline),
+                                         registry=self.registry)
+        return cicd.run_pipeline(
+            calls,
+            store=self.store,
+            harness=self.harness,
+            harness_factory=self.harness_factory,
+            parallelism=parallelism if parallelism is not None else self.parallelism,
+            registry=self.registry,
+        )
+
+    # ----------------------------------------------------------- components
+    def components(self) -> List[Dict[str, Any]]:
+        """Registry listing: every accepted component reference with its
+        declared inputs (types, defaults, choices, deprecated aliases) —
+        migration shims included."""
+        return self.registry.describe()
+
+    def component(self, name: str, version: int, inputs: Dict[str, Any],
+                  **extra_inputs: Any) -> Any:
+        """Run one component invocation directly (no document needed)."""
+        resolved = self.registry.resolve(name, version)
+        # Same harness default as cicd.run_pipeline, so a facade without an
+        # explicit harness behaves identically to `python -m repro run`.
+        harness = self.harness
+        if harness is None and self.harness_factory is None:
+            from repro.core.harness import ExecHarness
+
+            harness = ExecHarness(steps=2, batch=2, seq=16)
+        ctx = ComponentContext(store=self.store, harness=harness,
+                               harness_factory=self.harness_factory)
+        return resolved.run({**dict(inputs), **extra_inputs}, ctx)
+
+    # ---------------------------------------------------------- collections
+    def run_collection(
+        self,
+        system: Union[str, Sequence[str]],
+        *,
+        archs: Optional[List[str]] = None,
+        shapes: Optional[List[str]] = None,
+        prefix: str = "collection",
+        require_readiness=None,
+        parallelism: Optional[int] = None,
+        record: bool = True,
+    ):
+        """Expand the benchmark collection for ``system`` and run every cell
+        through the execution orchestrator (failure-isolated, streamed into
+        the store).  Requires a ``harness`` on the facade."""
+        from repro.core import registry as collection_registry
+        from repro.core.orchestrator import ExecutionOrchestrator
+
+        if self.harness is None:
+            raise PipelineError("Campaign.run_collection needs a harness")
+        specs = collection_registry.collection(
+            system, archs=archs, shapes=shapes,
+            require_readiness=require_readiness)
+        ex = ExecutionOrchestrator(
+            inputs={"prefix": prefix, "record": record,
+                    "parallelism": parallelism or self.parallelism or 1},
+            harness=self.harness,
+            store=self.store,
+        )
+        return ex.run_collection(specs)
+
+    # ---------------------------------------------------------------- gates
+    def gate(self, source_prefix: str, **inputs: Any) -> Dict[str, Any]:
+        """Run a regression gate over one prefix's stored history; inputs
+        follow the ``gate@v1`` schema."""
+        return self.component("gate", 1,
+                              {"source_prefix": source_prefix, **inputs})
+
+    def report(self, metric: str = "step_time_s",
+               prefixes: Optional[List[str]] = None) -> Dict[str, Any]:
+        """Cross-prefix campaign summary (the ``campaign-report@v1``
+        component) in one columnar scan."""
+        inputs: Dict[str, Any] = {"metric": metric}
+        if prefixes:
+            inputs["prefixes"] = list(prefixes)
+        return self.component("campaign-report", 1, inputs)
+
+
+def main(argv=None) -> int:
+    """``python -m repro`` — run / validate / components."""
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="repro",
+        description="exaCB campaign entry point (typed component API)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    run = sub.add_parser("run", help="run a pipeline document")
+    run.add_argument("pipeline")
+    run.add_argument("--store", default="exacb_data")
+    run.add_argument("--store-backend", default="dir", choices=("dir", "jsonl"))
+    run.add_argument("--parallelism", type=int, default=None)
+    run.add_argument("--gate", action="store_true",
+                     help="enforce regression gates (exit 3 on regression)")
+    run.add_argument("--gate-report", default="gate_report.json")
+
+    val = sub.add_parser("validate",
+                         help="schema-check a pipeline document, no execution")
+    val.add_argument("pipeline")
+
+    sub.add_parser("components",
+                   help="list every registered component with its schema")
+
+    args = ap.parse_args(argv)
+    if args.cmd == "run":
+        # Delegate to the cicd CLI so gate-report/exit-code semantics stay
+        # in exactly one place.
+        cicd_args = [args.pipeline, "--store", args.store,
+                     "--store-backend", args.store_backend]
+        if args.parallelism is not None:
+            cicd_args += ["--parallelism", str(args.parallelism)]
+        if args.gate:
+            cicd_args += ["--gate", "--gate-report", args.gate_report]
+        return cicd.main(cicd_args)
+    if args.cmd == "validate":
+        # Same delegation as `run`: one implementation of the INVALID/OK
+        # reporting and exit codes, in cicd.main.
+        return cicd.main([args.pipeline, "--validate"])
+    print(json.dumps(Campaign().components(), indent=2, default=str))
+    return 0

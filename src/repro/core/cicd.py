@@ -13,9 +13,14 @@ reusable components::
 
 This module is the runner for that interface: a pipeline document (JSON, or
 the built-in minimal YAML subset — no external deps) is parsed into component
-invocations and dispatched to the orchestrators.  Components are versioned
-(``execution@v3``); unknown majors are rejected, matching the paper's
-schema-evolution discipline.  Analysis components (``time-series``,
+invocations, validated against the declared input schemas in the component
+registry (``repro.core.component``; orchestrators self-register on import),
+and dispatched through the registered runners.  Components are versioned
+(``execution@v4``); unknown majors are rejected while migration shims keep
+older documents (``execution@v3``) running, matching the paper's
+schema-evolution discipline — and unknown input keys or type mismatches are
+hard errors at parse time (``--validate`` schema-checks a document without
+executing it).  Analysis components (``time-series``,
 ``machine-comparison``, ``scalability``, ``gate``) read the store through
 the incremental columnar plane (``repro.core.columnar``) by default; pass
 ``columnar: false`` in a component's inputs for the report-object reference
@@ -34,25 +39,17 @@ import re
 from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from repro.core.harness import BenchmarkSpec, ExecHarness, Harness, Injections
-from repro.core.orchestrator import (
-    ExecutionOrchestrator,
-    FeatureInjectionOrchestrator,
-    GateOrchestrator,
-    PostProcessingOrchestrator,
+from repro.core import orchestrator as _orchestrator  # registers components
+from repro.core.component import (
+    REGISTRY,
+    ComponentContext,
+    ComponentInputs,
+    ComponentRegistry,
+    PipelineError,
 )
+from repro.core.harness import ExecHarness, Harness
 from repro.core.scheduler import CampaignScheduler, Task
 from repro.core.store import ResultStore
-
-SUPPORTED = {
-    "execution": (3,),
-    "feature-injection": (3,),
-    "time-series": (3,),
-    "machine-comparison": (3,),
-    "scalability": (3,),
-    "gate": (1,),
-    "campaign-report": (1,),
-}
 
 # ``cicd --gate`` exit code when a gate component reports a regression —
 # distinct from 1 (component/infrastructure error) so CI can tell "the
@@ -60,21 +57,49 @@ SUPPORTED = {
 EXIT_REGRESSION = 3
 
 
-class PipelineError(ValueError):
-    pass
-
-
 @dataclasses.dataclass
 class ComponentCall:
+    """One parsed component invocation.  ``version`` is the major the
+    document declared (a v3 reference stays ``version=3`` even though the
+    registry runs it through the v3→v4 shim); ``inputs`` are already
+    validated/coerced/migrated ``ComponentInputs``."""
+
     name: str
     version: int
     inputs: Dict[str, Any]
+
+    @property
+    def ref(self) -> str:
+        return f"{self.name}@v{self.version}"
 
 
 # ---------------------------------------------------------------------------
 # Minimal YAML-subset parser (mappings, lists of mappings, scalars) — enough
 # for the paper's pipeline examples without a yaml dependency.
 # ---------------------------------------------------------------------------
+
+def _split_inline_list(inner: str) -> List[str]:
+    """Split an inline-list body on commas, quote-aware: a comma inside a
+    quoted element (``["a,b", "c"]``) is content, not a separator."""
+    parts: List[str] = []
+    buf: List[str] = []
+    quote: Optional[str] = None
+    for ch in inner:
+        if quote is not None:
+            buf.append(ch)
+            if ch == quote:
+                quote = None
+        elif ch in "\"'":
+            quote = ch
+            buf.append(ch)
+        elif ch == ",":
+            parts.append("".join(buf))
+            buf = []
+        else:
+            buf.append(ch)
+    parts.append("".join(buf))
+    return parts
+
 
 def _parse_scalar(s: str) -> Any:
     s = s.strip()
@@ -84,7 +109,7 @@ def _parse_scalar(s: str) -> Any:
         return s[1:-1]
     if s.startswith("[") and s.endswith("]"):
         inner = s[1:-1].strip()
-        return [_parse_scalar(x) for x in inner.split(",")] if inner else []
+        return [_parse_scalar(x) for x in _split_inline_list(inner)] if inner else []
     if s.lower() in ("true", "false"):
         return s.lower() == "true"
     if re.fullmatch(r"[-+]?\d+", s):
@@ -95,12 +120,19 @@ def _parse_scalar(s: str) -> Any:
     return s
 
 
-def parse_pipeline_text(text: str) -> List[ComponentCall]:
-    """Parse a pipeline document (JSON or the YAML subset)."""
+def parse_pipeline_text(
+    text: str, *, registry: Optional[ComponentRegistry] = None
+) -> List[ComponentCall]:
+    """Parse a pipeline document (JSON or the YAML subset) and validate every
+    component invocation through the registry: unknown components/majors,
+    unknown input keys, and type mismatches are hard ``PipelineError``\\ s at
+    parse time — before anything executes (the paper's schema-evolution
+    discipline applied to the whole document, not just the version tag)."""
+    registry = registry or REGISTRY
     text_stripped = text.strip()
     if text_stripped.startswith("{"):
         doc = json.loads(text_stripped)
-        return _from_doc(doc)
+        return _from_doc(doc, registry)
     calls: List[ComponentCall] = []
     cur: Optional[Tuple[str, int]] = None
     inputs: Dict[str, Any] = {}
@@ -114,8 +146,8 @@ def parse_pipeline_text(text: str) -> List[ComponentCall]:
         m = re.match(r"\s*-\s*component:\s*(\S+)", line)
         if m:
             if cur:
-                calls.append(ComponentCall(cur[0], cur[1], inputs))
-            cur = _split_component(m.group(1))
+                calls.append(_validated_call(cur[0], cur[1], inputs, registry))
+            cur = _split_component(m.group(1), registry)
             inputs, in_inputs = {}, False
             continue
         if re.match(r"\s*inputs:\s*$", line):
@@ -129,29 +161,33 @@ def parse_pipeline_text(text: str) -> List[ComponentCall]:
         if line.strip():
             raise PipelineError(f"unparseable pipeline line: {raw!r}")
     if cur:
-        calls.append(ComponentCall(cur[0], cur[1], inputs))
+        calls.append(_validated_call(cur[0], cur[1], inputs, registry))
     if not calls:
         raise PipelineError("pipeline contains no component invocations")
     return calls
 
 
-def _split_component(ref: str) -> Tuple[str, int]:
+def _validated_call(name: str, version: int, inputs: Dict[str, Any],
+                    registry: ComponentRegistry) -> ComponentCall:
+    return ComponentCall(
+        name, version, registry.parse_inputs(name, version, inputs))
+
+
+def _split_component(ref: str, registry: ComponentRegistry) -> Tuple[str, int]:
     m = re.fullmatch(r"([\w\-]+)@v(\d+)(?:\.\d+)*", ref)
     if not m:
         raise PipelineError(f"bad component reference {ref!r} (want name@vN)")
     name, major = m.group(1), int(m.group(2))
-    if name not in SUPPORTED:
-        raise PipelineError(f"unknown component {name!r}")
-    if major not in SUPPORTED[name]:
-        raise PipelineError(f"{name}@v{major} unsupported (have v{SUPPORTED[name]})")
+    registry.resolve(name, major)  # unknown name/major is a hard error
     return name, major
 
 
-def _from_doc(doc: Dict[str, Any]) -> List[ComponentCall]:
+def _from_doc(doc: Dict[str, Any], registry: ComponentRegistry) -> List[ComponentCall]:
     calls = []
     for item in doc.get("include", []):
-        name, major = _split_component(item["component"])
-        calls.append(ComponentCall(name, major, dict(item.get("inputs", {}))))
+        name, major = _split_component(item["component"], registry)
+        calls.append(_validated_call(
+            name, major, dict(item.get("inputs", {})), registry))
     if not calls:
         raise PipelineError("pipeline contains no component invocations")
     return calls
@@ -214,95 +250,14 @@ def _run_component(
     store: ResultStore,
     harness: Harness,
     harness_factory: Optional[Callable[[Dict[str, Any]], Harness]],
+    registry: Optional[ComponentRegistry] = None,
 ) -> Dict[str, Any]:
-    inp = call.inputs
-    if call.name == "execution":
-        h = harness_factory(inp) if harness_factory else harness
-        ex = ExecutionOrchestrator(inputs=inp, harness=h, store=store)
-        spec = BenchmarkSpec(
-            arch=inp["arch"],
-            shape=inp.get("usecase", inp.get("shape", "train_4k")),
-            system=inp.get("machine", "cpu-smoke"),
-            variant=inp.get("variant", ""),
-        )
-        res = ex.run_cell(spec)
-        return {
-            "component": "execution",
-            "cell": spec.cell,
-            "readiness": int(res.readiness),
-            "error": res.error,
-        }
-    if call.name == "feature-injection":
-        h = harness_factory(inp) if harness_factory else harness
-        ex = ExecutionOrchestrator(inputs=inp, harness=h, store=store)
-        fi = FeatureInjectionOrchestrator(execution=ex, inputs=inp)
-        spec = BenchmarkSpec(
-            arch=inp["arch"],
-            shape=inp.get("usecase", "train_4k"),
-            system=inp.get("machine", "cpu-smoke"),
-        )
-        inj = Injections()
-        if "in_command" in inp:  # paper: env-var injection string
-            for assign in str(inp["in_command"]).replace("export ", "").split(";"):
-                if "=" in assign:
-                    k, v = assign.split("=", 1)
-                    inj.env[k.strip()] = v.strip()
-        for k in ("remat", "microbatches", "strategy", "opt_state_dtype"):
-            if k in inp:
-                inj.overrides[k] = inp[k]
-        res = fi.run(spec, inj)
-        return {
-            "component": "feature-injection",
-            "cell": spec.cell,
-            "readiness": int(res.readiness),
-            "error": res.error,
-        }
-    if call.name == "time-series":
-        pp = PostProcessingOrchestrator(store=store, inputs=inp)
-        out = pp.time_series(
-            source_prefix=inp["source_prefix"],
-            data_labels=list(inp.get("data_labels", ["step_time_s"])),
-            pipeline=list(inp.get("pipeline", [])),
-        )
-        return {
-            "component": "time-series",
-            "points": {k: len(v) for k, v in out["series"].items()},
-            "regressions": {k: len(v) for k, v in out["regressions"].items()},
-        }
-    if call.name == "machine-comparison":
-        pp = PostProcessingOrchestrator(store=store, inputs=inp)
-        out = pp.machine_comparison(
-            selectors=[{"prefix": p} for p in inp.get("selector", [])],
-            metric=inp.get("metric", "step_time_s"),
-        )
-        return {"component": "machine-comparison", "table": out["table"]}
-    if call.name == "scalability":
-        pp = PostProcessingOrchestrator(store=store, inputs=inp)
-        out = pp.scalability(
-            source_prefix=inp["source_prefix"],
-            metric=inp.get("metric", "step_time_s"),
-            mode=inp.get("mode", "strong"),
-        )
-        return {"component": "scalability", "table": out["table"]}
-    if call.name == "gate":
-        return GateOrchestrator(store=store, inputs=inp).run()
-    if call.name == "campaign-report":
-        from repro.core import analysis
-        from repro.core.columnar import CampaignFrame
-
-        metric = inp.get("metric", "step_time_s")
-        frame = CampaignFrame(store, prefixes=inp.get("prefixes") or None)
-        table = frame.summary(metric)
-        return {
-            "component": "campaign-report",
-            "metric": metric,
-            "prefixes": len(table),
-            "table": table,
-            "watermarks": frame.watermarks(),
-            "markdown": analysis.to_markdown(
-                table, f"campaign summary: {metric}"),
-        }
-    raise PipelineError(call.name)  # pragma: no cover — guarded by _split_component
+    """Resolve the call through the registry (following migration shims) and
+    dispatch its runner with validated inputs."""
+    resolved = (registry or REGISTRY).resolve(call.name, call.version)
+    ctx = ComponentContext(
+        store=store, harness=harness, harness_factory=harness_factory)
+    return resolved.run(call.inputs, ctx)
 
 
 def run_pipeline(
@@ -312,6 +267,7 @@ def run_pipeline(
     harness: Optional[Harness] = None,
     harness_factory: Optional[Callable[[Dict[str, Any]], Harness]] = None,
     parallelism: Optional[int] = None,
+    registry: Optional[ComponentRegistry] = None,
 ) -> List[Dict[str, Any]]:
     """Dispatch the component DAG through the scheduler; returns one summary
     per call, in call order.
@@ -334,8 +290,10 @@ def run_pipeline(
             fn=functools.partial(
                 _run_component, call,
                 store=store, harness=harness, harness_factory=harness_factory,
+                registry=registry,
             ),
             deps=frozenset(f"{j:04d}.{calls[j].name}" for j in deps[i]),
+            meta=call.ref,
         )
         for i, call in enumerate(calls)
     ]
@@ -344,10 +302,32 @@ def run_pipeline(
     for i, call in enumerate(calls):
         tr = done[f"{i:04d}.{call.name}"]
         if tr.error is not None:
-            results.append({"component": call.name, "error": tr.error})
+            results.append({"component": call.name, "component_ref": call.ref,
+                            "error": tr.error})
         else:
             results.append(tr.value)
     return results
+
+
+def validate_pipeline(
+    text: str, *, registry: Optional[ComponentRegistry] = None
+) -> List[Dict[str, Any]]:
+    """Schema-check a pipeline document without executing anything: parse,
+    resolve every component through the registry (shims included), validate
+    and coerce every input.  Returns one summary per call — or raises
+    ``PipelineError`` naming the offending component and field."""
+    registry = registry or REGISTRY
+    calls = parse_pipeline_text(text, registry=registry)
+    deps = component_dag(calls)
+    return [
+        {
+            "component": call.ref,
+            "resolved": f"{call.name}@v{registry.resolve(call.name, call.version).target_version}",
+            "inputs": {k: v for k, v in call.inputs.items()},
+            "depends_on": [calls[j].ref for j in deps[i]],
+        }
+        for i, call in enumerate(calls)
+    ]
 
 
 def main(argv=None):
@@ -359,6 +339,10 @@ def main(argv=None):
     ap.add_argument("--store-backend", default="dir", choices=("dir", "jsonl"))
     ap.add_argument("--parallelism", type=int, default=None,
                     help="worker pool bound (default: max parallelism input)")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check the pipeline document (components, "
+                         "versions, input names and types) and exit without "
+                         "executing anything")
     ap.add_argument("--gate", action="store_true",
                     help="enforce regression gates: exit 3 when any gate "
                          "component reports a regression, and write the gate "
@@ -367,7 +351,24 @@ def main(argv=None):
                     help="gate report path used with --gate; a .md summary "
                          "suitable for a PR comment lands next to it")
     args = ap.parse_args(argv)
-    calls = parse_pipeline_text(Path(args.pipeline).read_text())
+    import sys
+
+    try:
+        text = Path(args.pipeline).read_text()
+    except OSError as e:
+        print(f"{args.pipeline}: {e}", file=sys.stderr)
+        return 1
+    if args.validate:
+        try:
+            summary = validate_pipeline(text)
+        except PipelineError as e:
+            print(f"{args.pipeline}: INVALID: {e}", file=sys.stderr)
+            return 1
+        print(json.dumps(summary, indent=2, default=str))
+        print(f"{args.pipeline}: OK ({len(summary)} components)",
+              file=sys.stderr)
+        return 0
+    calls = parse_pipeline_text(text)
     results = run_pipeline(
         calls,
         store=ResultStore(args.store, backend=args.store_backend),

@@ -1,0 +1,429 @@
+"""Typed component API — declared input schemas + the component registry.
+
+The paper's user-facing contract is the reusable CI/CD component with
+declared ``inputs:`` (§II-C, §V-A).  This module is the declaration layer
+that turns that contract into an enforced protocol instead of a convention:
+
+* :class:`InputSpec` — one declared input: name, type, default, required,
+  ``choices``, deprecated aliases (warn + map), help text.
+* :class:`ComponentSchema` — a versioned component's full input schema.
+  ``validate()`` coerces a raw ``inputs:`` mapping into an immutable
+  :class:`ComponentInputs`; unknown keys and type mismatches are hard
+  :class:`PipelineError`\\ s *naming the component and the field* — a typo
+  can never silently fall back to a default again.
+* :class:`ComponentRegistry` — where orchestrators self-register their
+  schemas (and runners).  Versioning follows the paper's schema-evolution
+  discipline: unknown majors are rejected, while registered **migration
+  shims** keep old-major documents (``execution@v3``) running against the
+  current schema (``execution@v4``).
+
+Orchestrators register themselves on import (see ``repro.core.orchestrator``)
+into the process-wide :data:`REGISTRY`; the CI/CD layer
+(``repro.core.cicd``) and the :class:`repro.core.api.Campaign` facade
+resolve every component reference through it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import difflib
+import warnings
+from collections.abc import Mapping
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+
+class PipelineError(ValueError):
+    """A pipeline document or component invocation is invalid.
+
+    Defined here (not in ``cicd``) because schema validation is the layer
+    that raises it; ``repro.core.cicd`` re-exports it for compatibility.
+    """
+
+
+class _Missing:
+    def __repr__(self) -> str:  # pragma: no cover — repr only
+        return "<missing>"
+
+
+#: Sentinel for "no default": the input is simply absent after validation
+#: (``"key" in inputs`` is False), unlike an explicit ``default=None``.
+MISSING = _Missing()
+
+
+def _type_name(t: Any) -> str:
+    if isinstance(t, tuple):
+        return " | ".join(_type_name(x) for x in t)
+    return t if isinstance(t, str) else t.__name__
+
+
+@dataclasses.dataclass(frozen=True)
+class InputSpec:
+    """Declaration of one component input.
+
+    ``type`` is a python type (``str``/``int``/``float``/``bool``/``list``/
+    ``dict``), a tuple of alternatives, or the string ``"any"``.  ``aliases``
+    are deprecated spellings: accepted with a ``DeprecationWarning`` and
+    mapped onto the canonical name.  ``wrap_scalar`` lets a list-typed input
+    accept a bare scalar (``metrics: step_time_s``) by wrapping it.
+    """
+
+    name: str
+    type: Any = str
+    default: Any = MISSING
+    required: bool = False
+    choices: Tuple[Any, ...] = ()
+    aliases: Tuple[str, ...] = ()
+    help: str = ""
+    element: Any = None        # element type for list inputs (None = any)
+    wrap_scalar: bool = False
+
+    @property
+    def types(self) -> Tuple[Any, ...]:
+        return self.type if isinstance(self.type, tuple) else (self.type,)
+
+    def describe(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {"name": self.name, "type": _type_name(self.type)}
+        if self.default is not MISSING:
+            out["default"] = self.default if not isinstance(self.default, tuple) \
+                else list(self.default)
+        if self.required:
+            out["required"] = True
+        if self.choices:
+            out["choices"] = list(self.choices)
+        if self.aliases:
+            out["deprecated_aliases"] = list(self.aliases)
+        if self.help:
+            out["help"] = self.help
+        return out
+
+
+#: The one shared parallelism declaration — every component that dispatches
+#: through the campaign scheduler reuses this spec, so the default worker
+#: count lives in exactly one place (see :func:`resolve_parallelism`).
+PARALLELISM = InputSpec(
+    "parallelism", int, default=1,
+    help="bounded scheduler worker-pool size; 1 = serial (seed behavior)",
+)
+
+
+def resolve_parallelism(inputs: Mapping, override: Optional[int] = None) -> int:
+    """One resolution rule for every dispatch path: an explicit argument
+    wins, else the declared ``parallelism`` input, else the shared default;
+    always clamped to >= 1."""
+    if override is not None:
+        return max(1, int(override))
+    return max(1, int(inputs.get(PARALLELISM.name, PARALLELISM.default)))
+
+
+class ComponentInputs(Mapping):
+    """Validated, coerced, immutable component inputs.
+
+    Behaves as a read-only mapping (so every existing ``inputs.get(...)``
+    call site keeps working) and remembers which component reference it was
+    validated for.  ``namespace("mad")`` collects dotted tuning keys
+    (``mad.z_threshold: 6``) into a plain parameter dict.
+    """
+
+    __slots__ = ("_data", "component")
+
+    def __init__(self, data: Dict[str, Any], component: str = ""):
+        self._data = dict(data)
+        self.component = component
+
+    def __getitem__(self, key: str) -> Any:
+        return self._data[key]
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._data)
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def namespace(self, ns: str) -> Dict[str, Any]:
+        pre = ns + "."
+        return {k[len(pre):]: v for k, v in self._data.items()
+                if k.startswith(pre)}
+
+    def __repr__(self) -> str:
+        return f"ComponentInputs({self.component}, {self._data!r})"
+
+
+def _coerce(value: Any, spec: InputSpec, ref: str) -> Any:
+    if value is None:
+        return None
+    for t in spec.types:
+        if t == "any":
+            return value
+        if t is bool and isinstance(value, bool):
+            return value
+        if isinstance(value, bool):
+            continue  # bool is an int subclass; never coerce it silently
+        if t is int and isinstance(value, int):
+            return int(value)
+        if t is float and isinstance(value, (int, float)):
+            return float(value)
+        if t is str and isinstance(value, str):
+            return value
+        if t is dict and isinstance(value, Mapping):
+            return dict(value)
+        if t is list and isinstance(value, (list, tuple)):
+            if spec.element is None:
+                return list(value)
+            espec = InputSpec(spec.name, spec.element)
+            return [_coerce(v, espec, ref) for v in value]
+    if list in spec.types and spec.wrap_scalar and not isinstance(value, (list, tuple)):
+        return _coerce([value], spec, ref)
+    raise PipelineError(
+        f"{ref}: input {spec.name!r} expects {_type_name(spec.type)}, "
+        f"got {type(value).__name__} {value!r}"
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ComponentSchema:
+    """A versioned component's declared input schema."""
+
+    name: str
+    version: int
+    inputs: Tuple[InputSpec, ...] = ()
+    open_namespaces: Tuple[str, ...] = ()  # dotted keys `<ns>.<param>` pass
+    description: str = ""
+
+    @property
+    def ref(self) -> str:
+        return f"{self.name}@v{self.version}"
+
+    def spec(self, name: str) -> Optional[InputSpec]:
+        for s in self.inputs:
+            if s.name == name:
+                return s
+        return None
+
+    def _known_keys(self) -> List[str]:
+        keys = [s.name for s in self.inputs]
+        keys += [a for s in self.inputs for a in s.aliases]
+        return keys
+
+    def validate(self, raw: Mapping, *, require: bool = True,
+                 ref: Optional[str] = None) -> ComponentInputs:
+        """Coerce ``raw`` into a :class:`ComponentInputs`.
+
+        Hard :class:`PipelineError` (naming ``ref`` and the field) on
+        unknown keys, type mismatches, bad choices, or — when ``require``
+        is set, the pipeline-dispatch path — missing required inputs.
+        ``require=False`` is the library path: an orchestrator constructed
+        directly receives its identity (spec, selectors, ...) as method
+        arguments, so required-ness is not enforced, but typos and type
+        errors still are.
+        """
+        ref = ref or self.ref
+        if isinstance(raw, ComponentInputs):
+            return raw
+        by_name = {s.name: s for s in self.inputs}
+        by_alias = {a: s for s in self.inputs for a in s.aliases}
+        out: Dict[str, Any] = {}
+        for key, value in dict(raw).items():
+            if "." in key and key.split(".", 1)[0] in self.open_namespaces:
+                out[key] = value
+                continue
+            spec = by_name.get(key)
+            if spec is None:
+                spec = by_alias.get(key)
+                if spec is None:
+                    hint = difflib.get_close_matches(key, self._known_keys(), 1)
+                    did = f" (did you mean {hint[0]!r}?)" if hint else ""
+                    raise PipelineError(f"{ref}: unknown input {key!r}{did}")
+                if spec.name in raw:
+                    raise PipelineError(
+                        f"{ref}: both {spec.name!r} and its deprecated alias "
+                        f"{key!r} given")
+                warnings.warn(
+                    f"{ref}: input {key!r} is deprecated, use {spec.name!r}",
+                    DeprecationWarning, stacklevel=3)
+            value = _coerce(value, spec, ref)
+            if spec.choices and value is not None and value not in spec.choices:
+                raise PipelineError(
+                    f"{ref}: input {spec.name!r} must be one of "
+                    f"{list(spec.choices)}, got {value!r}")
+            out[spec.name] = value
+        for spec in self.inputs:
+            if spec.name in out:
+                continue
+            if spec.required and require:
+                raise PipelineError(f"{ref}: required input {spec.name!r} missing")
+            if spec.default is not MISSING:
+                out[spec.name] = _coerce(spec.default, spec, ref) \
+                    if spec.default is not None else None
+        return ComponentInputs(out, component=ref)
+
+    def describe(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {
+            "component": self.ref,
+            "inputs": [s.describe() for s in self.inputs],
+        }
+        if self.open_namespaces:
+            out["open_namespaces"] = list(self.open_namespaces)
+        if self.description:
+            out["description"] = self.description
+        return out
+
+
+def merge_schemas(name: str, version: int, *schemas: ComponentSchema,
+                  description: str = "") -> ComponentSchema:
+    """Union of several schemas (first declaration of a name wins) — used
+    for orchestrators whose sub-components share a construction surface."""
+    seen: Dict[str, InputSpec] = {}
+    for sch in schemas:
+        for s in sch.inputs:
+            seen.setdefault(s.name, s)
+    namespaces = tuple(dict.fromkeys(
+        ns for sch in schemas for ns in sch.open_namespaces))
+    return ComponentSchema(name, version, tuple(seen.values()), namespaces,
+                           description)
+
+
+def coerce_inputs(schema: ComponentSchema, inputs: Mapping) -> ComponentInputs:
+    """Orchestrator-construction path: pass validated inputs through
+    untouched (they may come from a superset schema, e.g. feature-injection
+    inputs driving the inner execution orchestrator); validate raw dicts
+    against ``schema`` without enforcing dispatch-only required fields."""
+    if isinstance(inputs, ComponentInputs):
+        return inputs
+    return schema.validate(inputs, require=False)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ComponentContext:
+    """What a component runner gets to act on (registry → scheduler →
+    store wiring lives in ``cicd.run_pipeline`` / the ``Campaign`` facade)."""
+
+    store: Any
+    harness: Any = None
+    harness_factory: Optional[Callable[[Mapping], Any]] = None
+
+    def harness_for(self, inputs: Mapping) -> Any:
+        return self.harness_factory(inputs) if self.harness_factory else self.harness
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedComponent:
+    """A component reference resolved through the registry: the declared
+    ref (what the document said), the target schema (possibly a newer
+    major), the migration shim chain, and the runner."""
+
+    ref: str
+    schema: ComponentSchema
+    runner: Optional[Callable[[ComponentInputs, ComponentContext], Any]]
+    migrate: Callable[[Dict[str, Any]], Dict[str, Any]]
+    target_version: int
+
+    def parse(self, raw: Mapping, *, require: bool = True) -> ComponentInputs:
+        if isinstance(raw, ComponentInputs):
+            return raw
+        return self.schema.validate(self.migrate(dict(raw)),
+                                    require=require, ref=self.ref)
+
+    def run(self, inputs: Mapping, ctx: ComponentContext) -> Any:
+        if self.runner is None:
+            raise PipelineError(f"{self.ref} has no registered runner")
+        return self.runner(self.parse(inputs), ctx)
+
+
+class ComponentRegistry:
+    """Versioned component schemas + runners + migration shims.
+
+    ``resolve("execution", 3)`` follows the registered v3→v4 shim and
+    returns the v4 schema with the migration pre-composed, so a v3 document
+    keeps running while new documents target v4 — and a genuinely unknown
+    name or major is a hard :class:`PipelineError`.
+    """
+
+    def __init__(self) -> None:
+        self._components: Dict[Tuple[str, int], Tuple[ComponentSchema, Optional[Callable]]] = {}
+        self._migrations: Dict[Tuple[str, int], Tuple[int, Callable]] = {}
+
+    def register(self, schema: ComponentSchema,
+                 runner: Optional[Callable] = None) -> ComponentSchema:
+        key = (schema.name, schema.version)
+        if key in self._components:
+            raise ValueError(f"component {schema.ref} already registered")
+        self._components[key] = (schema, runner)
+        return schema
+
+    def register_migration(self, name: str, from_version: int, to_version: int,
+                           migrate: Callable[[Dict[str, Any]], Dict[str, Any]]) -> None:
+        if (name, to_version) not in self._components and \
+                (name, to_version) not in self._migrations:
+            raise ValueError(
+                f"cannot migrate {name}@v{from_version} to unregistered "
+                f"{name}@v{to_version}")
+        if (name, from_version) in self._components or \
+                (name, from_version) in self._migrations:
+            raise ValueError(f"{name}@v{from_version} already registered")
+        self._migrations[(name, from_version)] = (to_version, migrate)
+
+    def names(self) -> List[str]:
+        return sorted({n for n, _ in self._components} |
+                      {n for n, _ in self._migrations})
+
+    def versions(self, name: str) -> List[int]:
+        """Every major accepted for ``name`` — registered directly or via shim."""
+        return sorted({v for n, v in self._components if n == name} |
+                      {v for n, v in self._migrations if n == name})
+
+    def resolve(self, name: str, version: int) -> ResolvedComponent:
+        ref = f"{name}@v{version}"
+        shims: List[Callable] = []
+        v = version
+        for _ in range(len(self._migrations) + 1):
+            direct = self._components.get((name, v))
+            if direct is not None:
+                schema, runner = direct
+                if not shims:
+                    return ResolvedComponent(ref, schema, runner, dict, v)
+
+                def migrate(raw: Dict[str, Any], _shims=tuple(shims)) -> Dict[str, Any]:
+                    for fn in _shims:
+                        raw = fn(dict(raw))
+                    return raw
+
+                return ResolvedComponent(ref, schema, runner, migrate, v)
+            step = self._migrations.get((name, v))
+            if step is None:
+                break
+            v, fn = step
+            shims.append(fn)
+        if name not in self.names():
+            hint = difflib.get_close_matches(name, self.names(), 1)
+            did = f" (did you mean {hint[0]!r}?)" if hint else ""
+            raise PipelineError(f"unknown component {name!r}{did}")
+        raise PipelineError(
+            f"{ref} unsupported (have v{self.versions(name)})")
+
+    def parse_inputs(self, name: str, version: int, raw: Mapping,
+                     *, require: bool = True) -> ComponentInputs:
+        return self.resolve(name, version).parse(raw, require=require)
+
+    def describe(self) -> List[Dict[str, Any]]:
+        """Registry listing for ``python -m repro components``: one entry
+        per accepted component reference, shims included."""
+        out = [schema.describe()
+               for schema, _ in (self._components[k]
+                                 for k in sorted(self._components))]
+        for (name, v), (to_v, _) in sorted(self._migrations.items()):
+            target = self.resolve(name, v)
+            out.append({
+                "component": f"{name}@v{v}",
+                "migrates_to": f"{name}@v{target.target_version}",
+                "inputs": [s.describe() for s in target.schema.inputs],
+            })
+        return out
+
+
+#: Process-wide default registry.  Orchestrators self-register here on
+#: import; ``cicd`` and the ``Campaign`` facade resolve against it.
+REGISTRY = ComponentRegistry()

@@ -21,11 +21,22 @@ from typing import Optional
 import jax
 
 from repro.core import protocol
-from repro.core.harness import BenchmarkSpec, Harness, Injections
+from repro.core.harness import BenchmarkSpec, Harness, HarnessCapabilities, Injections
+from repro.core.readiness import Readiness
 
 
 class DryRunHarness(Harness):
     name = "dryrun"
+
+    def capabilities(self) -> HarnessCapabilities:
+        # The dry-run subprocess takes env vars and config-knob overrides
+        # via CLI flags, but a launcher CALLABLE cannot cross the process
+        # boundary — declaring that honestly lets negotiation reject e.g.
+        # an energy-launcher injection before the subprocess is spawned.
+        return HarnessCapabilities(
+            max_readiness=Readiness.REPRODUCIBLE,
+            launcher_injection=False,
+        )
 
     def __init__(
         self,

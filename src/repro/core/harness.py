@@ -23,22 +23,31 @@ import os
 import threading
 import time
 from contextlib import contextmanager
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, FrozenSet, List, Optional
 
 import numpy as np
 
 from repro.core import protocol
+from repro.core.readiness import Readiness
 
 
 @dataclasses.dataclass(frozen=True)
 class BenchmarkSpec:
-    """One benchmark cell: architecture × input shape × system."""
+    """One benchmark cell: architecture × input shape × system.
+
+    ``require_readiness`` is the cell's demand on the harness (as a
+    ``Readiness`` level): a cell requiring REPRODUCIBLE negotiates against
+    the harness capability declaration *before* dispatch and fails fast on
+    a harness that cannot attain it (see :func:`negotiate`).  0 (FAILED)
+    means no requirement — the seed behavior.
+    """
 
     arch: str
     shape: str          # the paper's "usecase"
     system: str         # the paper's "machine"
     variant: str = ""   # defaults to shape
     seed: int = 0
+    require_readiness: int = 0
 
     @property
     def cell(self) -> str:
@@ -140,10 +149,85 @@ def injected_env(env: Dict[str, str]):
             lk.release()
 
 
+@dataclasses.dataclass(frozen=True)
+class HarnessCapabilities:
+    """What a harness declares it can do — the downward half of the typed
+    component contract.  ``BenchmarkSpec`` requirements negotiate against
+    this *before* dispatch, so a cell demanding REPRODUCIBLE fails fast on
+    a harness that cannot attain it instead of burning an execution slot
+    and reporting a mystery gap afterwards.
+    """
+
+    max_readiness: Readiness = Readiness.REPRODUCIBLE
+    #: Step kinds the harness can execute; empty = unrestricted.
+    step_kinds: FrozenSet[str] = frozenset()
+    env_injection: bool = True
+    override_injection: bool = True
+    launcher_injection: bool = True
+
+    def describe(self) -> Dict[str, Any]:
+        return {
+            "max_readiness": self.max_readiness.name,
+            "step_kinds": sorted(self.step_kinds) or "any",
+            "env_injection": self.env_injection,
+            "override_injection": self.override_injection,
+            "launcher_injection": self.launcher_injection,
+        }
+
+
+class CapabilityError(ValueError):
+    """A cell's requirements exceed the harness's declared capabilities."""
+
+
+def _shape_kind(shape: str) -> Optional[str]:
+    """Step kind of a named shape (lazy import — harness adapters must stay
+    importable without the benchmark collection)."""
+    try:
+        from repro.configs import shapes as SH
+        return getattr(SH.SHAPES.get(shape), "kind", None)
+    except Exception:
+        return None
+
+
+def negotiate(spec: BenchmarkSpec, harness: "Harness",
+              injections: Optional[Injections] = None) -> HarnessCapabilities:
+    """Check one cell (+ its injections) against the harness capability
+    declaration; raises :class:`CapabilityError` naming every violated
+    capability, returns the capabilities when the cell is dispatchable."""
+    caps = harness.capabilities()
+    reasons: List[str] = []
+    if spec.require_readiness > int(caps.max_readiness):
+        reasons.append(
+            f"cell requires readiness {Readiness(spec.require_readiness).name} "
+            f"but harness attains at most {caps.max_readiness.name}")
+    kind = _shape_kind(spec.shape)
+    if caps.step_kinds and kind is not None and kind not in caps.step_kinds:
+        reasons.append(
+            f"shape {spec.shape!r} needs step kind {kind!r} "
+            f"(harness supports {sorted(caps.step_kinds)})")
+    if injections is not None:
+        if injections.env and not caps.env_injection:
+            reasons.append("env injection not supported")
+        if injections.overrides and not caps.override_injection:
+            reasons.append("config-override injection not supported")
+        if injections.launcher is not None and not caps.launcher_injection:
+            reasons.append("launcher injection not supported")
+    if reasons:
+        raise CapabilityError(
+            f"harness {harness.name!r} cannot run cell {spec.cell}: "
+            + "; ".join(reasons))
+    return caps
+
+
 class Harness:
     """Adapter interface: everything exaCB needs from a harness."""
 
     name = "abstract"
+
+    def capabilities(self) -> HarnessCapabilities:
+        """Capability declaration; the permissive default keeps third-party
+        adapters working, but real adapters should narrow it honestly."""
+        return HarnessCapabilities()
 
     def run(self, spec: BenchmarkSpec, injections: Optional[Injections] = None) -> protocol.Report:
         raise NotImplementedError
@@ -166,6 +250,14 @@ class ExecHarness(Harness):
     """
 
     name = "exec"
+
+    def capabilities(self) -> HarnessCapabilities:
+        # Real execution with deterministic artifact digests: every level up
+        # to REPRODUCIBLE, all three step kinds, every injection mechanism.
+        return HarnessCapabilities(
+            max_readiness=Readiness.REPRODUCIBLE,
+            step_kinds=frozenset({"train", "prefill", "decode"}),
+        )
 
     def __init__(self, *, steps: int = 3, batch: int = 2, seq: int = 16):
         self.steps = steps

@@ -24,12 +24,142 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import analysis
 from repro.core.columnar import CampaignFrame
-from repro.core.harness import BenchmarkSpec, Harness, Injections
+from repro.core.component import (
+    PARALLELISM,
+    REGISTRY,
+    ComponentContext,
+    ComponentInputs,
+    ComponentRegistry,
+    ComponentSchema,
+    InputSpec,
+    PipelineError,
+    coerce_inputs,
+    merge_schemas,
+    resolve_parallelism,
+)
+from repro.core.harness import BenchmarkSpec, CapabilityError, Harness, Injections, negotiate
 from repro.core.protocol import DataEntry, Report, new_report
-from repro.core.readiness import Readiness, classify
-from repro.core.regression import RegressionGate
+from repro.core.readiness import Readiness, classify, parse_level
+from repro.core.regression import GATE_SCHEMA, RegressionGate
 from repro.core.scheduler import CampaignScheduler, TaskResult
 from repro.core.store import ResultStore
+
+# ---------------------------------------------------------------------------
+# Declared input schemas (paper §II-C: components carry versioned, declared
+# ``inputs:``).  v4 is the typed-API major: canonical input names match the
+# ``BenchmarkSpec`` fields (``shape``/``system``), with the paper's v3
+# vocabulary (``usecase``/``machine``) kept as deprecated aliases; migration
+# shims (registered below) keep v3 documents running unchanged.
+# ---------------------------------------------------------------------------
+
+_CELL_INPUTS = (
+    InputSpec("prefix", str, default="default",
+              help="store prefix reports land under"),
+    InputSpec("arch", str, required=True,
+              help="architecture id from the benchmark collection"),
+    InputSpec("shape", str, default="train_4k", aliases=("usecase",),
+              help="input-shape id (the paper's 'usecase')"),
+    InputSpec("system", str, default="cpu-smoke", aliases=("machine",),
+              help="target system id (the paper's 'machine')"),
+    InputSpec("variant", str, default="",
+              help="variant label; defaults to the shape"),
+    InputSpec("seed", int, default=0),
+    InputSpec("record", bool, default=True,
+              help="persist each report the moment its cell finishes"),
+    InputSpec("require_readiness", str,
+              choices=("none", "runnable", "instrumented", "reproducible"),
+              help="readiness level the cell demands; negotiated against "
+                   "the harness capability declaration before dispatch"),
+    PARALLELISM,
+)
+
+EXECUTION_SCHEMA = ComponentSchema(
+    "execution", 4, _CELL_INPUTS,
+    description="run one benchmark cell through a harness with failure isolation",
+)
+
+FEATURE_INJECTION_SCHEMA = ComponentSchema(
+    "feature-injection", 4,
+    _CELL_INPUTS + (
+        InputSpec("in_command", str,
+                  help="env-var injection string (paper form: "
+                       "'export UCX_RNDV_THRESH=65536')"),
+        InputSpec("remat", str, help="remat-policy config override"),
+        InputSpec("microbatches", int, help="microbatch config override"),
+        InputSpec("strategy", str, help="sharding-strategy config override"),
+        InputSpec("opt_state_dtype", str, help="optimizer-state dtype override"),
+        InputSpec("env_knob", str,
+                  help="env var swept across 'values' (one cell per value)"),
+        InputSpec("override_knob", str,
+                  help="config knob swept across 'values'"),
+        InputSpec("values", list, wrap_scalar=True,
+                  help="sweep points for env_knob / override_knob"),
+    ),
+    description="re-run a frozen benchmark with an injected feature",
+)
+
+_ANALYSIS_INPUTS = (
+    InputSpec("prefix", str, default="evaluation",
+              help="store prefix evaluation reports land under"),
+    InputSpec("system", str, default="analysis", aliases=("machine",)),
+    InputSpec("columnar", bool, default=True,
+              help="read through the incremental columnar plane"),
+    InputSpec("record", bool, default=True,
+              help="write the evaluation report back into the store"),
+)
+
+TIME_SERIES_SCHEMA = ComponentSchema(
+    "time-series", 4,
+    _ANALYSIS_INPUTS + (
+        InputSpec("source_prefix", str, required=True),
+        InputSpec("data_labels", list, default=("step_time_s",), element=str,
+                  wrap_scalar=True),
+        InputSpec("pipeline", list, default=(), element=str, wrap_scalar=True,
+                  help="restrict to these reporter pipeline ids"),
+    ),
+    open_namespaces=("detector",),
+    description="metric-over-time series + regression flags (paper Fig. 3/4)",
+)
+
+MACHINE_COMPARISON_SCHEMA = ComponentSchema(
+    "machine-comparison", 4,
+    _ANALYSIS_INPUTS + (
+        InputSpec("selector", list, required=True, wrap_scalar=True,
+                  help="prefixes (or {prefix, system} mappings) to compare"),
+        InputSpec("metric", str, default="step_time_s"),
+    ),
+    description="one metric across systems/prefixes (paper Fig. 5)",
+)
+
+SCALABILITY_SCHEMA = ComponentSchema(
+    "scalability", 4,
+    _ANALYSIS_INPUTS + (
+        InputSpec("source_prefix", str, required=True),
+        InputSpec("metric", str, default="step_time_s"),
+        InputSpec("mode", str, default="strong", choices=("strong", "weak")),
+    ),
+    description="scaling efficiency across node counts (paper Fig. 5/7)",
+)
+
+CAMPAIGN_REPORT_SCHEMA = ComponentSchema(
+    "campaign-report", 1,
+    (
+        InputSpec("metric", str, default="step_time_s"),
+        InputSpec("prefixes", list, default=(), element=str, wrap_scalar=True,
+                  help="prefixes to summarize; empty = the whole store "
+                       "(waits on every producer in the DAG)"),
+    ),
+    description="cross-prefix campaign summary in one columnar scan",
+)
+
+# The construction-surface union for PostProcessingOrchestrator: its three
+# analyses are the schema-bearing sub-components above; a directly
+# constructed orchestrator validates against their merged declaration.
+POST_PROCESSING_SCHEMA = merge_schemas(
+    "post-processing", 4,
+    TIME_SERIES_SCHEMA, MACHINE_COMPARISON_SCHEMA, SCALABILITY_SCHEMA,
+    description="analysis over stored results, decoupled from execution",
+)
 
 
 @dataclasses.dataclass
@@ -58,7 +188,8 @@ class ExecutionOrchestrator:
     """Runs benchmark cells through a harness with failure isolation
     (paper §V-A1)."""
 
-    component = "execution@v3"
+    component = "execution@v4"
+    schema = EXECUTION_SCHEMA
 
     def __init__(
         self,
@@ -69,7 +200,7 @@ class ExecutionOrchestrator:
         fixture: Optional[Tuple[Callable[[], None], Callable[[], None]]] = None,
         max_retries: int = 1,
     ):
-        self.inputs = dict(inputs)
+        self.inputs = coerce_inputs(self.schema, inputs)
         self.harness = harness
         self.store = store
         self.fixture = fixture
@@ -80,6 +211,16 @@ class ExecutionOrchestrator:
         return self.inputs.get("prefix", "default")
 
     def run_cell(self, spec: BenchmarkSpec, injections: Optional[Injections] = None) -> CellResult:
+        # Capability negotiation BEFORE dispatch: a cell whose requirements
+        # (readiness level, step kind, injection mechanisms) exceed what the
+        # harness declares fails fast — no execution slot burned, and the
+        # error names every violated capability instead of surfacing as a
+        # mystery readiness gap afterwards.
+        try:
+            negotiate(spec, self.harness, injections)
+        except CapabilityError as e:
+            return CellResult(spec, None, Readiness.FAILED,
+                              error=f"CapabilityError: {e}", attempts=0)
         setup, teardown = self.fixture or (None, None)
         last_err = None
         for attempt in range(1, self.max_retries + 1):
@@ -108,9 +249,7 @@ class ExecutionOrchestrator:
         return CellResult(spec, None, Readiness.FAILED, error=last_err, attempts=self.max_retries)
 
     def _parallelism(self, override: Optional[int]) -> int:
-        if override is not None:
-            return max(1, int(override))
-        return max(1, int(self.inputs.get("parallelism", 1)))
+        return resolve_parallelism(self.inputs, override)
 
     def run_collection(
         self,
@@ -141,11 +280,12 @@ class FeatureInjectionOrchestrator:
     feature — env knob, launcher wrapper, or config override — without
     modifying the benchmark (paper §V-A3, Figs. 6/8)."""
 
-    component = "feature-injection@v3"
+    component = "feature-injection@v4"
+    schema = FEATURE_INJECTION_SCHEMA
 
     def __init__(self, *, execution: ExecutionOrchestrator, inputs: Dict[str, Any]):
         self.execution = execution
-        self.inputs = dict(inputs)
+        self.inputs = coerce_inputs(self.schema, inputs)
 
     def sweep(
         self,
@@ -155,27 +295,33 @@ class FeatureInjectionOrchestrator:
         override_knob: Optional[str] = None,
         values: Sequence[Any] = (),
         launcher: Optional[Callable] = None,
+        base: Optional[Injections] = None,
         parallelism: Optional[int] = None,
     ) -> List[CellResult]:
         """One run per injected value (the UCX_RNDV_THRESH experiment).
 
-        Sweep points are independent cells — with ``parallelism`` > 1 they
-        dispatch concurrently.  Override-knob points parallelize freely;
-        env-knob points injecting the SAME variable serialize against each
-        other inside ``harness.injected_env`` (per-key lock), because
-        ``os.environ`` is process-global — each cell genuinely executes
-        under its own value.
+        ``base`` injections (fixed env vars / overrides shared by every
+        point) are applied under each sweep value; the swept knob wins on
+        conflict.  Sweep points are independent cells — with
+        ``parallelism`` > 1 they dispatch concurrently.  Override-knob
+        points parallelize freely; env-knob points injecting the SAME
+        variable serialize against each other inside
+        ``harness.injected_env`` (per-key lock), because ``os.environ`` is
+        process-global — each cell genuinely executes under its own value.
         """
         injections = []
         for v in values:
-            inj = Injections(launcher=launcher)
+            inj = Injections(
+                env=dict(base.env) if base else {},
+                launcher=launcher or (base.launcher if base else None),
+                overrides=dict(base.overrides) if base else {},
+            )
             if env_knob:
                 inj.env[env_knob] = str(v)
             if override_knob:
                 inj.overrides[override_knob] = v
             injections.append(inj)
-        if parallelism is None:
-            parallelism = int(self.inputs.get("parallelism", 1))
+        parallelism = resolve_parallelism(self.inputs, parallelism)
         if parallelism <= 1 or len(injections) <= 1:
             return [self.execution.run_cell(spec, inj) for inj in injections]
         sched = CampaignScheduler(parallelism=parallelism, name="sweep")
@@ -202,11 +348,12 @@ class PostProcessingOrchestrator:
     evaluation report back into the store (pure read-side analysis).
     """
 
-    component = "post-processing@v3"
+    component = "post-processing@v4"
+    schema = POST_PROCESSING_SCHEMA
 
     def __init__(self, *, store: ResultStore, inputs: Dict[str, Any]):
         self.store = store
-        self.inputs = dict(inputs)
+        self.inputs = coerce_inputs(self.schema, inputs)
         self.use_columnar = bool(self.inputs.get("columnar", True))
 
     def _eval_prefix(self) -> str:
@@ -216,7 +363,7 @@ class PostProcessingOrchestrator:
         if not self.inputs.get("record", True):
             return None
         rep = new_report(
-            system=self.inputs.get("machine", "analysis"),
+            system=self.inputs.get("system", "analysis"),
             variant=kind,
             usecase=source_prefix,
             parameter={"analysis": kind, "inputs": {k: v for k, v in self.inputs.items()}},
@@ -344,10 +491,11 @@ class GateOrchestrator:
     """
 
     component = "gate@v1"
+    schema = GATE_SCHEMA
 
     def __init__(self, *, store: ResultStore, inputs: Dict[str, Any]):
         self.store = store
-        self.inputs = dict(inputs)
+        self.inputs = coerce_inputs(self.schema, inputs)
 
     def run(self) -> Dict[str, Any]:
         return RegressionGate.from_inputs(self.inputs).run(self.store)
@@ -362,3 +510,169 @@ def _flatten(d: Dict[str, Any], prefix: str = "") -> List[Tuple[str, float]]:
         elif isinstance(v, (int, float, bool)):
             out.append((key, float(v)))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Component runners + self-registration.  Each orchestrator registers its
+# versioned schema (and the runner the CI/CD layer dispatches through) into
+# the process-wide registry; ``cicd`` no longer hardcodes any of this.
+# ---------------------------------------------------------------------------
+
+def spec_from_inputs(inputs: ComponentInputs) -> BenchmarkSpec:
+    """Validated component inputs → the typed benchmark cell."""
+    if not inputs.get("arch"):
+        raise PipelineError(
+            f"{inputs.component or 'execution'}: input 'arch' is required")
+    return BenchmarkSpec(
+        arch=inputs["arch"],
+        shape=inputs.get("shape", "train_4k"),
+        system=inputs.get("system", "cpu-smoke"),
+        variant=inputs.get("variant", ""),
+        seed=int(inputs.get("seed", 0)),
+        require_readiness=int(parse_level(inputs.get("require_readiness"))),
+    )
+
+
+def _cell_summary(name: str, spec: BenchmarkSpec, res: CellResult) -> Dict[str, Any]:
+    return {
+        "component": name,
+        "cell": spec.cell,
+        "readiness": int(res.readiness),
+        "error": res.error,
+    }
+
+
+def _run_execution(inputs: ComponentInputs, ctx: ComponentContext) -> Dict[str, Any]:
+    ex = ExecutionOrchestrator(
+        inputs=inputs, harness=ctx.harness_for(inputs), store=ctx.store)
+    spec = spec_from_inputs(inputs)
+    return _cell_summary("execution", spec, ex.run_cell(spec))
+
+
+def _injections_from_inputs(inputs: ComponentInputs) -> Injections:
+    inj = Injections()
+    if inputs.get("in_command"):  # paper: env-var injection string
+        for assign in str(inputs["in_command"]).replace("export ", "").split(";"):
+            if "=" in assign:
+                k, v = assign.split("=", 1)
+                inj.env[k.strip()] = v.strip()
+    for k in ("remat", "microbatches", "strategy", "opt_state_dtype"):
+        if inputs.get(k) is not None:
+            inj.overrides[k] = inputs[k]
+    return inj
+
+
+def _run_feature_injection(inputs: ComponentInputs, ctx: ComponentContext) -> Dict[str, Any]:
+    ex = ExecutionOrchestrator(
+        inputs=inputs, harness=ctx.harness_for(inputs), store=ctx.store)
+    fi = FeatureInjectionOrchestrator(execution=ex, inputs=inputs)
+    spec = spec_from_inputs(inputs)
+    values = inputs.get("values")
+    if values:
+        if not (inputs.get("env_knob") or inputs.get("override_knob")):
+            raise PipelineError(
+                f"{inputs.component}: 'values' needs an 'env_knob' or "
+                "'override_knob' to sweep")
+        # Declared fixed injections (in_command env vars, config overrides)
+        # apply under every sweep point — schema-accepted inputs must never
+        # silently do nothing.
+        results = fi.sweep(
+            spec,
+            env_knob=inputs.get("env_knob"),
+            override_knob=inputs.get("override_knob"),
+            values=list(values),
+            base=_injections_from_inputs(inputs),
+        )
+        errors = [r.error for r in results if r.error]
+        return {
+            "component": "feature-injection",
+            "cell": spec.cell,
+            "points": len(results),
+            "readiness": [int(r.readiness) for r in results],
+            "error": "; ".join(errors) if errors else None,
+        }
+    res = fi.run(spec, _injections_from_inputs(inputs))
+    return _cell_summary("feature-injection", spec, res)
+
+
+def _run_time_series(inputs: ComponentInputs, ctx: ComponentContext) -> Dict[str, Any]:
+    pp = PostProcessingOrchestrator(store=ctx.store, inputs=inputs)
+    out = pp.time_series(
+        source_prefix=inputs["source_prefix"],
+        data_labels=list(inputs["data_labels"]),
+        pipeline=list(inputs["pipeline"]),
+        detector=inputs.namespace("detector") or None,
+    )
+    return {
+        "component": "time-series",
+        "points": {k: len(v) for k, v in out["series"].items()},
+        "regressions": {k: len(v) for k, v in out["regressions"].items()},
+    }
+
+
+def _run_machine_comparison(inputs: ComponentInputs, ctx: ComponentContext) -> Dict[str, Any]:
+    pp = PostProcessingOrchestrator(store=ctx.store, inputs=inputs)
+    out = pp.machine_comparison(
+        selectors=[sel if isinstance(sel, dict) else {"prefix": sel}
+                   for sel in inputs["selector"]],
+        metric=inputs["metric"],
+    )
+    return {"component": "machine-comparison", "table": out["table"]}
+
+
+def _run_scalability(inputs: ComponentInputs, ctx: ComponentContext) -> Dict[str, Any]:
+    pp = PostProcessingOrchestrator(store=ctx.store, inputs=inputs)
+    out = pp.scalability(
+        source_prefix=inputs["source_prefix"],
+        metric=inputs["metric"],
+        mode=inputs["mode"],
+    )
+    return {"component": "scalability", "table": out["table"]}
+
+
+def _run_gate(inputs: ComponentInputs, ctx: ComponentContext) -> Dict[str, Any]:
+    return GateOrchestrator(store=ctx.store, inputs=inputs).run()
+
+
+def _run_campaign_report(inputs: ComponentInputs, ctx: ComponentContext) -> Dict[str, Any]:
+    metric = inputs["metric"]
+    frame = CampaignFrame(ctx.store, prefixes=list(inputs["prefixes"]) or None)
+    table = frame.summary(metric)
+    return {
+        "component": "campaign-report",
+        "metric": metric,
+        "prefixes": len(table),
+        "table": table,
+        "watermarks": frame.watermarks(),
+        "markdown": analysis.to_markdown(table, f"campaign summary: {metric}"),
+    }
+
+
+def _migrate_cell_vocabulary(inputs: Dict[str, Any]) -> Dict[str, Any]:
+    """v3 → v4 shim: the paper vocabulary (``usecase``/``machine``) was
+    canonical in v3, so the rename is silent here — only a *v4* document
+    still using the old names earns a deprecation warning via the alias
+    mechanism."""
+    for old, new in (("usecase", "shape"), ("machine", "system")):
+        if old in inputs and new not in inputs:
+            inputs[new] = inputs.pop(old)
+    return inputs
+
+
+def register_components(registry: ComponentRegistry) -> ComponentRegistry:
+    """Register every orchestrator-backed component (schema + runner) and
+    the v3→v4 migration shims into ``registry``."""
+    registry.register(EXECUTION_SCHEMA, _run_execution)
+    registry.register(FEATURE_INJECTION_SCHEMA, _run_feature_injection)
+    registry.register(TIME_SERIES_SCHEMA, _run_time_series)
+    registry.register(MACHINE_COMPARISON_SCHEMA, _run_machine_comparison)
+    registry.register(SCALABILITY_SCHEMA, _run_scalability)
+    registry.register(GATE_SCHEMA, _run_gate)
+    registry.register(CAMPAIGN_REPORT_SCHEMA, _run_campaign_report)
+    for name in ("execution", "feature-injection", "time-series",
+                 "machine-comparison", "scalability"):
+        registry.register_migration(name, 3, 4, _migrate_cell_vocabulary)
+    return registry
+
+
+register_components(REGISTRY)

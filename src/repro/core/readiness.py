@@ -25,6 +25,27 @@ class Readiness(enum.IntEnum):
     REPRODUCIBLE = 3
 
 
+def parse_level(value) -> Readiness:
+    """Coerce a declared readiness requirement (enum, int, or name — the
+    form a ``require_readiness:`` component input arrives in) to a level.
+    ``None``/``"none"`` mean "no requirement" (FAILED, the zero level)."""
+    if isinstance(value, Readiness):
+        return value
+    if isinstance(value, bool):
+        raise ValueError(f"bad readiness level {value!r}")
+    if isinstance(value, int):
+        return Readiness(value)
+    name = str(value or "none").strip().upper()
+    if name == "NONE":
+        return Readiness.FAILED
+    try:
+        return Readiness[name]
+    except KeyError:
+        raise ValueError(
+            f"bad readiness level {value!r} "
+            f"(want one of {[r.name.lower() for r in Readiness]})") from None
+
+
 # Metrics every INSTRUMENTED report must carry (roofline instrumentation).
 INSTRUMENTED_METRICS = (
     "hlo_flops",

@@ -10,6 +10,7 @@ from typing import Dict, List, Optional, Sequence, Union
 from repro import configs
 from repro.configs import shapes as SH
 from repro.core.harness import BenchmarkSpec
+from repro.core.readiness import parse_level
 
 
 def collection(
@@ -17,6 +18,7 @@ def collection(
     *,
     archs: Optional[List[str]] = None,
     shapes: Optional[List[str]] = None,
+    require_readiness=None,
 ) -> List[BenchmarkSpec]:
     """All applicable benchmark cells for one system.
 
@@ -24,11 +26,19 @@ def collection(
     the collection then expands into a multi-system campaign: the cross
     product of every applicable cell with every target system, ready for a
     parallel ``run_collection`` (the JUREAP multi-machine setting).
+
+    ``require_readiness`` (a ``Readiness`` level, int, or name) stamps every
+    cell with a readiness demand: the execution orchestrator negotiates it
+    against the harness capability declaration before dispatch, so a whole
+    collection demanding REPRODUCIBLE fails fast on a harness that cannot
+    attain it.
     """
     if isinstance(system, str) and "," in system:
         system = [s.strip() for s in system.split(",") if s.strip()]
     if not isinstance(system, str):
-        return campaign(system, archs=archs, shapes=shapes)
+        return campaign(system, archs=archs, shapes=shapes,
+                        require_readiness=require_readiness)
+    require = int(parse_level(require_readiness))
     out: List[BenchmarkSpec] = []
     for arch in archs or configs.ARCH_IDS:
         cfg = configs.get_config(arch)
@@ -37,7 +47,8 @@ def collection(
                 continue
             if not SH.applicable(cfg, shape):
                 continue
-            out.append(BenchmarkSpec(arch=arch, shape=name, system=system))
+            out.append(BenchmarkSpec(arch=arch, shape=name, system=system,
+                                     require_readiness=require))
     return out
 
 
@@ -46,12 +57,14 @@ def campaign(
     *,
     archs: Optional[List[str]] = None,
     shapes: Optional[List[str]] = None,
+    require_readiness=None,
 ) -> List[BenchmarkSpec]:
     """Multi-system campaign: one collection per system, concatenated in
     system order (cells stay grouped per machine for prefix bookkeeping)."""
     out: List[BenchmarkSpec] = []
     for system in systems:
-        out.extend(collection(system, archs=archs, shapes=shapes))
+        out.extend(collection(system, archs=archs, shapes=shapes,
+                              require_readiness=require_readiness))
     return out
 
 

@@ -54,6 +54,7 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.component import ComponentSchema, InputSpec
 from repro.core.protocol import ProtocolError, unwrap_envelope, wrap_envelope
 from repro.core.store import ResultStore
 
@@ -354,6 +355,8 @@ def get_detector(name: str, **params) -> Detector:
     return cls(**params)
 
 
+
+
 # ---------------------------------------------------------------------------
 # Baseline manager — promote / pin / expire, persisted as envelopes.
 # ---------------------------------------------------------------------------
@@ -555,6 +558,49 @@ class GateSpec:
             use_columnar=bool(inp.get("columnar", True)),
             detector_params=params,
         )
+
+
+# Declared input schema for the ``gate`` pipeline component, registered by
+# ``repro.core.orchestrator`` alongside the other components.  Defaults are
+# DERIVED from the ``GateSpec``/``MetricSpec`` dataclass fields — one source
+# of truth, so a default changed there can never silently diverge between
+# pipeline-dispatched and library-constructed gates.  Per-detector tuning
+# arrives through the open ``<detector>.<param>`` dotted namespaces
+# (``mad.z_threshold: 6``), matching ``GateSpec.from_inputs``.
+_GS = {f.name: f.default for f in dataclasses.fields(GateSpec)}
+_MS = {f.name: f.default for f in dataclasses.fields(MetricSpec)}
+GATE_SCHEMA = ComponentSchema(
+    "gate", 1,
+    inputs=(
+        InputSpec("source_prefix", str, required=True,
+                  help="execution prefix whose history the gate judges"),
+        InputSpec("metrics", (str, list), default=("step_time_s",),
+                  wrap_scalar=True,
+                  help="metric names, or 'name:direction:tolerance' forms"),
+        InputSpec("direction", str, default=_MS["direction"],
+                  choices=("lower", "higher")),
+        InputSpec("tolerance", float, default=_MS["tolerance"],
+                  help="minimum relative shift considered meaningful"),
+        InputSpec("detectors", (str, list), default=_GS["detectors"],
+                  help=f"detector names (have {sorted(DETECTORS)})"),
+        InputSpec("window", int, default=_GS["window"]),
+        InputSpec("candidate", int, default=_GS["candidate"]),
+        InputSpec("min_points", int, default=_GS["min_points"]),
+        InputSpec("history", int, default=_GS["history"]),
+        InputSpec("update_baseline", bool, default=_GS["update_baseline"]),
+        InputSpec("warn_only", bool, default=_GS["warn_only"]),
+        InputSpec("baseline_prefix", str, default=_GS["baseline_prefix"]),
+        InputSpec("prefix", str,
+                  help="record prefix for verdicts ('none' disables; "
+                       "default gate.<source_prefix>)"),
+        InputSpec("record_prefix", str),
+        InputSpec("columnar", bool, default=_GS["use_columnar"]),
+        InputSpec("detector_params", dict,
+                  help="nested per-detector tuning (JSON pipelines)"),
+    ),
+    open_namespaces=tuple(DETECTORS),
+    description="statistical regression gate over one prefix's stored history",
+)
 
 
 class RegressionGate:

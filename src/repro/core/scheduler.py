@@ -37,11 +37,17 @@ class SchedulerError(ValueError):
 
 @dataclasses.dataclass(frozen=True)
 class Task:
-    """One schedulable unit: a thunk plus the task keys it depends on."""
+    """One schedulable unit: a thunk plus the task keys it depends on.
+
+    ``meta`` is opaque caller context carried through to the ``TaskResult``
+    — the CI/CD layer stamps the resolved component reference
+    (``execution@v3``) so failure summaries name the component, not just
+    the task key."""
 
     key: str
     fn: Callable[[], Any]
     deps: FrozenSet[str] = frozenset()
+    meta: Any = None
 
 
 @dataclasses.dataclass
@@ -51,6 +57,7 @@ class TaskResult:
     error: Optional[str] = None
     seconds: float = 0.0
     worker: str = ""
+    meta: Any = None
 
     @property
     def ok(self) -> bool:
@@ -131,6 +138,7 @@ class CampaignScheduler:
                 value=value,
                 seconds=time.perf_counter() - t0,
                 worker=threading.current_thread().name,
+                meta=task.meta,
             )
         except Exception as e:  # noqa: BLE001 — isolation is the point
             return TaskResult(
@@ -138,6 +146,7 @@ class CampaignScheduler:
                 error=f"{type(e).__name__}: {e}\n{traceback.format_exc(limit=3)}",
                 seconds=time.perf_counter() - t0,
                 worker=threading.current_thread().name,
+                meta=task.meta,
             )
 
     # ----------------------------------------------------------- convenience

@@ -1,0 +1,395 @@
+"""Tests for the typed component API: input schemas, the component registry
+(migration shims), harness capability negotiation, and the Campaign facade."""
+
+import json
+
+import pytest
+
+from repro.core.api import Campaign, main as repro_main
+from repro.core.cicd import main as cicd_main, parse_pipeline_text, validate_pipeline
+from repro.core.component import (
+    REGISTRY,
+    ComponentInputs,
+    ComponentRegistry,
+    ComponentSchema,
+    InputSpec,
+    PipelineError,
+    resolve_parallelism,
+)
+from repro.core.harness import (
+    BenchmarkSpec,
+    CapabilityError,
+    ExecHarness,
+    Harness,
+    HarnessCapabilities,
+    Injections,
+    negotiate,
+)
+from repro.core.orchestrator import (
+    EXECUTION_SCHEMA,
+    ExecutionOrchestrator,
+    FeatureInjectionOrchestrator,
+    register_components,
+)
+from repro.core.protocol import DataEntry, new_report
+from repro.core.readiness import Readiness, parse_level
+from repro.core.store import ResultStore
+
+
+class StubHarness(Harness):
+    """Minimal RUNNABLE-only harness with a capability ceiling and a call
+    counter, so tests can assert fail-fast (negotiation rejected the cell
+    BEFORE run was invoked)."""
+
+    name = "stub"
+
+    def __init__(self, max_readiness=Readiness.RUNNABLE,
+                 step_kinds=frozenset()):
+        self.calls = 0
+        self.seen = []  # (cell, injections.describe()) per run
+        self._caps = HarnessCapabilities(
+            max_readiness=max_readiness, step_kinds=step_kinds,
+            launcher_injection=False)
+
+    def capabilities(self):
+        return self._caps
+
+    def run(self, spec, injections=None):
+        self.calls += 1
+        self.seen.append((spec.cell, injections.describe() if injections else None))
+        r = new_report(system=spec.system, variant=spec.effective_variant(),
+                       usecase=spec.shape, pipeline_id="p")
+        r.data.append(DataEntry(success=True, runtime=0.1,
+                                metrics={"step_time_s": 1.0}))
+        return r
+
+
+# ---------------------------------------------------------------------------
+# Schema validation
+# ---------------------------------------------------------------------------
+
+def test_unknown_input_is_hard_error_naming_component():
+    with pytest.raises(PipelineError) as ei:
+        EXECUTION_SCHEMA.validate({"arch": "a0", "recrod": True})
+    assert "execution@v4" in str(ei.value)
+    assert "recrod" in str(ei.value) and "record" in str(ei.value)
+
+
+def test_type_mismatch_names_component_and_field():
+    with pytest.raises(PipelineError) as ei:
+        EXECUTION_SCHEMA.validate({"arch": "a0", "parallelism": "two"})
+    msg = str(ei.value)
+    assert "execution@v4" in msg and "parallelism" in msg and "int" in msg
+
+
+def test_bool_is_never_silently_an_int():
+    # bool subclasses int in Python; the schema must still reject it where
+    # an int is declared.
+    with pytest.raises(PipelineError):
+        EXECUTION_SCHEMA.validate({"arch": "a0", "seed": True})
+
+
+def test_choices_enforced():
+    with pytest.raises(PipelineError) as ei:
+        EXECUTION_SCHEMA.validate({"arch": "a0", "require_readiness": "shiny"})
+    assert "require_readiness" in str(ei.value)
+
+
+def test_required_enforced_at_dispatch_but_not_construction():
+    with pytest.raises(PipelineError) as ei:
+        EXECUTION_SCHEMA.validate({})
+    assert "arch" in str(ei.value)
+    # Library path: the spec arrives as a method argument instead.
+    inputs = EXECUTION_SCHEMA.validate({}, require=False)
+    assert "arch" not in inputs and inputs["record"] is True
+
+
+def test_deprecated_alias_warns_and_maps():
+    with pytest.warns(DeprecationWarning, match="machine.*deprecated"):
+        inputs = EXECUTION_SCHEMA.validate({"arch": "a0", "machine": "sysA"})
+    assert inputs["system"] == "sysA" and "machine" not in inputs
+
+
+def test_alias_plus_canonical_is_an_error():
+    with pytest.raises(PipelineError, match="deprecated alias"):
+        EXECUTION_SCHEMA.validate(
+            {"arch": "a0", "machine": "sysA", "system": "sysB"})
+
+
+def test_validated_inputs_are_immutable():
+    inputs = EXECUTION_SCHEMA.validate({"arch": "a0"})
+    assert isinstance(inputs, ComponentInputs)
+    with pytest.raises(TypeError):
+        inputs["arch"] = "other"
+
+
+def test_wrap_scalar_and_element_coercion():
+    sch = ComponentSchema("t", 1, (
+        InputSpec("labels", list, element=str, wrap_scalar=True),))
+    assert sch.validate({"labels": "one"})["labels"] == ["one"]
+    with pytest.raises(PipelineError):
+        sch.validate({"labels": [1]})
+
+
+def test_open_namespace_passes_dotted_keys_only():
+    sch = ComponentSchema("t", 1, (InputSpec("a", int, default=0),),
+                          open_namespaces=("mad",))
+    inputs = sch.validate({"a": 1, "mad.z_threshold": 6})
+    assert inputs["mad.z_threshold"] == 6
+    assert inputs.namespace("mad") == {"z_threshold": 6}
+    with pytest.raises(PipelineError):
+        sch.validate({"cusum.seed": 1})
+
+
+def test_shared_parallelism_resolution():
+    assert resolve_parallelism({}) == 1
+    assert resolve_parallelism({"parallelism": 4}) == 4
+    assert resolve_parallelism({"parallelism": 4}, override=2) == 2
+    assert resolve_parallelism({"parallelism": -3}) == 1
+
+
+# ---------------------------------------------------------------------------
+# Registry + migration shims
+# ---------------------------------------------------------------------------
+
+def test_registry_rejects_unknown_name_and_major():
+    with pytest.raises(PipelineError, match="unknown component"):
+        REGISTRY.resolve("nonsense", 1)
+    with pytest.raises(PipelineError, match="execution@v9 unsupported"):
+        REGISTRY.resolve("execution", 9)
+
+
+def test_every_legacy_component_resolves_with_a_schema():
+    for name, major in [("execution", 3), ("feature-injection", 3),
+                        ("time-series", 3), ("machine-comparison", 3),
+                        ("scalability", 3), ("gate", 1),
+                        ("campaign-report", 1)]:
+        resolved = REGISTRY.resolve(name, major)
+        assert resolved.schema.inputs, f"{name}@v{major} has no declared schema"
+        assert resolved.runner is not None
+
+
+def test_migration_shim_parity_v3_v4(recwarn):
+    v3 = ("include:\n"
+          "  - component: execution@v3\n"
+          "    inputs:\n"
+          "      prefix: \"p\"\n"
+          "      arch: \"a0\"\n"
+          "      usecase: \"train_4k\"\n"
+          "      machine: \"sysA\"\n")
+    v4 = (v3.replace("execution@v3", "execution@v4")
+          .replace("usecase:", "shape:").replace("machine:", "system:"))
+    c3, c4 = parse_pipeline_text(v3)[0], parse_pipeline_text(v4)[0]
+    assert c3.version == 3 and c4.version == 4
+    # Same document, same validated orchestrator config on both majors.
+    assert dict(c3.inputs) == dict(c4.inputs)
+    # The v3 path migrates silently — no deprecation warning for documents
+    # written against the major where those names were canonical.
+    assert not [w for w in recwarn.list
+                if issubclass(w.category, DeprecationWarning)]
+
+
+def test_registry_describe_lists_shims():
+    entries = {e["component"]: e for e in REGISTRY.describe()}
+    assert entries["execution@v3"]["migrates_to"] == "execution@v4"
+    names = {s["name"] for s in entries["execution@v4"]["inputs"]}
+    assert {"prefix", "arch", "shape", "system", "parallelism"} <= names
+
+
+def test_duplicate_registration_rejected():
+    reg = register_components(ComponentRegistry())
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register(EXECUTION_SCHEMA)
+
+
+# ---------------------------------------------------------------------------
+# Harness capability negotiation
+# ---------------------------------------------------------------------------
+
+def test_parse_level():
+    assert parse_level("reproducible") is Readiness.REPRODUCIBLE
+    assert parse_level(None) is Readiness.FAILED
+    assert parse_level(Readiness.RUNNABLE) is Readiness.RUNNABLE
+    assert parse_level(2) is Readiness.INSTRUMENTED
+    with pytest.raises(ValueError):
+        parse_level("shiny")
+
+
+def test_negotiation_fails_fast_before_execution(tmp_path):
+    h = StubHarness(max_readiness=Readiness.RUNNABLE)
+    ex = ExecutionOrchestrator(inputs={"prefix": "t"}, harness=h,
+                               store=ResultStore(tmp_path))
+    spec = BenchmarkSpec(arch="a0", shape="train_4k", system="s",
+                         require_readiness=int(Readiness.REPRODUCIBLE))
+    res = ex.run_cell(spec)
+    assert res.readiness == Readiness.FAILED
+    assert "CapabilityError" in res.error and "REPRODUCIBLE" in res.error
+    assert h.calls == 0  # the harness never ran
+    # Same cell without the requirement executes fine.
+    ok = ex.run_cell(BenchmarkSpec(arch="a0", shape="train_4k", system="s"))
+    assert ok.error is None and h.calls == 1
+
+
+def test_negotiation_checks_step_kind_and_injections():
+    h = StubHarness(step_kinds=frozenset({"train"}))
+    with pytest.raises(CapabilityError, match="step kind"):
+        negotiate(BenchmarkSpec(arch="a", shape="decode_32k", system="s"), h)
+    with pytest.raises(CapabilityError, match="launcher"):
+        negotiate(BenchmarkSpec(arch="a", shape="train_4k", system="s"), h,
+                  Injections(launcher=lambda f: f))
+    # Permissive default: the base Harness accepts everything.
+    caps = negotiate(
+        BenchmarkSpec(arch="a", shape="train_4k", system="s",
+                      require_readiness=int(Readiness.REPRODUCIBLE)),
+        Harness(), Injections(launcher=lambda f: f))
+    assert caps.max_readiness is Readiness.REPRODUCIBLE
+
+
+def test_exec_harness_declares_full_capabilities():
+    caps = ExecHarness().capabilities()
+    assert caps.max_readiness is Readiness.REPRODUCIBLE
+    assert caps.step_kinds == {"train", "prefill", "decode"}
+    assert caps.launcher_injection
+
+
+def test_pipeline_rejects_reproducible_on_limited_harness(tmp_path):
+    from repro.core.cicd import run_pipeline
+
+    yml = ("include:\n"
+           "  - component: execution@v4\n"
+           "    inputs:\n"
+           "      prefix: \"t\"\n"
+           "      arch: \"a0\"\n"
+           "      require_readiness: \"reproducible\"\n")
+    h = StubHarness(max_readiness=Readiness.RUNNABLE)
+    results = run_pipeline(parse_pipeline_text(yml),
+                           store=ResultStore(tmp_path), harness=h)
+    assert results[0]["readiness"] == 0
+    assert "CapabilityError" in results[0]["error"]
+    assert h.calls == 0
+
+
+# ---------------------------------------------------------------------------
+# CLI: cicd --validate and python -m repro
+# ---------------------------------------------------------------------------
+
+GOOD_YML = """\
+include:
+  - component: execution@v4
+    inputs:
+      prefix: "t.pipe"
+      arch: "a0"
+      shape: "train_4k"
+      system: "sysA"
+  - component: time-series@v4
+    inputs:
+      prefix: "evaluation.t"
+      source_prefix: "t.pipe"
+      data_labels: [step_time_s]
+"""
+
+
+def test_cicd_validate_flag(tmp_path, capsys):
+    good = tmp_path / "good.yml"
+    good.write_text(GOOD_YML)
+    assert cicd_main([str(good), "--validate"]) == 0
+    out = capsys.readouterr().out
+    doc = json.loads(out)
+    assert doc[0]["component"] == "execution@v4"
+    assert doc[1]["depends_on"] == ["execution@v4"]
+    bad = tmp_path / "bad.yml"
+    bad.write_text(GOOD_YML.replace("prefix:", "prefxi:"))
+    assert cicd_main([str(bad), "--validate"]) == 1
+    assert "prefxi" in capsys.readouterr().err
+
+
+def test_repro_cli_validate_and_components(tmp_path, capsys):
+    good = tmp_path / "good.yml"
+    good.write_text(GOOD_YML)
+    assert repro_main(["validate", str(good)]) == 0
+    capsys.readouterr()
+    assert repro_main(["components"]) == 0
+    listing = json.loads(capsys.readouterr().out)
+    refs = {e["component"] for e in listing}
+    assert refs >= {
+        "execution@v3", "execution@v4",
+        "feature-injection@v3", "feature-injection@v4",
+        "time-series@v3", "time-series@v4",
+        "machine-comparison@v3", "machine-comparison@v4",
+        "scalability@v3", "scalability@v4",
+        "gate@v1", "campaign-report@v1",
+    }
+
+
+def test_example_pipelines_validate():
+    from pathlib import Path
+
+    pipelines = sorted(Path("examples/pipelines").glob("*.yml"))
+    assert pipelines, "no example pipelines found"
+    for p in pipelines:
+        summary = validate_pipeline(p.read_text())
+        assert summary, p
+
+
+# ---------------------------------------------------------------------------
+# Campaign facade
+# ---------------------------------------------------------------------------
+
+def test_campaign_facade_run_report_gate(tmp_path):
+    c = Campaign(tmp_path / "store", harness=StubHarness())
+    results = c.run(GOOD_YML)
+    assert [r["component"] for r in results] == ["execution", "time-series"]
+    assert not results[0]["error"]
+    rep = c.report()
+    assert rep["component"] == "campaign-report" and "t.pipe" in rep["table"]
+    verdict = c.gate("t.pipe", metrics=["step_time_s"])
+    assert verdict["component"] == "gate" and verdict["status"] == "pass"
+    with pytest.raises(PipelineError, match="tolerence"):
+        c.gate("t.pipe", tolerence=0.1)
+
+
+def test_campaign_validate_is_read_only(tmp_path):
+    store_dir = tmp_path / "never_created"
+    c = Campaign(store_dir)
+    assert len(c.validate(GOOD_YML)) == 2
+    assert len(c.components()) > 0
+    assert not store_dir.exists()
+    with pytest.raises(PipelineError, match="unknown input"):
+        c.validate(GOOD_YML.replace("arch:", "arc:"))
+
+
+def test_feature_injection_sweep_component(tmp_path):
+    yml = ("include:\n"
+           "  - component: feature-injection@v4\n"
+           "    inputs:\n"
+           "      prefix: \"s\"\n"
+           "      arch: \"a0\"\n"
+           "      in_command: \"export FIXED=1\"\n"
+           "      env_knob: \"MY_KNOB\"\n"
+           "      values: [\"a,b\", \"c\"]\n")
+    calls = parse_pipeline_text(yml)
+    # Quote-aware inline lists: the comma inside "a,b" is content.
+    assert calls[0].inputs["values"] == ["a,b", "c"]
+    h = StubHarness()
+    c = Campaign(tmp_path / "store", harness=h)
+    res = c.run(yml)
+    assert res[0]["points"] == 2 and not res[0]["error"]
+    # The declared fixed injection applies under EVERY sweep point, and
+    # each point carries its own swept value.
+    envs = [inj["env"] for _, inj in h.seen]
+    assert envs == [{"FIXED": "1", "MY_KNOB": "a,b"},
+                    {"FIXED": "1", "MY_KNOB": "c"}]
+    # Sweep without a knob is a declaration error.
+    with pytest.raises(PipelineError, match="env_knob"):
+        c.component("feature-injection", 4,
+                    {"prefix": "s", "arch": "a0", "values": [1]})
+
+
+def test_direct_orchestrator_construction_still_validates(tmp_path):
+    with pytest.raises(PipelineError, match="recrod"):
+        ExecutionOrchestrator(inputs={"recrod": True}, harness=StubHarness(),
+                              store=ResultStore(tmp_path))
+    ex = ExecutionOrchestrator(inputs={"prefix": "t"}, harness=StubHarness(),
+                               store=ResultStore(tmp_path))
+    with pytest.raises(PipelineError, match="feature-injection@v4"):
+        FeatureInjectionOrchestrator(execution=ex, inputs={"valeus": [1]})
