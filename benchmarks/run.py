@@ -51,6 +51,7 @@ def main(argv=None) -> None:
         bench_scheduler,
         bench_timeseries,
         bench_weak_scaling,
+        bench_workers,
     )
 
     ap = argparse.ArgumentParser(description=__doc__)
@@ -69,6 +70,7 @@ def main(argv=None) -> None:
         ("fig8_9_energy", bench_energy.run),
         ("roofline_table", bench_roofline.run),
         ("scheduler_and_store", bench_scheduler.run),
+        ("workers_plane", bench_workers.run),
         ("regression_gate", bench_regression.run),
         ("analysis_columnar", bench_analysis.run),
     ]

@@ -1,0 +1,112 @@
+"""Per-cell resource accounting: what did this campaign cost?
+
+Every completed cell records wall-clock seconds, CPU seconds, and peak RSS
+into the report envelope (``parameter["resources"]``) *and* as metrics on
+each data entry — metrics are what the columnar plane turns into dimensions,
+so ``campaign-report@v1`` (and ``CampaignFrame.summary``) can aggregate
+campaign cost with no extra wiring.
+
+Two probe scopes match the two worker modes:
+
+* ``"thread"`` — cells share one interpreter, so per-cell CPU is the
+  *calling thread's* CPU time (``time.thread_time``).  Peak RSS is still the
+  process high-watermark (threads share an address space); it is recorded as
+  an upper bound, not a per-cell attribution.
+* ``"process"`` — each worker process runs one cell at a time, so whole-
+  process deltas are exact per-cell attribution: ``os.times`` (user + system,
+  **including reaped subprocess children** — a ``DryRunHarness`` cell's real
+  work happens in a child interpreter) and ``getrusage`` peak RSS over SELF
+  and CHILDREN.
+"""
+
+from __future__ import annotations
+
+import copy
+import os
+import sys
+import time
+from contextlib import contextmanager
+from typing import Any, Dict, Iterator
+
+try:
+    import resource as _resource
+except ImportError:  # non-POSIX
+    _resource = None
+
+RESOURCE_METRICS = ("res_wall_s", "res_cpu_s", "res_max_rss_mb")
+
+# Envelope keys stamped by the execution plane that legitimately differ
+# between two otherwise-identical runs (who ran it, when, at what cost).
+VOLATILE_PARAMETERS = ("resources", "task_uid", "worker", "attempt")
+
+
+def _peak_rss_mb(scope: str) -> float:
+    if _resource is None:
+        return 0.0
+    rss = _resource.getrusage(_resource.RUSAGE_SELF).ru_maxrss
+    if scope == "process":
+        rss = max(rss, _resource.getrusage(_resource.RUSAGE_CHILDREN).ru_maxrss)
+    # ru_maxrss is KiB on Linux, bytes on macOS.
+    return rss / (1024.0 * 1024.0) if sys.platform == "darwin" else rss / 1024.0
+
+
+@contextmanager
+def resource_probe(acct: Dict[str, Any], scope: str = "thread") -> Iterator[Dict[str, Any]]:
+    """Measure the wrapped block; fills ``acct`` with the resource metrics
+    (always, even when the block raises — a failed cell still cost time)."""
+    if scope not in ("thread", "process"):
+        raise ValueError(f"unknown resource probe scope {scope!r}")
+    t0 = time.perf_counter()
+    c0 = os.times() if scope == "process" else time.thread_time()
+    try:
+        yield acct
+    finally:
+        wall = time.perf_counter() - t0
+        if scope == "process":
+            c1 = os.times()
+            cpu = ((c1.user - c0.user) + (c1.system - c0.system)
+                   + (c1.children_user - c0.children_user)
+                   + (c1.children_system - c0.children_system))
+        else:
+            cpu = time.thread_time() - c0
+        acct["res_wall_s"] = wall
+        acct["res_cpu_s"] = cpu
+        acct["res_max_rss_mb"] = _peak_rss_mb(scope)
+        acct["scope"] = scope
+
+
+def stamp_report(report, acct: Dict[str, Any], *, worker: str = "",
+                 worker_mode: str = "thread") -> None:
+    """Record one cell's accounting into its report: the full envelope under
+    ``parameter["resources"]``, plus the three numeric metrics on every data
+    entry so they become columnar dimensions."""
+    res = dict(acct)
+    res["worker"] = worker
+    res["worker_mode"] = worker_mode
+    report.parameter["resources"] = res
+    for entry in report.data:
+        for key in RESOURCE_METRICS:
+            if key in acct:
+                entry.metrics.setdefault(key, float(acct[key]))
+
+
+def strip_volatile(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Canonicalize a report dict for cross-run parity comparison: drop
+    timestamps, pipeline/job identity, and the resource-accounting fields —
+    everything the execution plane legitimately varies between two runs of
+    the same campaign.  Used by the parity assertions in tests and
+    ``benchmarks/bench_workers.py``."""
+    d = copy.deepcopy(doc)
+    rep = d.get("reporter", {})
+    rep["timestamp"] = 0.0
+    rep["pipeline_id"] = ""
+    d.get("experiment", {})["timestamp"] = 0.0
+    params = d.get("parameter", {})
+    for key in VOLATILE_PARAMETERS:
+        params.pop(key, None)
+    for entry in d.get("data", []):
+        entry["job_id"] = ""
+        metrics = entry.get("metrics", {})
+        for key in RESOURCE_METRICS:
+            metrics.pop(key, None)
+    return d

@@ -87,9 +87,13 @@ class Campaign:
                                       registry=self.registry)
 
     def run(self, pipeline: Union[str, Path], *,
-            parallelism: Optional[int] = None) -> List[Dict[str, Any]]:
+            parallelism: Optional[int] = None,
+            workers: Optional[int] = None,
+            worker_mode: Optional[str] = None) -> List[Dict[str, Any]]:
         """Parse, validate, and dispatch a pipeline document through the
-        component DAG and the campaign scheduler."""
+        component DAG and the campaign scheduler.  ``worker_mode="process"``
+        (or any component declaring it) drains producer cells through the
+        broker + spawned worker pool instead of the in-process threads."""
         calls = cicd.parse_pipeline_text(_pipeline_text(pipeline),
                                          registry=self.registry)
         return cicd.run_pipeline(
@@ -99,6 +103,8 @@ class Campaign:
             harness_factory=self.harness_factory,
             parallelism=parallelism if parallelism is not None else self.parallelism,
             registry=self.registry,
+            workers=workers,
+            worker_mode=worker_mode,
         )
 
     # ----------------------------------------------------------- components
@@ -133,11 +139,15 @@ class Campaign:
         prefix: str = "collection",
         require_readiness=None,
         parallelism: Optional[int] = None,
+        workers: Optional[int] = None,
+        worker_mode: Optional[str] = None,
         record: bool = True,
     ):
         """Expand the benchmark collection for ``system`` and run every cell
         through the execution orchestrator (failure-isolated, streamed into
-        the store).  Requires a ``harness`` on the facade."""
+        the store).  Requires a ``harness`` on the facade.
+        ``worker_mode="process"`` drains the cells through the broker +
+        spawned worker pool (the harness must declare a ``spawn_spec``)."""
         from repro.core import registry as collection_registry
         from repro.core.orchestrator import ExecutionOrchestrator
 
@@ -146,9 +156,16 @@ class Campaign:
         specs = collection_registry.collection(
             system, archs=archs, shapes=shapes,
             require_readiness=require_readiness)
+        inputs: Dict[str, Any] = {
+            "prefix": prefix, "record": record,
+            "parallelism": parallelism or self.parallelism or 1,
+        }
+        if workers is not None:
+            inputs["workers"] = workers
+        if worker_mode is not None:
+            inputs["worker_mode"] = worker_mode
         ex = ExecutionOrchestrator(
-            inputs={"prefix": prefix, "record": record,
-                    "parallelism": parallelism or self.parallelism or 1},
+            inputs=inputs,
             harness=self.harness,
             store=self.store,
         )
@@ -185,6 +202,12 @@ def main(argv=None) -> int:
     run.add_argument("--store", default="exacb_data")
     run.add_argument("--store-backend", default="dir", choices=("dir", "jsonl"))
     run.add_argument("--parallelism", type=int, default=None)
+    run.add_argument("--workers", type=int, default=None,
+                     help="execution-plane worker count")
+    run.add_argument("--worker-mode", default=None,
+                     choices=("thread", "process"),
+                     help="process = broker + spawned worker pool with "
+                          "lease-reclaimed crash recovery")
     run.add_argument("--gate", action="store_true",
                      help="enforce regression gates (exit 3 on regression)")
     run.add_argument("--gate-report", default="gate_report.json")
@@ -204,6 +227,10 @@ def main(argv=None) -> int:
                      "--store-backend", args.store_backend]
         if args.parallelism is not None:
             cicd_args += ["--parallelism", str(args.parallelism)]
+        if args.workers is not None:
+            cicd_args += ["--workers", str(args.workers)]
+        if args.worker_mode is not None:
+            cicd_args += ["--worker-mode", args.worker_mode]
         if args.gate:
             cicd_args += ["--gate", "--gate-report", args.gate_report]
         return cicd.main(cicd_args)

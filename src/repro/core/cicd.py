@@ -46,6 +46,7 @@ from repro.core.component import (
     ComponentInputs,
     ComponentRegistry,
     PipelineError,
+    resolve_parallelism,
 )
 from repro.core.harness import ExecHarness, Harness
 from repro.core.scheduler import CampaignScheduler, Task
@@ -268,21 +269,41 @@ def run_pipeline(
     harness_factory: Optional[Callable[[Dict[str, Any]], Harness]] = None,
     parallelism: Optional[int] = None,
     registry: Optional[ComponentRegistry] = None,
+    workers: Optional[int] = None,
+    worker_mode: Optional[str] = None,
 ) -> List[Dict[str, Any]]:
     """Dispatch the component DAG through the scheduler; returns one summary
     per call, in call order.
 
-    ``parallelism`` bounds the worker pool.  When omitted, the largest
-    ``parallelism:`` input declared by any component applies (default 1 —
-    serial, the seed behavior).  A component that raises is isolated into a
-    ``{"component", "error"}`` summary; downstream components still run over
-    whatever results reached the store.
+    ``parallelism``/``workers`` bound the worker pool.  When omitted, the
+    largest ``workers:``/``parallelism:`` input declared by any component
+    applies (default 1 — serial, the seed behavior).  ``worker_mode``
+    (argument, or any component declaring ``worker_mode: process``) selects
+    the dispatch plane: ``thread`` runs everything through the in-process
+    scheduler; ``process`` drains every *producer* cell — executions and
+    individual sweep points alike — through the broker + spawned worker
+    pool first, then runs the consumers (analyses, gates) in-process over
+    the persisted results.  A component that raises is isolated into a
+    ``{"component", "error"}`` summary; downstream components still run
+    over whatever results reached the store.
     """
     harness = harness or ExecHarness(steps=2, batch=2, seq=16)
+    if worker_mode is None:
+        declared = {str(c.inputs.get("worker_mode", "thread")) for c in calls}
+        worker_mode = "process" if "process" in declared else "thread"
     if parallelism is None:
-        parallelism = max(
-            [int(c.inputs.get("parallelism", 1)) for c in calls], default=1
-        )
+        parallelism = max([resolve_parallelism(c.inputs) for c in calls],
+                          default=1)
+    pool = workers if workers is not None else parallelism
+    if worker_mode == "process":
+        if harness_factory is not None:
+            raise PipelineError(
+                "worker_mode 'process' cannot combine with a harness_factory "
+                "callable (workers rebuild the harness from its spawn_spec)")
+        return _run_pipeline_process(
+            calls, store=store, harness=harness, workers=pool,
+            registry=registry)
+    parallelism = pool
     deps = component_dag(calls)
     tasks = [
         Task(
@@ -307,6 +328,92 @@ def run_pipeline(
         else:
             results.append(tr.value)
     return results
+
+
+def _run_pipeline_process(
+    calls: List[ComponentCall],
+    *,
+    store: ResultStore,
+    harness: Harness,
+    workers: int,
+    registry: Optional[ComponentRegistry] = None,
+) -> List[Dict[str, Any]]:
+    """Process-mode pipeline dispatch: producers drain through the broker's
+    worker pool (one queue cell per execution / per sweep point), consumers
+    run in-process afterwards — the broker barrier subsumes every
+    producer→consumer DAG edge, and consumer→consumer edges don't exist
+    (analyses read only producer prefixes)."""
+    from repro.core import workers as workers_mod  # lazy: heavy import chain
+
+    summaries: List[Optional[Dict[str, Any]]] = [None] * len(calls)
+    payloads: List[Dict[str, Any]] = []
+    owners: Dict[int, List[int]] = {}
+    for ci, call in enumerate(calls):
+        if call.name not in _PRODUCERS:
+            continue
+        try:
+            cell_payloads, _ = workers_mod.pipeline_payloads([call])
+        except PipelineError as e:  # isolated, like a thread-mode task error
+            summaries[ci] = {"component": call.name, "component_ref": call.ref,
+                             "error": str(e)}
+            continue
+        owners[ci] = list(range(len(payloads), len(payloads) + len(cell_payloads)))
+        for p in cell_payloads:
+            p["call_index"] = ci
+        payloads.extend(cell_payloads)
+
+    results_by_idx: Dict[int, Dict[str, Any]] = {}
+    if payloads:
+        broker = workers_mod.CampaignBroker(store, workers=workers, name="pipeline")
+        results_by_idx = broker.run(payloads, harness=harness)
+
+    for ci, idxs in owners.items():
+        call = calls[ci]
+        spec = _orchestrator.spec_from_inputs(call.inputs)
+        cells = [workers_mod.result_to_cell(spec, results_by_idx.get(j))
+                 for j in idxs]
+        if call.name == "execution" or (len(cells) == 1
+                                        and not call.inputs.get("values")):
+            summaries[ci] = _orchestrator._cell_summary(call.name, spec, cells[0])
+        else:
+            errors = [c.error for c in cells if c.error]
+            summaries[ci] = {
+                "component": call.name,
+                "cell": spec.cell,
+                "points": len(cells),
+                "readiness": [int(c.readiness) for c in cells],
+                "error": "; ".join(errors) if errors else None,
+            }
+
+    deps = component_dag(calls)
+    consumer_ids = [ci for ci in range(len(calls)) if summaries[ci] is None]
+    tasks = [
+        Task(
+            key=f"{ci:04d}.{calls[ci].name}",
+            fn=functools.partial(
+                _run_component, calls[ci],
+                store=store, harness=harness, harness_factory=None,
+                registry=registry,
+            ),
+            # Producer edges are already satisfied by the broker barrier;
+            # only consumer→consumer edges (none today) survive.
+            deps=frozenset(f"{j:04d}.{calls[j].name}" for j in deps[ci]
+                           if j in set(consumer_ids)),
+            meta=calls[ci].ref,
+        )
+        for ci in consumer_ids
+    ]
+    done = CampaignScheduler(
+        parallelism=min(4, max(1, workers)), name="pipeline.consumers"
+    ).run_tasks(tasks)
+    for ci in consumer_ids:
+        tr = done[f"{ci:04d}.{calls[ci].name}"]
+        if tr.error is not None:
+            summaries[ci] = {"component": calls[ci].name,
+                             "component_ref": calls[ci].ref, "error": tr.error}
+        else:
+            summaries[ci] = tr.value
+    return summaries  # type: ignore[return-value] — every slot filled above
 
 
 def validate_pipeline(
@@ -339,6 +446,13 @@ def main(argv=None):
     ap.add_argument("--store-backend", default="dir", choices=("dir", "jsonl"))
     ap.add_argument("--parallelism", type=int, default=None,
                     help="worker pool bound (default: max parallelism input)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="execution-plane worker count (overrides "
+                         "--parallelism and any declared inputs)")
+    ap.add_argument("--worker-mode", default=None, choices=("thread", "process"),
+                    help="thread: in-process scheduler pool (default); "
+                         "process: broker + spawned worker processes with "
+                         "lease-reclaimed crash recovery")
     ap.add_argument("--validate", action="store_true",
                     help="schema-check the pipeline document (components, "
                          "versions, input names and types) and exit without "
@@ -373,6 +487,8 @@ def main(argv=None):
         calls,
         store=ResultStore(args.store, backend=args.store_backend),
         parallelism=args.parallelism,
+        workers=args.workers,
+        worker_mode=args.worker_mode,
     )
     print(json.dumps(results, indent=2, default=str))
     component_error = any(r.get("error") for r in results)

@@ -105,14 +105,45 @@ PARALLELISM = InputSpec(
     help="bounded scheduler worker-pool size; 1 = serial (seed behavior)",
 )
 
+#: Worker-pool size for the distributed execution plane.  No default: when
+#: absent, ``parallelism`` governs.  When present it wins — a pipeline
+#: declaring ``workers: 4`` means 4 workers regardless of ``parallelism``.
+WORKERS = InputSpec(
+    "workers", int,
+    help="execution-plane worker count; overrides 'parallelism' when given",
+)
+
+#: How cells are dispatched: ``thread`` keeps the in-process scheduler pool
+#: (seed behavior); ``process`` drains the campaign through the broker +
+#: spawned worker processes (lease-reclaimed work queue, true CPU
+#: parallelism, crash recovery).
+WORKER_MODE = InputSpec(
+    "worker_mode", str, default="thread", choices=("thread", "process"),
+    help="cell dispatch: in-process thread pool, or broker + process workers",
+)
+
 
 def resolve_parallelism(inputs: Mapping, override: Optional[int] = None) -> int:
     """One resolution rule for every dispatch path: an explicit argument
-    wins, else the declared ``parallelism`` input, else the shared default;
-    always clamped to >= 1."""
+    wins, else the declared ``workers`` input, else ``parallelism``, else
+    the shared default; always clamped to >= 1."""
     if override is not None:
         return max(1, int(override))
+    workers = inputs.get(WORKERS.name)
+    if workers is not None:
+        return max(1, int(workers))
     return max(1, int(inputs.get(PARALLELISM.name, PARALLELISM.default)))
+
+
+def resolve_worker_mode(inputs: Mapping, override: Optional[str] = None) -> str:
+    """Same resolution rule for the dispatch mode; validates the value so a
+    programmatic override obeys the declared choices too."""
+    mode = override if override is not None else str(
+        inputs.get(WORKER_MODE.name, WORKER_MODE.default))
+    if mode not in WORKER_MODE.choices:
+        raise PipelineError(
+            f"bad worker_mode {mode!r} (want one of {list(WORKER_MODE.choices)})")
+    return mode
 
 
 class ComponentInputs(Mapping):

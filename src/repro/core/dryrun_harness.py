@@ -51,6 +51,17 @@ class DryRunHarness(Harness):
         if self.raw_dir:
             self.raw_dir.mkdir(parents=True, exist_ok=True)
 
+    def spawn_spec(self):
+        # All construction state is path/scalar data, so dry-run cells run
+        # under spawned process workers: the worker rebuilds the harness and
+        # the cell's real work happens in the dry-run SUBPROCESS it launches
+        # (process-scope accounting picks the child up via os.times).
+        return "repro.core.dryrun_harness:DryRunHarness", {
+            "repo_root": str(self.repo_root),
+            "timeout_s": self.timeout_s,
+            "raw_dir": str(self.raw_dir) if self.raw_dir else None,
+        }
+
     def run(self, spec: BenchmarkSpec, injections: Optional[Injections] = None) -> protocol.Report:
         inj = injections or Injections()
         multi_pod = "2pods" in spec.system

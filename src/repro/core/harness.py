@@ -88,6 +88,15 @@ class Injections:
 # 2. A process-wide registry of active frames guarded by ``_ENV_LOCK`` so
 #    exits restore the youngest surviving frame's value (same-thread
 #    nesting) or the pre-injection original.
+#
+# PROCESS-WORKER CAVEAT: all of this state is *per interpreter*.  Under the
+# ``spawn`` start method a worker process begins with a fresh module — no
+# locks, no frames, no saved originals, and (unlike ``fork``) not even the
+# parent's merged os.environ mutations.  Injection frames therefore must be
+# re-applied INSIDE the worker: the execution plane ships env frames as
+# payload/config data and the worker bootstrap re-enters ``injected_env``
+# before running cells (see ``repro.core.workers.worker_main``).  A parent
+# holding an active frame while spawning workers injects nothing into them.
 _ENV_LOCK = threading.RLock()
 _ENV_FRAMES: List[Dict[str, str]] = []
 _ENV_SAVED: Dict[str, Optional[str]] = {}
@@ -232,6 +241,20 @@ class Harness:
     def run(self, spec: BenchmarkSpec, injections: Optional[Injections] = None) -> protocol.Report:
         raise NotImplementedError
 
+    def spawn_spec(self) -> "tuple[str, Dict[str, Any]]":
+        """Spawn-safe construction recipe: ``("module:factory", kwargs)``.
+
+        Process workers never receive harness *objects* — a spawned
+        interpreter rebuilds the harness from this recipe (dotted-path
+        factory + plain-data kwargs), which is what makes cell dispatch
+        picklable data instead of closures.  Adapters that cannot be
+        reconstructed from plain data stay thread-mode only.
+        """
+        raise NotImplementedError(
+            f"harness {self.name!r} declares no spawn_spec(): it cannot run "
+            "under process workers (worker_mode: process); use thread mode "
+            "or implement spawn_spec()")
+
 
 def artifact_digest(*arrays) -> str:
     """Deterministic digest of output artifacts (REPRODUCIBLE level)."""
@@ -263,6 +286,10 @@ class ExecHarness(Harness):
         self.steps = steps
         self.batch = batch
         self.seq = seq
+
+    def spawn_spec(self):
+        return "repro.core.harness:ExecHarness", {
+            "steps": self.steps, "batch": self.batch, "seq": self.seq}
 
     def run(self, spec: BenchmarkSpec, injections: Optional[Injections] = None) -> protocol.Report:
         import jax

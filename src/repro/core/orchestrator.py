@@ -18,15 +18,18 @@ dict mirroring the paper's GitLab CI/CD ``component:/inputs:`` blocks, e.g.::
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 import traceback
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core import analysis
+from repro.core import accounting, analysis
 from repro.core.columnar import CampaignFrame
 from repro.core.component import (
     PARALLELISM,
     REGISTRY,
+    WORKER_MODE,
+    WORKERS,
     ComponentContext,
     ComponentInputs,
     ComponentRegistry,
@@ -36,6 +39,7 @@ from repro.core.component import (
     coerce_inputs,
     merge_schemas,
     resolve_parallelism,
+    resolve_worker_mode,
 )
 from repro.core.harness import BenchmarkSpec, CapabilityError, Harness, Injections, negotiate
 from repro.core.protocol import DataEntry, Report, new_report
@@ -71,6 +75,8 @@ _CELL_INPUTS = (
               help="readiness level the cell demands; negotiated against "
                    "the harness capability declaration before dispatch"),
     PARALLELISM,
+    WORKERS,
+    WORKER_MODE,
 )
 
 EXECUTION_SCHEMA = ComponentSchema(
@@ -199,12 +205,19 @@ class ExecutionOrchestrator:
         store: Optional[ResultStore] = None,
         fixture: Optional[Tuple[Callable[[], None], Callable[[], None]]] = None,
         max_retries: int = 1,
+        resource_scope: str = "thread",
+        worker_id: str = "",
     ):
         self.inputs = coerce_inputs(self.schema, inputs)
         self.harness = harness
         self.store = store
         self.fixture = fixture
         self.max_retries = max_retries
+        # "thread" attributes the calling thread's CPU to each cell (shared
+        # interpreter); process workers pass "process" for whole-process
+        # deltas — exact per-cell cost including harness subprocesses.
+        self.resource_scope = resource_scope
+        self.worker_id = worker_id
 
     @property
     def prefix(self) -> str:
@@ -225,10 +238,12 @@ class ExecutionOrchestrator:
         last_err = None
         for attempt in range(1, self.max_retries + 1):
             try:
+                acct: Dict[str, Any] = {}
                 if setup:
                     setup()
                 try:
-                    report = self.harness.run(spec, injections)
+                    with accounting.resource_probe(acct, self.resource_scope):
+                        report = self.harness.run(spec, injections)
                 finally:
                     if teardown:
                         teardown()
@@ -239,6 +254,13 @@ class ExecutionOrchestrator:
                 level, gaps = classify(report)
                 report.parameter.setdefault("readiness", int(level))
                 report.parameter.setdefault("readiness_gaps", gaps)
+                # Resource accounting: envelope + columnar dimensions, so
+                # campaign-report can answer "what did this campaign cost".
+                accounting.stamp_report(
+                    report, acct,
+                    worker=self.worker_id or threading.current_thread().name,
+                    worker_mode="process" if self.resource_scope == "process" else "thread",
+                )
                 # Persist IMMEDIATELY — a later cell failing must not lose
                 # this result (the paper's resilience requirement).
                 if self.store is not None and self.inputs.get("record", True):
@@ -257,21 +279,37 @@ class ExecutionOrchestrator:
         injections: Optional[Injections] = None,
         *,
         parallelism: Optional[int] = None,
+        workers: Optional[int] = None,
+        worker_mode: Optional[str] = None,
     ) -> List[CellResult]:
         """Run every cell; failures are isolated per cell (JUREAP mode —
         heterogeneous maturity levels coexist in one collection).
 
-        ``parallelism`` (argument, or the ``parallelism`` input) > 1 runs
-        cells through a bounded scheduler pool; each cell still persists its
+        ``parallelism``/``workers`` (argument, or the declared inputs) > 1
+        runs cells through a bounded pool; each cell still persists its
         report the moment it finishes, so a crash mid-collection loses
-        nothing already executed.
+        nothing already executed.  ``worker_mode="process"`` dispatches
+        through the broker + spawned worker processes instead of the
+        in-process thread pool: true CPU parallelism, and a killed worker's
+        cells are lease-reclaimed and retried rather than lost.
         """
-        par = self._parallelism(parallelism)
+        par = self._parallelism(workers if workers is not None else parallelism)
+        mode = resolve_worker_mode(self.inputs, worker_mode)
         specs = list(specs)
+        if mode == "process" and len(specs) > 1:
+            if self.store is None:
+                raise PipelineError(
+                    "worker_mode 'process' needs a store: the work queue and "
+                    "results both persist through it")
+            from repro.core import workers as workers_mod  # lazy: avoid cycle
+            return workers_mod.run_collection_process(
+                inputs=self.inputs, harness=self.harness, store=self.store,
+                specs=specs, injections=injections, workers=par)
         if par <= 1 or len(specs) <= 1:
             return [self.run_cell(s, injections) for s in specs]
         sched = CampaignScheduler(parallelism=par, name=f"exec.{self.prefix}")
-        results = sched.map_items(lambda s: self.run_cell(s, injections), specs)
+        results = sched.map_items(lambda s: self.run_cell(s, injections), specs,
+                                  metas=specs)
         return _unwrap_cells(specs, results)
 
 

@@ -100,6 +100,24 @@ class CampaignScheduler:
             for d in t.deps:
                 dependents[d].append(t.key)
 
+        # Kahn pre-pass: reject cyclic DAGs BEFORE any task body runs.
+        # Detecting the cycle only after the pool drains would execute the
+        # acyclic portion of a structurally-broken campaign — side effects
+        # (store appends) from a document the caller then learns was invalid.
+        remaining = dict(indegree)
+        peel = deque(k for k, deg in remaining.items() if deg == 0)
+        seen = 0
+        while peel:
+            key = peel.popleft()
+            seen += 1
+            for dep_key in dependents[key]:
+                remaining[dep_key] -= 1
+                if remaining[dep_key] == 0:
+                    peel.append(dep_key)
+        if seen != len(tasks):
+            stuck = sorted(k for k, deg in remaining.items() if deg > 0)
+            raise SchedulerError(f"dependency cycle among tasks: {stuck}")
+
         done: Dict[str, TaskResult] = {}
         ready = deque(t.key for t in tasks if indegree[t.key] == 0)
         with cf.ThreadPoolExecutor(
@@ -123,9 +141,6 @@ class CampaignScheduler:
                         indegree[dep_key] -= 1
                         if indegree[dep_key] == 0:
                             ready.append(dep_key)
-        if len(done) != len(tasks):
-            stuck = sorted(k for k in by_key if k not in done)
-            raise SchedulerError(f"dependency cycle among tasks: {stuck}")
         return done
 
     @staticmethod
@@ -155,13 +170,27 @@ class CampaignScheduler:
         fn: Callable[[Any], Any],
         items: Sequence[Any],
         *,
+        metas: Optional[Sequence[Any]] = None,
         on_result: Optional[Callable[[TaskResult], None]] = None,
     ) -> List[TaskResult]:
-        """Run ``fn`` over independent items; results in input order."""
+        """Run ``fn`` over independent items; results in input order.
+
+        ``metas`` (aligned with ``items``; defaults to the items themselves)
+        is carried through to each ``TaskResult.meta`` so streaming
+        ``on_result`` consumers can identify which item a result belongs to
+        without parsing task keys.
+        """
         items = list(items)
+        if metas is None:
+            meta_list: List[Any] = items
+        else:
+            meta_list = list(metas)
+            if len(meta_list) != len(items):
+                raise SchedulerError(
+                    f"metas length {len(meta_list)} != items length {len(items)}")
         tasks = [
-            Task(key=f"item-{i:05d}", fn=(lambda it=item: fn(it)))
-            for i, item in enumerate(items)
+            Task(key=f"item-{i:05d}", fn=(lambda it=item: fn(it)), meta=meta)
+            for i, (item, meta) in enumerate(zip(items, meta_list))
         ]
         done = self.run_tasks(tasks, on_result=on_result)
         return [done[f"item-{i:05d}"] for i in range(len(items))]

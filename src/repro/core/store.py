@@ -283,7 +283,11 @@ class DirBackend(StoreBackend):
         return out
 
     def prefixes(self) -> List[str]:
-        return sorted(p.name for p in self.root.iterdir() if p.is_dir())
+        # Underscore directories are store-internal state, not report
+        # prefixes — the execution plane keeps its work queues under
+        # ``<root>/_queue/`` and a whole-store scan must not read them.
+        return sorted(p.name for p in self.root.iterdir()
+                      if p.is_dir() and not p.name.startswith("_"))
 
     def fingerprint(self, prefix: str) -> Tuple:
         # os.scandir: one directory pass, cheap per-entry stats — this runs

@@ -1,0 +1,115 @@
+"""Synthetic harnesses for exercising the execution plane itself.
+
+Real harnesses measure workloads; these measure *exaCB* — they are the
+instruments behind ``benchmarks/bench_workers.py`` and the worker-plane
+tests, deliberately free of jax so a spawned worker interpreter boots in
+milliseconds:
+
+* :class:`SpinHarness` — a CPU-bound, pure-Python, fixed-iteration integer
+  mix.  Pure Python means the GIL serializes it under the thread pool while
+  process workers run it truly in parallel: exactly the workload the
+  broker architecture exists for.  Reports are deterministic functions of
+  the cell (pinned timestamps, digest = f(seed, iters, cell)) so thread-
+  and process-mode stores are byte-comparable modulo resource accounting.
+* :class:`BlockingHarness` — writes a ``started.<cell>.<pid>`` sentinel and
+  then blocks until a release file appears; the crash-reclaim tests SIGKILL
+  the worker mid-cell (pid comes from the sentinel) and verify the lease
+  protocol recovers.
+
+Both are spawn-safe (:meth:`Harness.spawn_spec`) — construction state is a
+plain kwargs dict, never a closure.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import time
+from pathlib import Path
+from typing import Optional
+
+from repro.core.harness import BenchmarkSpec, Harness, Injections, injected_env
+from repro.core.protocol import DataEntry, Report, new_report
+
+#: Env var SpinHarness echoes into its metrics — lets tests prove an
+#: injection frame was genuinely applied inside a spawned worker.
+SPIN_ENV_KNOB = "EXACB_SPIN_ENV"
+
+
+def _deterministic_report(spec: BenchmarkSpec, *, digest_salt: str) -> Report:
+    """Protocol report fully determined by the cell: pinned timestamps and
+    pipeline id so two runs of the same cell are byte-identical."""
+    r = new_report(system=spec.system, variant=spec.effective_variant(),
+                   usecase=spec.shape, pipeline_id="synthetic")
+    r.experiment.timestamp = 1000.0
+    r.reporter.timestamp = 1000.0
+    digest = hashlib.sha256(
+        f"{spec.cell}.{spec.seed}.{digest_salt}".encode()).hexdigest()[:16]
+    metrics = {
+        "step_time_s": 1.0 + (int(digest, 16) % 1000) / 1e4,
+        "hlo_flops": 1.0, "hlo_bytes": 1.0, "collective_bytes": 0.0,
+        "t_compute": 1.0, "t_memory": 1.0, "t_collective": 0.0,
+        "artifact_digest": digest,
+        "seed": spec.seed,
+    }
+    r.data.append(DataEntry(success=True, runtime=0.1, metrics=metrics))
+    return r
+
+
+class SpinHarness(Harness):
+    """CPU-bound synthetic cell: ``iters`` rounds of pure-Python integer
+    mixing seeded from the cell identity."""
+
+    name = "spin"
+
+    def __init__(self, *, iters: int = 200_000):
+        self.iters = int(iters)
+
+    def spawn_spec(self):
+        return "repro.core.synthetic:SpinHarness", {"iters": self.iters}
+
+    def run(self, spec: BenchmarkSpec, injections: Optional[Injections] = None) -> Report:
+        inj = injections or Injections()
+        with injected_env(inj.env):
+            env_echo = os.environ.get(SPIN_ENV_KNOB, "")
+            acc = (spec.seed * 2654435761 + len(spec.cell)) & 0xFFFFFFFF
+            for i in range(self.iters):
+                acc = (acc * 6364136223846793005 + i) & 0xFFFFFFFFFFFFFFFF
+                acc ^= acc >> 33
+        report = _deterministic_report(spec, digest_salt=f"spin.{self.iters}.{acc}")
+        report.parameter["arch"] = spec.arch
+        report.data[0].metrics["spin_result"] = float(acc % 10**9)
+        if env_echo:
+            report.data[0].metrics["spin_env_echo"] = float(env_echo)
+        return report
+
+
+class BlockingHarness(Harness):
+    """Blocks inside ``run`` until ``<sentinel_dir>/release`` exists.
+
+    The sentinel file name carries the executing pid so a test can SIGKILL
+    the exact process that claimed the cell.  After the kill, the test
+    creates the release file — the reclaimed retry then completes
+    immediately.
+    """
+
+    name = "blocking"
+
+    def __init__(self, *, sentinel_dir: str, timeout_s: float = 60.0):
+        self.sentinel_dir = str(sentinel_dir)
+        self.timeout_s = float(timeout_s)
+
+    def spawn_spec(self):
+        return "repro.core.synthetic:BlockingHarness", {
+            "sentinel_dir": self.sentinel_dir, "timeout_s": self.timeout_s}
+
+    def run(self, spec: BenchmarkSpec, injections: Optional[Injections] = None) -> Report:
+        root = Path(self.sentinel_dir)
+        root.mkdir(parents=True, exist_ok=True)
+        (root / f"started.{spec.cell}.{os.getpid()}").write_text(str(time.time()))
+        deadline = time.monotonic() + self.timeout_s
+        while not (root / "release").exists():
+            if time.monotonic() > deadline:
+                raise RuntimeError(f"BlockingHarness timed out on {spec.cell}")
+            time.sleep(0.02)
+        return _deterministic_report(spec, digest_salt="blocking")

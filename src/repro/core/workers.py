@@ -1,0 +1,532 @@
+"""Distributed execution plane: CampaignBroker + process worker pool.
+
+The thread scheduler (``repro.core.scheduler``) keeps every cell in one
+interpreter — CPU-bound harness work serializes on the GIL, and one crashed
+interpreter loses the whole campaign.  This module is the alternative
+dispatch path the paper's JUREAP deployment model needs:
+
+* :class:`CampaignBroker` materializes a campaign's cells into a
+  lease-reclaimed :class:`~repro.core.workqueue.WorkQueue` persisted under
+  the store root, spawns N worker *processes*, and monitors them —
+  reclaiming expired leases and respawning dead workers (bounded).
+* :func:`worker_main` is the spawn entrypoint.  A worker is configured by
+  plain data only (store root + backend name, harness ``module:factory``
+  recipe, lease timings): no closure, harness object, or lock crosses the
+  process boundary.  It re-applies the campaign's ambient env-injection
+  frame inside its own interpreter (``injected_env`` state is per-process —
+  see the spawn caveat in ``repro.core.harness``), then drains the queue:
+  claim → execute via a fresh ``ExecutionOrchestrator`` (process-scope
+  resource accounting) → persist → write the done marker.
+* **Exactly-once effect**: a worker SIGKILLed between its store append and
+  its done marker would make the reclaimed retry re-execute the cell.
+  Every persisted report is tagged with the cell's ``task_uid``, and a
+  retry first checks the store for that tag — it adopts the orphaned
+  result instead of appending a duplicate.
+
+Because the queue and the results both live in the store's filesystem, the
+same protocol extends to N *hosts* draining one campaign over shared
+storage — nothing here assumes the workers share a parent process.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import json
+import multiprocessing as mp
+import threading
+import time
+import traceback
+import uuid
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.component import PipelineError
+from repro.core.harness import BenchmarkSpec, Harness, HarnessCapabilities, Injections, injected_env
+from repro.core.protocol import Report
+from repro.core.readiness import Readiness
+from repro.core.store import ResultStore
+from repro.core.workqueue import DEFAULT_LEASE_TIMEOUT, DEFAULT_MAX_ATTEMPTS, WorkQueue
+
+QUEUE_DIRNAME = "_queue"  # under the store root; skipped by prefix scans
+
+
+# ---------------------------------------------------------------------------
+# Spawn-safe configuration
+# ---------------------------------------------------------------------------
+
+def spawn_spec_for(harness: Harness) -> Tuple[str, Dict[str, Any]]:
+    """The harness's ``("module:factory", kwargs)`` recipe, as a hard error
+    (not a mystery pickle failure) when the adapter doesn't provide one."""
+    try:
+        ref, kwargs = harness.spawn_spec()
+    except NotImplementedError as e:
+        raise PipelineError(str(e)) from e
+    return str(ref), dict(kwargs)
+
+
+def resolve_harness(ref: str, kwargs: Dict[str, Any]) -> Harness:
+    """Rebuild a harness from its spawn recipe inside a worker."""
+    module, sep, attr = ref.partition(":")
+    if not sep or not attr:
+        raise PipelineError(f"bad harness ref {ref!r} (want 'module:factory')")
+    factory = getattr(importlib.import_module(module), attr)
+    return factory(**kwargs)
+
+
+@dataclasses.dataclass
+class WorkerConfig:
+    """Everything a spawned worker needs, as plain data."""
+
+    store_root: str
+    store_backend: str = "dir"
+    harness_ref: str = ""
+    harness_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: Ambient env-injection frame re-applied inside the worker interpreter
+    #: (spawn does not inherit the parent's active ``injected_env`` frames).
+    env: Dict[str, str] = dataclasses.field(default_factory=dict)
+    lease_timeout: float = DEFAULT_LEASE_TIMEOUT
+    heartbeat_interval: float = 0.0  # 0 = lease_timeout / 4
+    max_attempts: int = DEFAULT_MAX_ATTEMPTS
+    poll_s: float = 0.1
+    #: Give up after this long with no claimable work and an unfinished
+    #: queue (an orphaned worker must not outlive its campaign forever).
+    idle_timeout: float = 120.0
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(doc: Dict[str, Any]) -> "WorkerConfig":
+        return WorkerConfig(**doc)
+
+    def heartbeat_s(self) -> float:
+        return self.heartbeat_interval or max(0.05, self.lease_timeout / 4.0)
+
+
+# ---------------------------------------------------------------------------
+# Worker side
+# ---------------------------------------------------------------------------
+
+class _Heartbeat(threading.Thread):
+    """Refreshes one cell's lease while the harness runs, so a *live* worker
+    on a slow cell is never mistaken for a dead one."""
+
+    def __init__(self, queue: WorkQueue, idx: int, interval: float):
+        super().__init__(daemon=True, name=f"heartbeat-{idx:05d}")
+        self.queue = queue
+        self.idx = idx
+        self.interval = interval
+        self._stop = threading.Event()
+
+    def run(self) -> None:
+        while not self._stop.wait(self.interval):
+            self.queue.heartbeat(self.idx)
+
+    def stop(self) -> None:
+        self._stop.set()
+
+
+class _TaggingHarness(Harness):
+    """Wraps the real harness to stamp execution-plane provenance
+    (``task_uid``, worker id, attempt) into each report *before* the
+    orchestrator persists it — the dedup key for crash recovery."""
+
+    def __init__(self, inner: Harness, tags: Dict[str, Any]):
+        self.inner = inner
+        self.name = inner.name
+        self.tags = tags
+
+    def capabilities(self) -> HarnessCapabilities:
+        return self.inner.capabilities()
+
+    def run(self, spec, injections=None):
+        report = self.inner.run(spec, injections)
+        report.parameter.update(self.tags)
+        return report
+
+
+def _injections_from_payload(doc: Optional[Dict[str, Any]]) -> Optional[Injections]:
+    if not doc:
+        return None
+    return Injections(env=dict(doc.get("env", {})),
+                      overrides=dict(doc.get("overrides", {})))
+
+
+def _find_adopted(store: ResultStore, prefix: str, task_uid: str) -> Optional[Report]:
+    """A report persisted by a previous (killed) attempt of this cell."""
+    for report in store.query(prefix):
+        if report.parameter.get("task_uid") == task_uid:
+            return report
+    return None
+
+
+def _execute_payload(
+    payload: Dict[str, Any],
+    *,
+    store: ResultStore,
+    harness: Harness,
+    worker_id: str,
+    attempt: int,
+) -> Dict[str, Any]:
+    """Run one queue cell to a terminal result dict (the done-marker body).
+    Never raises: execution errors are results, like everywhere else."""
+    from repro.core.orchestrator import ExecutionOrchestrator  # lazy: cycle
+
+    task_uid = str(payload.get("task_uid", ""))
+    base = {
+        "task_uid": task_uid,
+        "component_ref": payload.get("component_ref", "execution@v4"),
+        "call_index": payload.get("call_index", 0),
+        "cell_index": payload.get("cell_index", 0),
+        "worker": worker_id,
+        "attempts": attempt,
+    }
+    try:
+        spec = BenchmarkSpec(**payload["spec"])
+        prefix = payload.get("prefix", "default")
+        record = bool(payload.get("record", True))
+        if attempt > 1 and record:
+            adopted = _find_adopted(store, prefix, task_uid)
+            if adopted is not None:
+                # A prior attempt died AFTER persisting: adopt its report
+                # instead of re-executing — no duplicate store append.
+                return base | {
+                    "cell": spec.cell,
+                    "readiness": int(adopted.parameter.get("readiness", 0)),
+                    "error": None,
+                    "report": adopted.to_dict(),
+                    "adopted": True,
+                }
+        tagged = _TaggingHarness(harness, {
+            "task_uid": task_uid, "worker": worker_id, "attempt": attempt})
+        # Payloads may originate from a component with a wider schema
+        # (feature-injection sweep points); the worker always executes
+        # through the execution orchestrator, so keep only its inputs.
+        allowed = {s.name for s in ExecutionOrchestrator.schema.inputs}
+        inputs = {k: v for k, v in dict(payload.get("inputs", {})).items()
+                  if k in allowed}
+        ex = ExecutionOrchestrator(
+            inputs=inputs,
+            harness=tagged,
+            store=store,
+            resource_scope="process",
+            worker_id=worker_id,
+        )
+        res = ex.run_cell(spec, _injections_from_payload(payload.get("injections")))
+        return base | {
+            "cell": spec.cell,
+            "readiness": int(res.readiness),
+            "error": res.error,
+            "report": res.report.to_dict() if res.report is not None else None,
+        }
+    except Exception as e:  # noqa: BLE001 — a worker must never die on one cell
+        return base | {
+            "cell": payload.get("spec", {}).get("arch", "?"),
+            "readiness": 0,
+            "error": f"{type(e).__name__}: {e}\n{traceback.format_exc(limit=3)}",
+            "report": None,
+        }
+
+
+def worker_main(worker_id: str, queue_root: str, config: Dict[str, Any]) -> None:
+    """Spawn entrypoint: drain the queue until the campaign finishes.
+
+    Runs in a fresh interpreter — everything it needs arrives as plain data
+    in ``config`` (see :class:`WorkerConfig`).
+    """
+    cfg = WorkerConfig.from_dict(config)
+    queue = WorkQueue(queue_root, lease_timeout=cfg.lease_timeout)
+    store = ResultStore(cfg.store_root, backend=cfg.store_backend)
+    harness = resolve_harness(cfg.harness_ref, cfg.harness_kwargs)
+    idle_since = time.monotonic()
+    # Ambient injection frames do NOT survive spawn — re-enter them here so
+    # every cell this worker runs sees the campaign's environment.
+    with injected_env(cfg.env):
+        while True:
+            claim = queue.claim_next(worker_id)
+            if claim is None:
+                if queue.finished() or queue.stop_requested():
+                    return
+                queue.reclaim_expired(max_attempts=cfg.max_attempts)
+                if time.monotonic() - idle_since > cfg.idle_timeout:
+                    return
+                time.sleep(cfg.poll_s)
+                continue
+            idle_since = time.monotonic()
+            idx, payload, attempt = claim
+            beat = _Heartbeat(queue, idx, cfg.heartbeat_s())
+            beat.start()
+            try:
+                result = _execute_payload(
+                    payload, store=store, harness=harness,
+                    worker_id=worker_id, attempt=attempt)
+            finally:
+                beat.stop()
+            queue.complete(idx, result)
+
+
+# ---------------------------------------------------------------------------
+# Broker side
+# ---------------------------------------------------------------------------
+
+class CampaignBroker:
+    """Materializes cells into a work queue and supervises the worker pool.
+
+    The broker never executes cells itself: its monitor loop only watches
+    completion, reclaims expired leases, and respawns dead workers (bounded
+    by ``workers * max_attempts`` — a systematically crashing campaign must
+    terminate, not flap forever).
+    """
+
+    def __init__(
+        self,
+        store: ResultStore,
+        *,
+        workers: int = 4,
+        name: str = "campaign",
+        lease_timeout: float = DEFAULT_LEASE_TIMEOUT,
+        heartbeat_interval: float = 0.0,
+        max_attempts: int = DEFAULT_MAX_ATTEMPTS,
+        poll_s: float = 0.1,
+        queue_root: Optional[Path] = None,
+        env: Optional[Dict[str, str]] = None,
+        deadline_s: Optional[float] = None,
+        keep_queue: bool = False,
+    ):
+        self.store = store
+        self.workers = max(1, int(workers))
+        self.name = name
+        self.lease_timeout = float(lease_timeout)
+        self.heartbeat_interval = float(heartbeat_interval)
+        self.max_attempts = max(1, int(max_attempts))
+        self.poll_s = float(poll_s)
+        self.queue_root = Path(queue_root) if queue_root else (
+            Path(store.root) / QUEUE_DIRNAME / f"{name}-{uuid.uuid4().hex[:8]}")
+        self.env = dict(env or {})
+        self.deadline_s = deadline_s
+        self.keep_queue = keep_queue
+        self.queue: Optional[WorkQueue] = None
+        self.processes: List[Optional[mp.process.BaseProcess]] = []
+
+    def _config(self, harness: Harness) -> WorkerConfig:
+        ref, kwargs = spawn_spec_for(harness)
+        backend = getattr(self.store.backend, "name", "dir")
+        if backend not in ("dir", "jsonl"):
+            raise PipelineError(
+                f"store backend {backend!r} is not shareable across worker "
+                "processes (need a filesystem-backed backend)")
+        return WorkerConfig(
+            store_root=str(self.store.root),
+            store_backend=backend,
+            harness_ref=ref,
+            harness_kwargs=kwargs,
+            env=self.env,
+            lease_timeout=self.lease_timeout,
+            heartbeat_interval=self.heartbeat_interval,
+            max_attempts=self.max_attempts,
+        )
+
+    def materialize(self, payloads: Sequence[Dict[str, Any]]) -> WorkQueue:
+        queue = WorkQueue(self.queue_root, lease_timeout=self.lease_timeout)
+        queue.create(list(payloads), campaign=self.name)
+        self.queue = queue
+        return queue
+
+    def run(self, payloads: Sequence[Dict[str, Any]], *, harness: Harness) -> Dict[int, Dict[str, Any]]:
+        """Drain ``payloads`` through the worker pool; returns the terminal
+        result dict for every cell index (synthesized failure records for
+        cells that never completed — the caller always gets len(payloads)
+        answers)."""
+        payloads = list(payloads)
+        queue = self.materialize(payloads)
+        cfg = self._config(harness).to_dict()
+        ctx = mp.get_context("spawn")  # spawn-safe by construction
+        spawned = 0
+
+        def _spawn() -> mp.process.BaseProcess:
+            nonlocal spawned
+            spawned += 1
+            p = ctx.Process(
+                target=worker_main,
+                args=(f"{self.name}-w{spawned}", str(self.queue_root), cfg),
+                daemon=True,
+                name=f"exacb-worker-{spawned}",
+            )
+            p.start()
+            return p
+
+        self.processes = [_spawn() for _ in range(min(self.workers, len(payloads)))]
+        respawn_budget = self.workers * self.max_attempts
+        t0 = time.monotonic()
+        try:
+            while not queue.finished():
+                queue.reclaim_expired(max_attempts=self.max_attempts)
+                if queue.finished():
+                    break
+                for i, proc in enumerate(self.processes):
+                    if proc is not None and proc.exitcode is not None:
+                        proc.join()
+                        if spawned < respawn_budget:
+                            self.processes[i] = _spawn()
+                        else:
+                            self.processes[i] = None
+                if all(p is None for p in self.processes):
+                    break  # respawn budget exhausted with work outstanding
+                if self.deadline_s is not None and time.monotonic() - t0 > self.deadline_s:
+                    break
+                time.sleep(self.poll_s)
+        finally:
+            queue.request_stop()
+            for proc in self.processes:
+                if proc is None:
+                    continue
+                proc.join(timeout=2 * self.lease_timeout)
+                if proc.is_alive():
+                    proc.terminate()
+                    proc.join(timeout=5)
+        results = queue.results()
+        for idx in range(len(payloads)):
+            results.setdefault(idx, {
+                "task_uid": payloads[idx].get("task_uid", ""),
+                "readiness": 0,
+                "error": "cell never completed (worker pool exhausted or deadline hit)",
+                "attempts": 0,
+                "report": None,
+            })
+        if not self.keep_queue:
+            import shutil
+            shutil.rmtree(self.queue_root, ignore_errors=True)
+        return results
+
+
+# ---------------------------------------------------------------------------
+# Payload construction + collection entrypoint
+# ---------------------------------------------------------------------------
+
+def cell_payload(
+    spec: BenchmarkSpec,
+    inputs: Dict[str, Any],
+    *,
+    component_ref: str = "execution@v4",
+    call_index: int = 0,
+    cell_index: int = 0,
+    injections: Optional[Injections] = None,
+) -> Dict[str, Any]:
+    """One queue task: pure data, dispatchable by any interpreter."""
+    if injections is not None and injections.launcher is not None:
+        raise PipelineError(
+            "launcher injection (a callable) cannot cross the process "
+            "boundary; run launcher-injected cells in thread mode")
+    return {
+        "component_ref": component_ref,
+        "call_index": int(call_index),
+        "cell_index": int(cell_index),
+        "prefix": inputs.get("prefix", "default"),
+        "record": bool(inputs.get("record", True)),
+        "inputs": dict(inputs),
+        "spec": dataclasses.asdict(spec),
+        "injections": (
+            {"env": dict(injections.env), "overrides": dict(injections.overrides)}
+            if injections is not None else None),
+    }
+
+
+def run_collection_process(
+    *,
+    inputs: Dict[str, Any],
+    harness: Harness,
+    store: ResultStore,
+    specs: Sequence[BenchmarkSpec],
+    injections: Optional[Injections] = None,
+    workers: int = 4,
+    **broker_kwargs: Any,
+):
+    """Process-mode twin of ``ExecutionOrchestrator.run_collection``: same
+    specs in, same ordered ``CellResult`` list out, but drained by spawned
+    workers through the broker."""
+    from repro.core.orchestrator import CellResult  # lazy: cycle
+
+    specs = list(specs)
+    payloads = [
+        cell_payload(spec, dict(inputs), cell_index=i, injections=injections)
+        for i, spec in enumerate(specs)
+    ]
+    name = f"collection-{inputs.get('prefix', 'default')}"
+    broker = CampaignBroker(store, workers=workers, name=name, **broker_kwargs)
+    results = broker.run(payloads, harness=harness)
+    out: List[CellResult] = []
+    for i, spec in enumerate(specs):
+        out.append(result_to_cell(spec, results.get(i)))
+    return out
+
+
+def result_to_cell(spec: BenchmarkSpec, result: Optional[Dict[str, Any]]):
+    """Done-marker dict → CellResult (shared by collection and pipeline
+    process paths)."""
+    from repro.core.orchestrator import CellResult  # lazy: cycle
+
+    if result is None:
+        return CellResult(spec, None, Readiness.FAILED,
+                          error="no result recorded for cell")
+    report = None
+    if result.get("report"):
+        try:
+            report = Report.from_dict(result["report"])
+        except Exception as e:  # noqa: BLE001 — a torn marker is a failure
+            return CellResult(spec, None, Readiness.FAILED,
+                              error=f"unreadable result marker: {e}")
+    return CellResult(
+        spec,
+        report,
+        Readiness(int(result.get("readiness", 0))),
+        error=result.get("error"),
+        attempts=int(result.get("attempts", 1)),
+    )
+
+
+def pipeline_payloads(calls: Sequence[Any]) -> Tuple[List[Dict[str, Any]], Dict[int, List[int]]]:
+    """Materialize every *producer* call of a pipeline into queue payloads.
+
+    Returns ``(payloads, owners)`` where ``owners[call_index]`` lists the
+    payload indices belonging to that call — a feature-injection sweep
+    contributes one payload per sweep point, so its points drain across the
+    whole worker pool instead of serializing inside one call."""
+    from repro.core.orchestrator import (  # lazy: cycle
+        _injections_from_inputs, spec_from_inputs)
+
+    payloads: List[Dict[str, Any]] = []
+    owners: Dict[int, List[int]] = {}
+    for ci, call in enumerate(calls):
+        if call.name not in ("execution", "feature-injection"):
+            continue
+        inputs = call.inputs
+        spec = spec_from_inputs(inputs)
+        points: List[Optional[Injections]]
+        if call.name == "execution":
+            points = [None]
+        else:
+            base = _injections_from_inputs(inputs)
+            values = inputs.get("values")
+            if values:
+                if not (inputs.get("env_knob") or inputs.get("override_knob")):
+                    raise PipelineError(
+                        f"{inputs.component}: 'values' needs an 'env_knob' "
+                        "or 'override_knob' to sweep")
+                points = []
+                for v in values:
+                    inj = Injections(env=dict(base.env), overrides=dict(base.overrides))
+                    if inputs.get("env_knob"):
+                        inj.env[inputs["env_knob"]] = str(v)
+                    if inputs.get("override_knob"):
+                        inj.overrides[inputs["override_knob"]] = v
+                    points.append(inj)
+            else:
+                points = [base]
+        owners[ci] = []
+        for k, inj in enumerate(points):
+            owners[ci].append(len(payloads))
+            payloads.append(cell_payload(
+                spec, dict(inputs), component_ref=inputs.component or call.ref,
+                call_index=ci, cell_index=k, injections=inj))
+    return payloads, owners

@@ -1,0 +1,299 @@
+"""Lease-reclaimed, claim-based work queue on a shared filesystem.
+
+The distributed execution plane's coordination substrate: a ``CampaignBroker``
+materializes a campaign's cells into one queue directory, and N independent
+worker *processes* (eventually N hosts sharing the filesystem — the paper's
+JUREAP deployment model) drain it with no duplicate execution.  The protocol
+reuses the store's proven concurrency machinery (``DirBackend``'s flock +
+``O_EXCL`` claim files) rather than inventing a new one:
+
+* **Tasks** are immutable JSON payloads ``tasks/<idx>.json`` written once at
+  materialization — dispatch is by data (document, component-ref,
+  cell-index), never by closure, so any spawned interpreter can execute any
+  cell.
+* **Claims** are ``O_EXCL``-created lease files ``leases/<idx>.lease``: the
+  single winner of the create race owns the cell.  The owner heartbeats the
+  lease (mtime refresh) while executing; a lease whose mtime goes stale for
+  longer than ``lease_timeout`` marks a dead worker.
+* **Reclaim** is flock-arbitrated (``.reclaim.lock``): any process may call
+  :meth:`WorkQueue.reclaim_expired`; exactly one wins, unlinks the stale
+  lease, and journals the event to ``reclaims.jsonl`` — the journal length
+  per cell is the retry counter, and a cell reclaimed ``max_attempts`` times
+  is terminally failed (failure isolation: one poisoned cell cannot wedge
+  the campaign).
+* **Completion** is a first-writer-wins ``done/<idx>.json`` marker (written
+  to a temp file, then hard-linked into place — atomic and exclusive).  A
+  slow-but-alive worker whose cell was reclaimed simply loses the marker
+  race; its result is discarded.
+
+Liveness is judged by lease mtime, so on a shared filesystem all
+participating hosts should have reasonably synchronized clocks (the same
+assumption the store's mtime-fingerprint cache already makes).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.store import _flock, _funlock
+
+DEFAULT_LEASE_TIMEOUT = 15.0
+DEFAULT_MAX_ATTEMPTS = 3
+
+_META = "queue.json"
+_RECLAIMS = "reclaims.jsonl"
+_RECLAIM_LOCK = ".reclaim.lock"
+_STOP = "stop"
+
+
+class WorkQueueError(RuntimeError):
+    pass
+
+
+def _task_name(idx: int) -> str:
+    return f"{idx:05d}"
+
+
+class WorkQueue:
+    """One campaign's claim-based cell queue (see module docstring)."""
+
+    def __init__(self, root: str | Path, *, lease_timeout: float = DEFAULT_LEASE_TIMEOUT):
+        self.root = Path(root)
+        self.lease_timeout = float(lease_timeout)
+        self._tasks = self.root / "tasks"
+        self._leases = self.root / "leases"
+        self._done = self.root / "done"
+        self._n_tasks: Optional[int] = None
+
+    # ------------------------------------------------------------ lifecycle
+    def create(self, payloads: List[Dict[str, Any]], *, campaign: str = "campaign") -> "WorkQueue":
+        """Materialize ``payloads`` as immutable task files.  ``task_uid`` is
+        stamped onto each payload (campaign + index) so retries and store
+        records are correlatable; the meta file is written last — a queue
+        without it is invisible to workers."""
+        if self.root.exists() and (self.root / _META).exists():
+            raise WorkQueueError(f"queue already materialized at {self.root}")
+        for d in (self._tasks, self._leases, self._done):
+            d.mkdir(parents=True, exist_ok=True)
+        for idx, payload in enumerate(payloads):
+            payload = dict(payload)
+            payload.setdefault("task_uid", f"{campaign}:{idx}")
+            _atomic_json(self._tasks / f"{_task_name(idx)}.json", payload)
+        _atomic_json(self.root / _META, {
+            "campaign": campaign,
+            "n_tasks": len(payloads),
+            "created": time.time(),
+            "lease_timeout": self.lease_timeout,
+        })
+        self._n_tasks = len(payloads)
+        return self
+
+    @property
+    def n_tasks(self) -> int:
+        if self._n_tasks is None:
+            try:
+                meta = json.loads((self.root / _META).read_text())
+            except (OSError, ValueError) as e:
+                raise WorkQueueError(f"no queue at {self.root}: {e}") from e
+            self._n_tasks = int(meta["n_tasks"])
+        return self._n_tasks
+
+    def payload(self, idx: int) -> Dict[str, Any]:
+        return json.loads((self._tasks / f"{_task_name(idx)}.json").read_text())
+
+    # ---------------------------------------------------------------- claim
+    def claim_next(self, worker: str) -> Optional[Tuple[int, Dict[str, Any], int]]:
+        """Claim the lowest unowned, unfinished cell via the ``O_EXCL`` lease
+        race; returns ``(idx, payload, attempt)`` or ``None`` when every cell
+        is either done or currently leased."""
+        reclaims = self._reclaim_counts()
+        for idx in range(self.n_tasks):
+            name = _task_name(idx)
+            if (self._done / f"{name}.json").exists():
+                continue
+            lease = self._leases / f"{name}.lease"
+            if lease.exists():
+                continue  # cheap pre-check; O_EXCL below is the arbiter
+            try:
+                fd = os.open(lease, os.O_CREAT | os.O_EXCL | os.O_WRONLY, 0o644)
+            except FileExistsError:
+                continue  # lost the race — another worker owns this cell
+            attempt = 1 + reclaims.get(idx, 0)
+            try:
+                os.write(fd, json.dumps({
+                    "worker": worker, "attempt": attempt, "claimed_at": time.time(),
+                }).encode())
+            finally:
+                os.close(fd)
+            return idx, self.payload(idx), attempt
+        return None
+
+    def heartbeat(self, idx: int) -> bool:
+        """Refresh the lease's liveness signal (mtime).  Returns False when
+        the lease is gone — i.e. the cell was reclaimed out from under the
+        caller, whose eventual ``complete`` will simply lose the race."""
+        try:
+            os.utime(self._leases / f"{_task_name(idx)}.lease")
+            return True
+        except OSError:
+            return False
+
+    def complete(self, idx: int, result: Dict[str, Any]) -> bool:
+        """Write the terminal result marker, first writer wins.  Returns
+        False when another writer (a reclaimed retry, or the reclaimer's
+        terminal-failure marker) got there first."""
+        done = self._done / f"{_task_name(idx)}.json"
+        fd, tmp = tempfile.mkstemp(dir=self._done, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(result, f, default=str)
+            try:
+                os.link(tmp, done)  # atomic + exclusive (fails if done exists)
+                won = True
+            except FileExistsError:
+                won = False
+            except OSError:
+                # Filesystem without hard links: O_EXCL create is the fallback
+                # arbiter (non-atomic content, but single-writer by contract).
+                try:
+                    dfd = os.open(done, os.O_CREAT | os.O_EXCL | os.O_WRONLY, 0o644)
+                except FileExistsError:
+                    won = False
+                else:
+                    with os.fdopen(dfd, "w") as f:
+                        json.dump(result, f, default=str)
+                    won = True
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        (self._leases / f"{_task_name(idx)}.lease").unlink(missing_ok=True)
+        return won
+
+    # -------------------------------------------------------------- reclaim
+    def reclaim_expired(self, *, max_attempts: int = DEFAULT_MAX_ATTEMPTS) -> List[int]:
+        """Reclaim every lease whose heartbeat went stale: unlink it, journal
+        the event, and terminally fail cells that exhausted ``max_attempts``
+        executions.  flock-arbitrated — safe to call from any process (the
+        broker's monitor loop AND idle workers both do)."""
+        if not self._leases.exists():
+            return []
+        reclaimed: List[int] = []
+        lock_fd = os.open(self.root / _RECLAIM_LOCK, os.O_CREAT | os.O_RDWR, 0o644)
+        try:
+            _flock(lock_fd)
+            now = time.time()
+            counts = self._reclaim_counts()
+            for lease in sorted(self._leases.glob("*.lease")):
+                idx = int(lease.stem)
+                name = _task_name(idx)
+                if (self._done / f"{name}.json").exists():
+                    lease.unlink(missing_ok=True)  # straggler cleanup
+                    continue
+                try:
+                    age = now - lease.stat().st_mtime
+                except OSError:
+                    continue  # completed/reclaimed between glob and stat
+                if age <= self.lease_timeout:
+                    continue
+                try:
+                    info = json.loads(lease.read_text())
+                except (OSError, ValueError):
+                    info = {}
+                lease.unlink(missing_ok=True)
+                attempts = counts.get(idx, 0) + 1
+                counts[idx] = attempts
+                with open(self.root / _RECLAIMS, "a") as f:
+                    f.write(json.dumps({
+                        "idx": idx, "worker": info.get("worker", "?"),
+                        "attempt": info.get("attempt", attempts), "ts": now,
+                    }) + "\n")
+                if attempts >= max_attempts:
+                    # Terminal failure marker — failure isolation, not retry
+                    # forever.  complete() keeps first-writer-wins semantics.
+                    self.complete(idx, {
+                        "task_uid": self.payload(idx).get("task_uid", ""),
+                        "error": f"lease expired after {attempts} failed "
+                                 f"attempts (last worker {info.get('worker', '?')})",
+                        "readiness": 0,
+                        "attempts": attempts,
+                        "reclaimed": True,
+                    })
+                reclaimed.append(idx)
+        finally:
+            _funlock(lock_fd)
+            os.close(lock_fd)
+        return reclaimed
+
+    def _reclaim_counts(self) -> Dict[int, int]:
+        counts: Dict[int, int] = {}
+        try:
+            text = (self.root / _RECLAIMS).read_text()
+        except OSError:
+            return counts
+        for line in text.splitlines():
+            try:
+                idx = int(json.loads(line)["idx"])
+            except (ValueError, KeyError, TypeError):
+                continue
+            counts[idx] = counts.get(idx, 0) + 1
+        return counts
+
+    def reclaim_journal(self) -> List[Dict[str, Any]]:
+        try:
+            text = (self.root / _RECLAIMS).read_text()
+        except OSError:
+            return []
+        out = []
+        for line in text.splitlines():
+            try:
+                out.append(json.loads(line))
+            except ValueError:
+                continue
+        return out
+
+    # ------------------------------------------------------------ observers
+    def done_count(self) -> int:
+        try:
+            return sum(1 for p in self._done.iterdir() if p.suffix == ".json")
+        except OSError:
+            return 0
+
+    def finished(self) -> bool:
+        return self.done_count() >= self.n_tasks
+
+    def results(self) -> Dict[int, Dict[str, Any]]:
+        """Every terminal result marker, keyed by cell index."""
+        out: Dict[int, Dict[str, Any]] = {}
+        if not self._done.exists():
+            return out
+        for p in sorted(self._done.glob("*.json")):
+            try:
+                out[int(p.stem)] = json.loads(p.read_text())
+            except (ValueError, OSError):
+                continue
+        return out
+
+    # ----------------------------------------------------------------- stop
+    def request_stop(self) -> None:
+        """Advisory shutdown marker: idle workers exit their drain loop."""
+        (self.root / _STOP).touch()
+
+    def stop_requested(self) -> bool:
+        return (self.root / _STOP).exists()
+
+
+def _atomic_json(path: Path, doc: Dict[str, Any]) -> None:
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(doc, f, default=str)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise

@@ -2,12 +2,14 @@
 failures stay isolated under concurrency, and the component DAG orders
 post-processing after the executions it consumes."""
 
+import json
 import os
 import threading
 import time
 
 import pytest
 
+from repro.core import accounting
 from repro.core.cicd import component_dag, parse_pipeline_text, run_pipeline
 from repro.core.harness import BenchmarkSpec, Harness, Injections, injected_env
 from repro.core.orchestrator import ExecutionOrchestrator, FeatureInjectionOrchestrator
@@ -106,6 +108,30 @@ def test_scheduler_rejects_structural_errors():
         ])
 
 
+def test_cycle_detected_before_any_task_runs():
+    """The Kahn pre-pass fires before the pool exists: a cyclic DAG must
+    not execute even its acyclic members."""
+    ran = []
+    tasks = [
+        Task("free", lambda: ran.append("free")),  # not on the cycle
+        Task("a", lambda: ran.append("a"), deps=frozenset({"b"})),
+        Task("b", lambda: ran.append("b"), deps=frozenset({"a"})),
+    ]
+    with pytest.raises(SchedulerError, match="cycle"):
+        CampaignScheduler(parallelism=4).run_tasks(tasks)
+    assert ran == []  # zero task bodies executed
+
+
+def test_map_items_threads_meta():
+    seen = []
+    CampaignScheduler(parallelism=2).map_items(
+        lambda x: x * 2, [1, 2, 3], metas=["one", "two", "three"],
+        on_result=lambda tr: seen.append((tr.meta, tr.value)))
+    assert sorted(seen) == [("one", 2), ("three", 6), ("two", 4)]
+    with pytest.raises(SchedulerError, match="metas length"):
+        CampaignScheduler().map_items(lambda x: x, [1, 2], metas=["only-one"])
+
+
 def test_scheduler_streams_results():
     seen = []
     CampaignScheduler(parallelism=2).map_items(lambda x: x * 2, [1, 2, 3],
@@ -127,15 +153,19 @@ def test_parallel_collection_matches_serial(tmp_path):
                                  harness=StubHarness(), store=parallel_store)
     rs = ex_s.run_collection(specs)
     rp = ex_p.run_collection(specs)
-    # Report-for-report: same cells, same readiness, same digests & metrics.
+    # Report-for-report: same cells, same readiness, same digests & metrics
+    # (modulo the per-run resource accounting, which legitimately varies).
     assert [r.spec.cell for r in rs] == [r.spec.cell for r in rp]
     assert [r.readiness for r in rs] == [r.readiness for r in rp]
     for a, b in zip(rs, rp):
-        assert a.report.data[0].metrics == b.report.data[0].metrics
+        assert (accounting.strip_volatile(a.report.to_dict())
+                == accounting.strip_volatile(b.report.to_dict()))
     # Persisted stores agree too (order-insensitive: workers race to append).
-    sa = sorted(r.to_json() for r in serial_store.query("c"))
-    sb = sorted(r.to_json() for r in parallel_store.query("c"))
-    assert sa == sb
+    def canon(store):
+        return sorted(json.dumps(accounting.strip_volatile(r.to_dict()),
+                                 sort_keys=True)
+                      for r in store.query("c"))
+    assert canon(serial_store) == canon(parallel_store)
 
 
 def test_parallel_collection_actually_overlaps(tmp_path):
