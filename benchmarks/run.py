@@ -102,14 +102,21 @@ def main(argv=None) -> None:
     # Atomic replace: the trajectory is the cross-PR perf history — a crash
     # mid-write (or a concurrent run) must never leave a truncated file the
     # next run's loader would reset.
+    from repro.core import fingerprint
     from repro.core.store import _atomic_write
 
+    # Each run entry carries the host's environment fingerprint: perf
+    # history is only comparable across PRs when the runner conditions
+    # (governor, cgroup limits, library set) are visible next to the data.
+    fp = fingerprint.capture()
     out = Path(args.out)
     doc = _load_trajectory(out)
     doc["runs"].append({
         "timestamp": time.time(),
         "ok": failures == 0,
         "benches": rows,
+        "env_fingerprint": fp,
+        "env_key": fingerprint.key(fp),
     })
     _atomic_write(out, json.dumps(doc, indent=2, default=str) + "\n")
     print(f"trajectory: {out} ({len(doc['runs'])} runs)", file=sys.stderr)

@@ -1,0 +1,38 @@
+"""Capture this host's environment fingerprint to JSON.
+
+CI observability helper: every workflow job runs this once and uploads the
+file as an artifact, so when a benchmark or gate result looks suspicious the
+first question — *what machine state produced it?* — is answerable from the
+run page without re-running anything.
+
+    PYTHONPATH=src python scripts/ci_fingerprint.py --out env_fingerprint.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.core import fingerprint
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="env_fingerprint.json")
+    args = ap.parse_args(argv)
+
+    fp = fingerprint.capture()
+    doc = {"fingerprint": fp, "key": fingerprint.key(fp)}
+    out = Path(args.out)
+    out.write_text(json.dumps(doc, indent=2, default=str) + "\n")
+    stable = {k: fp.get(k) for k in fingerprint.KEY_FIELDS if fp.get(k) is not None}
+    print(f"fingerprint -> {out}")
+    print(json.dumps(stable, indent=2, default=str))
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -8,15 +8,62 @@ exit 3 and name the injected sequence as the change point.
     PYTHONPATH=src python scripts/ci_inject_slowdown.py \
         --store gate_store --prefix ci.smoke --metric step_time_s \
         --factor 20 --count 6
+
+``--duet`` switches to the paired failure path: instead of absolute slow
+reports it appends ``--count`` complete duet *rounds* under one fresh
+``duet_id`` — baseline at the historical median, candidate ``--factor``×
+slower, both sides of each round scaled by the same per-round jitter
+(``--noise``) so only the *paired* detector can see through the noise.
+Every injected report carries this host's real environment fingerprint, so
+the resulting ``gate_report.json`` proves fingerprints flow end to end.
 """
 
 from __future__ import annotations
 
 import argparse
+import hashlib
 import statistics
+import uuid
 
+from repro.core import duet, fingerprint
 from repro.core.protocol import DataEntry, new_report
 from repro.core.store import ResultStore
+
+
+def _inject_absolute(store, args, base: float) -> None:
+    slow = base * args.factor
+    for i in range(args.count):
+        rep = new_report(system="synthetic-slowdown", variant="injected",
+                         usecase=args.prefix, pipeline_id=f"inject-{i}")
+        rep.data.append(DataEntry(success=True, runtime=slow,
+                                  metrics={args.metric: slow}))
+        store.append(args.prefix, rep)
+    print(f"appended {args.count} reports with {args.metric}={slow:.6g} "
+          f"to {args.prefix} (median was {base:.6g})")
+
+
+def _inject_duet(store, args, base: float) -> None:
+    fp = fingerprint.capture()
+    duet_id = uuid.uuid4().hex[:12]
+    for i in range(args.count):
+        # One jitter per round, shared by both roles — the environmental
+        # noise model the paired gate exists to divide out.
+        h = int(hashlib.sha256(f"inject.{i}".encode()).hexdigest()[:8], 16)
+        jitter = 1.0 + args.noise * (h / 0xFFFFFFFF)
+        for role, factor in ((duet.ROLE_BASELINE, 1.0),
+                             (duet.ROLE_CANDIDATE, args.factor)):
+            val = base * jitter * factor
+            rep = new_report(system="synthetic-slowdown", variant="injected",
+                             usecase=args.prefix,
+                             pipeline_id=f"inject-duet-{i}-{role}")
+            rep.parameter[duet.PARAMETER] = duet.tag(duet_id, role, i, args.count)
+            fingerprint.stamp(rep, fp)
+            rep.data.append(DataEntry(success=True, runtime=val,
+                                      metrics={args.metric: val}))
+            store.append(args.prefix, rep)
+    print(f"appended {args.count} duet rounds ({duet_id}) with candidate "
+          f"{args.metric} at {args.factor}x baseline {base:.6g} "
+          f"(noise {args.noise})")
 
 
 def main(argv=None) -> int:
@@ -27,6 +74,11 @@ def main(argv=None) -> int:
     ap.add_argument("--metric", default="step_time_s")
     ap.add_argument("--factor", type=float, default=20.0)
     ap.add_argument("--count", type=int, default=6)
+    ap.add_argument("--duet", action="store_true",
+                    help="inject paired duet rounds (candidate slowed) "
+                         "instead of absolute slow reports")
+    ap.add_argument("--noise", type=float, default=0.3,
+                    help="per-round shared jitter amplitude for --duet")
     args = ap.parse_args(argv)
 
     store = ResultStore(args.store, backend=args.store_backend)
@@ -39,15 +91,11 @@ def main(argv=None) -> int:
     if not vals:
         raise SystemExit(f"no {args.metric!r} history under {args.prefix!r} "
                          f"in {args.store}")
-    slow = statistics.median(vals) * args.factor
-    for i in range(args.count):
-        rep = new_report(system="synthetic-slowdown", variant="injected",
-                         usecase=args.prefix, pipeline_id=f"inject-{i}")
-        rep.data.append(DataEntry(success=True, runtime=slow,
-                                  metrics={args.metric: slow}))
-        store.append(args.prefix, rep)
-    print(f"appended {args.count} reports with {args.metric}={slow:.6g} "
-          f"to {args.prefix} (median was {statistics.median(vals):.6g})")
+    base = statistics.median(vals)
+    if args.duet:
+        _inject_duet(store, args, base)
+    else:
+        _inject_absolute(store, args, base)
     return 0
 
 

@@ -36,8 +36,10 @@ except ImportError:  # non-POSIX
 RESOURCE_METRICS = ("res_wall_s", "res_cpu_s", "res_max_rss_mb")
 
 # Envelope keys stamped by the execution plane that legitimately differ
-# between two otherwise-identical runs (who ran it, when, at what cost).
-VOLATILE_PARAMETERS = ("resources", "task_uid", "worker", "attempt")
+# between two otherwise-identical runs (who ran it, when, at what cost,
+# and under which observed environment conditions).
+VOLATILE_PARAMETERS = ("resources", "task_uid", "worker", "attempt",
+                       "env_fingerprint", "fingerprint_drift")
 
 
 def _peak_rss_mb(scope: str) -> float:
@@ -100,6 +102,9 @@ def strip_volatile(doc: Dict[str, Any]) -> Dict[str, Any]:
     rep = d.get("reporter", {})
     rep["timestamp"] = 0.0
     rep["pipeline_id"] = ""
+    # The environment fingerprint carries volatile observations (load,
+    # frequency, thermal) that differ even between back-to-back runs.
+    rep["environment"] = {}
     d.get("experiment", {})["timestamp"] = 0.0
     params = d.get("parameter", {})
     for key in VOLATILE_PARAMETERS:

@@ -49,17 +49,25 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import duet as _duet
+from repro.core import fingerprint as _fp
 from repro.core.protocol import is_envelope
 from repro.core.store import IndexEntry, ResultStore
 
-COLUMNS_VERSION = 1
+# v2: duet/duet_role/fingerprint dimensions + duet_round column.  Older
+# sidecars fail the version check in load() and rebuild cleanly.
+COLUMNS_VERSION = 2
 SIDECAR_NAME = "columns.npz"
 
 # Dictionary-encoded dimension columns (int32 codes into a per-table vocab).
-DIMENSIONS = ("system", "variant", "queue", "job_id", "pipeline", "injection")
+# "duet" is the shared duet_id ("" for non-duet rows), "duet_role" is
+# baseline/candidate, "fingerprint" is the environment-class key
+# (fingerprint.key_of) so queries can stratify history by runner class.
+DIMENSIONS = ("system", "variant", "queue", "job_id", "pipeline", "injection",
+              "duet", "duet_role", "fingerprint")
 
 _NUMERIC = ("seq", "timestamp", "runtime", "nodes", "tasks_per_node",
-            "threads_per_task")
+            "threads_per_task", "duet_round")
 _FLAGS = ("success", "trusted", "envelope")
 
 
@@ -218,6 +226,7 @@ class ColumnTable:
         system: Optional[str] = None,
         variant: Optional[str] = None,
         pipelines: Optional[Sequence[str]] = None,
+        fingerprint: Optional[str] = None,
         last_entries: Optional[int] = None,
     ) -> MetricSeries:
         """Filtered series for one metric, in store order.
@@ -248,6 +257,9 @@ class ColumnTable:
         if pipelines is not None:
             codes = [self._dim_code("pipeline", p) for p in pipelines]
             mask &= np.isin(self.codes["pipeline"], codes)
+        if fingerprint is not None:
+            mask &= (self.codes["fingerprint"]
+                     == self._dim_code("fingerprint", fingerprint))
         if last_entries is not None:
             last = int(last_entries)
             if last <= 0:
@@ -260,6 +272,60 @@ class ColumnTable:
     def metrics(self) -> List[str]:
         """Metric names with at least one stored value."""
         return list(self.metric_names)
+
+    def seq_fingerprints(self) -> Dict[int, str]:
+        """{store seq: environment-class key} for every covered row ("" for
+        untagged reports) — the gate uses it to stratify baselines and to
+        detect drift.  Memoized per table."""
+        hit = self.cache.get("seq_fingerprints")
+        if hit is None:
+            vocab = self.vocabs["fingerprint"]
+            hit = {int(s): vocab[int(c)]
+                   for s, c in zip(self.columns["seq"].tolist(),
+                                   self.codes["fingerprint"].tolist())}
+            self.cache["seq_fingerprints"] = hit
+        return hit
+
+    def duet_pairs(
+        self,
+        metric: str,
+        *,
+        success_only: bool = True,
+        last_entries: Optional[int] = None,
+    ) -> List["_duet.DuetPair"]:
+        """Completed duet rounds for one metric, sorted by (candidate seq,
+        round).  Semantics mirror :func:`duet.pairs_from_reports` exactly
+        (success filtering, runtime fallback, last-value-wins per slot) so
+        both gate paths judge identical pairs."""
+        key = ("duet_pairs", metric, success_only, last_entries)
+        hit = self.cache.get(key)
+        if hit is not None:
+            return list(hit)
+        vals, mask = self._metric_column(metric, runtime_fallback=True)
+        mask = mask.copy()
+        if success_only:
+            mask &= self.columns["success"]
+        empty = self._vocab_idx["duet"].get("")
+        if empty is not None:
+            mask &= self.codes["duet"] != empty
+        if last_entries is not None:
+            last = int(last_entries)
+            if last <= 0:
+                mask &= False
+            elif self.entry_seqs.size > last:
+                mask &= self.columns["seq"] >= int(self.entry_seqs[-last])
+        slots: _duet.Slots = {}
+        for i in np.nonzero(mask)[0].tolist():
+            did = self.vocabs["duet"][int(self.codes["duet"][i])]
+            if not did:
+                continue
+            role = self.vocabs["duet_role"][int(self.codes["duet_role"][i])]
+            slot = slots.setdefault((did, int(self.columns["duet_round"][i])), {})
+            slot[role] = (float(vals[i]), int(self.columns["seq"][i]),
+                          float(self.columns["timestamp"][i]))
+        out = _duet.pairs_from_slots(slots)
+        self.cache[key] = out
+        return list(out)
 
     def system_groups(
         self, metric: str, *, system: Optional[str] = None
@@ -430,6 +496,11 @@ def _encode(prefix: str, pairs, index: Sequence[IndexEntry],
     for entry, report in pairs:
         inj = json.dumps(report.parameter.get("injections", {}),
                          sort_keys=True, default=str)
+        dctx = _duet.context_of(report)
+        duet_id = str(dctx["duet_id"]) if dctx else ""
+        duet_role = str(dctx.get("role", "")) if dctx else ""
+        duet_round = int(dctx.get("round", -1)) if dctx else -1
+        fp_key = _fp.key_of(report)
         for d in report.data:
             cols["seq"].append(entry.seq)
             cols["timestamp"].append(report.experiment.timestamp)
@@ -437,6 +508,7 @@ def _encode(prefix: str, pairs, index: Sequence[IndexEntry],
             cols["nodes"].append(d.nodes)
             cols["tasks_per_node"].append(d.tasks_per_node)
             cols["threads_per_task"].append(d.threads_per_task)
+            cols["duet_round"].append(duet_round)
             cols["success"].append(bool(d.success))
             cols["trusted"].append(bool(report.reporter.chain_of_trust))
             cols["envelope"].append(is_envelope(report))
@@ -446,6 +518,9 @@ def _encode(prefix: str, pairs, index: Sequence[IndexEntry],
             codes["job_id"].append(code("job_id", d.job_id))
             codes["pipeline"].append(code("pipeline", report.reporter.pipeline_id))
             codes["injection"].append(code("injection", inj))
+            codes["duet"].append(code("duet", duet_id))
+            codes["duet_role"].append(code("duet_role", duet_role))
+            codes["fingerprint"].append(code("fingerprint", fp_key))
             for k, v in d.metrics.items():
                 try:
                     fv = float(v)
@@ -474,6 +549,7 @@ def _encode(prefix: str, pairs, index: Sequence[IndexEntry],
         "nodes": np.asarray(cols["nodes"], dtype=np.int64),
         "tasks_per_node": np.asarray(cols["tasks_per_node"], dtype=np.int64),
         "threads_per_task": np.asarray(cols["threads_per_task"], dtype=np.int64),
+        "duet_round": np.asarray(cols["duet_round"], dtype=np.int64),
         "success": np.asarray(cols["success"], dtype=bool),
         "trusted": np.asarray(cols["trusted"], dtype=bool),
         "envelope": np.asarray(cols["envelope"], dtype=bool),

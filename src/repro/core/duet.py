@@ -1,0 +1,119 @@
+"""Duet-run vocabulary: paired baseline/candidate measurements.
+
+A duet cell runs as interleaved A/B/A/B invocations of the *same* cell on
+the *same* worker — role ``baseline`` then role ``candidate``, repeated
+for ``rounds`` rounds under one shared ``duet_id``.  Because both roles of
+a round execute back-to-back on one machine, multiplicative environmental
+noise (frequency scaling, a noisy neighbor, thermal throttling) hits both
+sides of the pair almost equally and divides out of the per-round
+(candidate − baseline) delta — which is exactly the series the paired
+gate judges instead of absolute values.
+
+This module owns only the vocabulary: the parameter tag stamped on each
+report, and the :class:`DuetPair` extraction shared by the columnar plane
+(:meth:`ColumnTable.duet_pairs`) and the raw-report fallback
+(:func:`pairs_from_reports`), so both gate paths see byte-identical
+pairs.  It deliberately imports nothing above the protocol layer.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from repro.core.protocol import Report
+
+ROLE_BASELINE = "baseline"
+ROLE_CANDIDATE = "candidate"
+ROLES = (ROLE_BASELINE, ROLE_CANDIDATE)
+
+#: Parameter slot the duet tag is stored under on each report.
+PARAMETER = "duet"
+
+
+def tag(duet_id: str, role: str, round_idx: int, rounds: int) -> Dict[str, Any]:
+    """The parameter payload stamped on one duet invocation's report."""
+    return {"duet_id": str(duet_id), "role": str(role),
+            "round": int(round_idx), "rounds": int(rounds)}
+
+
+def context_of(report: Report) -> Optional[Dict[str, Any]]:
+    """The duet tag of a report, or ``None`` for non-duet reports."""
+    ctx = report.parameter.get(PARAMETER)
+    if isinstance(ctx, dict) and ctx.get("duet_id"):
+        return ctx
+    return None
+
+
+@dataclass(frozen=True)
+class DuetPair:
+    """One completed round: both roles measured, keyed by the candidate's
+    store sequence so pairs order consistently with absolute series."""
+
+    duet_id: str
+    round: int
+    baseline: float
+    candidate: float
+    seq: int            # candidate invocation's store sequence
+    baseline_seq: int
+    timestamp: float    # candidate invocation's timestamp
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"duet_id": self.duet_id, "round": self.round,
+                "baseline": self.baseline, "candidate": self.candidate,
+                "seq": self.seq, "baseline_seq": self.baseline_seq,
+                "timestamp": self.timestamp}
+
+
+#: slot map shape shared with the columnar extractor:
+#: {(duet_id, round): {role: (value, seq, timestamp)}}
+Slots = Dict[Tuple[str, int], Dict[str, Tuple[float, int, float]]]
+
+
+def pairs_from_slots(slots: Slots) -> List[DuetPair]:
+    """Completed pairs (both roles present) sorted by (candidate seq, round)."""
+    out: List[DuetPair] = []
+    for (duet_id, round_idx), roles in slots.items():
+        if ROLE_BASELINE not in roles or ROLE_CANDIDATE not in roles:
+            continue  # orphaned half-round: never judged
+        bval, bseq, _ = roles[ROLE_BASELINE]
+        cval, cseq, cts = roles[ROLE_CANDIDATE]
+        out.append(DuetPair(duet_id=duet_id, round=round_idx,
+                            baseline=bval, candidate=cval,
+                            seq=cseq, baseline_seq=bseq, timestamp=cts))
+    out.sort(key=lambda p: (p.seq, p.round))
+    return out
+
+
+def pairs_from_reports(pairs: Iterable[Tuple[Any, Report]],
+                       metric: str) -> List[DuetPair]:
+    """Extract duet pairs from ``(index entry, report)`` pairs — the
+    non-columnar twin of :meth:`ColumnTable.duet_pairs`.
+
+    Matches the columnar semantics exactly: successful entries only,
+    ``runtime`` falls back to the entry runtime when absent from metrics,
+    and the last value per (duet_id, round, role) wins.
+    """
+    slots: Slots = {}
+    for entry, report in pairs:
+        ctx = context_of(report)
+        if ctx is None:
+            continue
+        value: Optional[float] = None
+        for d in report.data:
+            if not d.success:
+                continue
+            if metric in d.metrics:
+                try:
+                    value = float(d.metrics[metric])
+                except (TypeError, ValueError):
+                    continue
+            elif metric == "runtime":
+                value = float(d.runtime)
+        if value is None:
+            continue
+        slot = slots.setdefault(
+            (str(ctx["duet_id"]), int(ctx.get("round", -1))), {})
+        slot[str(ctx.get("role", ""))] = (
+            value, int(entry.seq), float(report.experiment.timestamp))
+    return pairs_from_slots(slots)

@@ -1,0 +1,191 @@
+"""Environment fingerprints: who actually ran this measurement, and how.
+
+CI runners are noisy neighbors — CPU frequency scaling alone is documented
+to cause ~49% variance on the workloads this repo gates — so every report
+records the environment it was produced under.  A fingerprint has two
+kinds of fields:
+
+* **Key fields** (:data:`KEY_FIELDS`) describe the *environment class*:
+  hostname, machine, CPU count, frequency governor, cgroup CPU quota, and
+  key library versions.  They are stable across the invocations of one
+  campaign on one runner, and two measurements are only directly
+  comparable when their key fields agree.  :func:`key` canonicalizes them
+  into a single string that the columnar plane dictionary-encodes as a
+  dimension, and :func:`drift` names the fields on which two fingerprints
+  disagree.
+* **Volatile observations** — current frequency, load average, thermal
+  reading — change between invocations by nature.  They are recorded for
+  forensics (why was this run slow?) but never participate in the key, so
+  they can never flag drift.
+
+Every probe degrades gracefully: a missing or unreadable ``/sys`` or
+``/proc`` entry yields ``None`` for that field, never an exception, so
+capture works identically in containers, on macOS, and under restricted
+CI sandboxes.  The sysfs/procfs roots are parameters so tests can point
+capture at a fabricated tree.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+import platform
+import socket
+import sys
+from typing import Any, Dict, List, Optional, Union
+
+from repro.core.protocol import Report
+
+#: Fields that define the environment *class* — :func:`key` and
+#: :func:`drift` look only at these.  Everything else captured is a
+#: volatile observation.
+KEY_FIELDS = (
+    "hostname", "machine", "cpu_count", "governor", "cgroup_cpu_max",
+    "python", "numpy", "jax",
+)
+
+#: Parameter slot the full structured fingerprint is stored under.
+PARAMETER = "env_fingerprint"
+
+#: Parameter slot listing the drifted key fields when a run's environment
+#: no longer matches the campaign reference.
+DRIFT_PARAMETER = "fingerprint_drift"
+
+#: Libraries whose versions participate in the key (a silently upgraded
+#: numpy is a different measurement environment).
+_KEY_LIBRARIES = ("numpy", "jax")
+
+
+def _read_text(path: str) -> Optional[str]:
+    try:
+        with open(path, "r", encoding="utf-8", errors="replace") as fh:
+            return fh.read().strip()
+    except OSError:
+        return None
+
+
+def _read_int(path: str) -> Optional[int]:
+    raw = _read_text(path)
+    if raw is None:
+        return None
+    try:
+        return int(raw.split()[0])
+    except (ValueError, IndexError):
+        return None
+
+
+@functools.lru_cache(maxsize=1)
+def _library_versions() -> Dict[str, Optional[str]]:
+    # importlib.metadata reads dist-info without importing the library, and
+    # the answer cannot change within one interpreter — cache it so capture
+    # stays cheap enough to run once per cell invocation.
+    try:
+        from importlib import metadata
+    except ImportError:  # pragma: no cover - py3.7 only
+        return {name: None for name in _KEY_LIBRARIES}
+    out: Dict[str, Optional[str]] = {}
+    for name in _KEY_LIBRARIES:
+        try:
+            out[name] = metadata.version(name)
+        except Exception:
+            out[name] = None
+    return out
+
+
+def capture(*, sysfs_root: str = "/sys", proc_root: str = "/proc") -> Dict[str, Any]:
+    """Probe the current environment; unreadable probes yield ``None``."""
+    fp: Dict[str, Any] = {}
+    try:
+        fp["hostname"] = socket.gethostname()
+    except OSError:
+        fp["hostname"] = None
+    fp["machine"] = platform.machine() or None
+    fp["cpu_count"] = os.cpu_count()
+    fp["python"] = platform.python_version()
+    fp.update(_library_versions())
+
+    cpufreq = os.path.join(sysfs_root, "devices", "system", "cpu", "cpu0", "cpufreq")
+    fp["governor"] = _read_text(os.path.join(cpufreq, "scaling_governor"))
+    fp["cpu_freq_khz"] = _read_int(os.path.join(cpufreq, "scaling_cur_freq"))
+    fp["cpu_freq_max_khz"] = _read_int(os.path.join(cpufreq, "scaling_max_freq"))
+
+    # cgroup v2 CPU quota ("max 100000" or "200000 100000"); the quota is a
+    # key field — a re-limited container is a different machine in effect.
+    fp["cgroup_cpu_max"] = _read_text(os.path.join(sysfs_root, "fs", "cgroup", "cpu.max"))
+
+    thermal = _read_int(os.path.join(
+        sysfs_root, "class", "thermal", "thermal_zone0", "temp"))
+    fp["thermal_c"] = thermal / 1000.0 if thermal is not None else None
+
+    try:
+        fp["loadavg_1m"] = round(os.getloadavg()[0], 3)
+    except (OSError, AttributeError):
+        fp["loadavg_1m"] = None
+    # proc_root is accepted for symmetry/testing even though loadavg comes
+    # from the libc call; keep a direct probe as fallback when it failed.
+    if fp["loadavg_1m"] is None:
+        raw = _read_text(os.path.join(proc_root, "loadavg"))
+        if raw:
+            try:
+                fp["loadavg_1m"] = float(raw.split()[0])
+            except (ValueError, IndexError):
+                pass
+    return fp
+
+
+def key(fp: Optional[Dict[str, Any]]) -> str:
+    """Canonical string over :data:`KEY_FIELDS` — the stratification class.
+
+    Empty string when nothing was captured, so untagged legacy reports
+    keep an empty key and never participate in drift decisions.
+    """
+    if not fp:
+        return ""
+    fields = {k: fp[k] for k in KEY_FIELDS if fp.get(k) is not None}
+    if not fields:
+        return ""
+    return json.dumps(fields, sort_keys=True, separators=(",", ":"))
+
+
+def _as_fields(fp: Union[str, Dict[str, Any], None]) -> Dict[str, Any]:
+    if not fp:
+        return {}
+    if isinstance(fp, str):
+        try:
+            doc = json.loads(fp)
+        except ValueError:
+            return {"_raw": fp}
+        return doc if isinstance(doc, dict) else {"_raw": fp}
+    return {k: v for k, v in fp.items() if k in KEY_FIELDS}
+
+
+def drift(a: Union[str, Dict[str, Any], None],
+          b: Union[str, Dict[str, Any], None]) -> List[str]:
+    """Key fields on which two fingerprints (dicts or :func:`key` strings)
+    disagree.  Empty/absent fingerprints never drift — there is nothing to
+    compare against."""
+    fa, fb = _as_fields(a), _as_fields(b)
+    if not fa or not fb:
+        return []
+    out = []
+    for name in KEY_FIELDS + ("_raw",):
+        if fa.get(name) != fb.get(name):
+            out.append(name)
+    return out
+
+
+def stamp(report: Report, fp: Dict[str, Any]) -> None:
+    """Record a fingerprint on a report: flat strings into the protocol
+    envelope (``reporter.environment``) and the structured dict into
+    ``parameter["env_fingerprint"]`` for the columnar/gate planes."""
+    for k, v in fp.items():
+        if v is not None:
+            report.reporter.environment[k] = str(v)
+    report.parameter[PARAMETER] = dict(fp)
+
+
+def key_of(report: Report) -> str:
+    """The fingerprint key a report was stamped with ("" when untagged)."""
+    fp = report.parameter.get(PARAMETER)
+    return key(fp) if isinstance(fp, dict) else ""

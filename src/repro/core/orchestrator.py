@@ -21,9 +21,12 @@ import dataclasses
 import threading
 import time
 import traceback
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+import uuid
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core import accounting, analysis
+from repro.core import duet as duet_mod
+from repro.core import fingerprint as fingerprint_mod
 from repro.core.columnar import CampaignFrame
 from repro.core.component import (
     PARALLELISM,
@@ -79,8 +82,18 @@ _CELL_INPUTS = (
     WORKER_MODE,
 )
 
+# Duet measurement mode (execution only — feature-injection sweeps already
+# vary the cell deliberately).  See docs/measurement_methodology.md.
+_DUET_INPUTS = (
+    InputSpec("duet", bool, default=False,
+              help="run the cell as interleaved baseline/candidate pairs on "
+                   "one worker; the gate then judges paired per-round deltas"),
+    InputSpec("duet_rounds", int, default=4,
+              help="baseline/candidate round count per duet run"),
+)
+
 EXECUTION_SCHEMA = ComponentSchema(
-    "execution", 4, _CELL_INPUTS,
+    "execution", 4, _CELL_INPUTS + _DUET_INPUTS,
     description="run one benchmark cell through a harness with failure isolation",
 )
 
@@ -190,6 +203,30 @@ def _unwrap_cells(specs: Sequence[BenchmarkSpec], results: Sequence[TaskResult])
     return out
 
 
+def reduce_duet(spec: BenchmarkSpec, results: Sequence[CellResult]) -> CellResult:
+    """Collapse a duet's per-invocation results into one CellResult so every
+    one-result-per-spec surface (collection summaries, worker markers) keeps
+    its shape.  The representative report is the highest-round candidate;
+    readiness is the worst across invocations; attempts counts executions."""
+    errors = [r.error for r in results if r.error]
+    readiness = min((r.readiness for r in results), default=Readiness.FAILED)
+    report: Optional[Report] = None
+    best_round = -1
+    for r in results:
+        if r.report is None:
+            continue
+        ctx = duet_mod.context_of(r.report) or {}
+        if ctx.get("role") == duet_mod.ROLE_CANDIDATE and int(ctx.get("round", -1)) >= best_round:
+            best_round = int(ctx.get("round", -1))
+            report = r.report
+    if report is None:
+        report = next((r.report for r in reversed(results)
+                       if r.report is not None), None)
+    return CellResult(spec, report, readiness,
+                      error="; ".join(errors) if errors else None,
+                      attempts=sum(r.attempts for r in results))
+
+
 class ExecutionOrchestrator:
     """Runs benchmark cells through a harness with failure isolation
     (paper §V-A1)."""
@@ -207,6 +244,7 @@ class ExecutionOrchestrator:
         max_retries: int = 1,
         resource_scope: str = "thread",
         worker_id: str = "",
+        reference_fingerprint: Optional[Dict[str, Any]] = None,
     ):
         self.inputs = coerce_inputs(self.schema, inputs)
         self.harness = harness
@@ -218,12 +256,26 @@ class ExecutionOrchestrator:
         # deltas — exact per-cell cost including harness subprocesses.
         self.resource_scope = resource_scope
         self.worker_id = worker_id
+        # The environment this campaign believes it is measuring under.
+        # Every cell re-captures and compares: a drifted key field (governor
+        # flip, re-limited cgroup, library upgrade) downgrades chain_of_trust
+        # so the gate never promotes a baseline from a changed environment.
+        # Brokers pass their own capture so all workers share one reference.
+        self.reference_fingerprint = (dict(reference_fingerprint)
+                                      if reference_fingerprint
+                                      else fingerprint_mod.capture())
 
     @property
     def prefix(self) -> str:
         return self.inputs.get("prefix", "default")
 
-    def run_cell(self, spec: BenchmarkSpec, injections: Optional[Injections] = None) -> CellResult:
+    def run_cell(
+        self,
+        spec: BenchmarkSpec,
+        injections: Optional[Injections] = None,
+        *,
+        tags: Optional[Dict[str, Any]] = None,
+    ) -> CellResult:
         # Capability negotiation BEFORE dispatch: a cell whose requirements
         # (readiness level, step kind, injection mechanisms) exceed what the
         # harness declares fails fast — no execution slot burned, and the
@@ -251,6 +303,17 @@ class ExecutionOrchestrator:
                 # if the harness forgot to (protocol over trust).
                 if injections is not None:
                     report.parameter["injections"] = injections.describe()
+                if tags:
+                    report.parameter.update(tags)
+                # Environment fingerprint: every report records the runner
+                # conditions it was measured under; a key-field drift from
+                # the campaign reference marks the measurement untrusted.
+                fp = fingerprint_mod.capture()
+                fingerprint_mod.stamp(report, fp)
+                drifted = fingerprint_mod.drift(self.reference_fingerprint, fp)
+                if drifted:
+                    report.reporter.chain_of_trust = False
+                    report.parameter[fingerprint_mod.DRIFT_PARAMETER] = drifted
                 level, gaps = classify(report)
                 report.parameter.setdefault("readiness", int(level))
                 report.parameter.setdefault("readiness_gaps", gaps)
@@ -269,6 +332,45 @@ class ExecutionOrchestrator:
             except Exception as e:  # noqa: BLE001 — isolation is the point
                 last_err = f"{type(e).__name__}: {e}\n{traceback.format_exc(limit=3)}"
         return CellResult(spec, None, Readiness.FAILED, error=last_err, attempts=self.max_retries)
+
+    def run_duet(
+        self,
+        spec: BenchmarkSpec,
+        injections: Optional[Injections] = None,
+        *,
+        rounds: Optional[int] = None,
+        candidate_injections: Optional[Injections] = None,
+        duet_id: Optional[str] = None,
+        skip: Optional[Set[Tuple[int, str]]] = None,
+    ) -> List[CellResult]:
+        """Run a cell as interleaved baseline/candidate pairs (duet mode).
+
+        Each round executes the baseline role then the candidate role
+        back-to-back in this thread/process, so environmental noise that
+        varies round-to-round (frequency scaling, noisy neighbors) hits
+        both sides of a pair nearly equally and cancels out of the
+        per-round delta the paired gate judges.  ``candidate_injections``
+        defaults to ``injections`` — identical binaries, the null duet a
+        healthy CI run should measure.  ``skip`` names ``(round, role)``
+        slots already persisted (reclaimed-retry adoption in the worker
+        plane) so a duet resumes without duplicating measurements.
+        """
+        n_rounds = int(rounds if rounds is not None
+                       else self.inputs.get("duet_rounds", 4))
+        n_rounds = max(1, n_rounds)
+        duet_id = duet_id or uuid.uuid4().hex[:12]
+        cand_inj = candidate_injections if candidate_injections is not None else injections
+        skip = skip or set()
+        results: List[CellResult] = []
+        for r in range(n_rounds):
+            for role, inj in ((duet_mod.ROLE_BASELINE, injections),
+                              (duet_mod.ROLE_CANDIDATE, cand_inj)):
+                if (r, role) in skip:
+                    continue
+                results.append(self.run_cell(
+                    spec, inj,
+                    tags={duet_mod.PARAMETER: duet_mod.tag(duet_id, role, r, n_rounds)}))
+        return results
 
     def _parallelism(self, override: Optional[int]) -> int:
         return resolve_parallelism(self.inputs, override)
@@ -305,11 +407,19 @@ class ExecutionOrchestrator:
             return workers_mod.run_collection_process(
                 inputs=self.inputs, harness=self.harness, store=self.store,
                 specs=specs, injections=injections, workers=par)
+        if bool(self.inputs.get("duet")):
+            # A duet pair must stay interleaved on one executor: the whole
+            # duet is one unit of work (process mode gets the same pinning
+            # for free — one queue payload per spec, leased atomically).
+            def runner(s: BenchmarkSpec) -> CellResult:
+                return reduce_duet(s, self.run_duet(s, injections))
+        else:
+            def runner(s: BenchmarkSpec) -> CellResult:
+                return self.run_cell(s, injections)
         if par <= 1 or len(specs) <= 1:
-            return [self.run_cell(s, injections) for s in specs]
+            return [runner(s) for s in specs]
         sched = CampaignScheduler(parallelism=par, name=f"exec.{self.prefix}")
-        results = sched.map_items(lambda s: self.run_cell(s, injections), specs,
-                                  metas=specs)
+        results = sched.map_items(runner, specs, metas=specs)
         return _unwrap_cells(specs, results)
 
 
@@ -584,6 +694,12 @@ def _run_execution(inputs: ComponentInputs, ctx: ComponentContext) -> Dict[str, 
     ex = ExecutionOrchestrator(
         inputs=inputs, harness=ctx.harness_for(inputs), store=ctx.store)
     spec = spec_from_inputs(inputs)
+    if bool(inputs.get("duet")):
+        results = ex.run_duet(spec)
+        out = _cell_summary("execution", spec, reduce_duet(spec, results))
+        out["duet"] = {"rounds": int(inputs.get("duet_rounds", 4)),
+                       "invocations": len(results)}
+        return out
     return _cell_summary("execution", spec, ex.run_cell(spec))
 
 

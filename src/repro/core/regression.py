@@ -22,7 +22,13 @@ three pieces that turn stored benchmark history into an enforceable gate:
   - ``cusum``     CUSUM change-point locator over the recent *history*
                   series — it both detects a shift and names the store
                   sequence that introduced it, even when the shift landed
-                  between gate runs (e.g. data ingested out-of-band).
+                  between gate runs (e.g. data ingested out-of-band);
+  - ``paired``    duet-mode paired-delta judge: per-round
+                  (candidate − baseline) relative deltas from interleaved
+                  A/B invocations, so shared environmental noise cancels
+                  instead of masquerading as signal (the gate switches to
+                  it automatically when duet data exists — see
+                  ``docs/measurement_methodology.md``).
 
 * **RegressionGate** — a ``gate`` pipeline component: declares which
   execution prefix and metrics it guards (with per-metric direction and
@@ -54,6 +60,8 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import duet as duet_mod
+from repro.core import fingerprint as fp_mod
 from repro.core.component import ComponentSchema, InputSpec
 from repro.core.protocol import ProtocolError, unwrap_envelope, wrap_envelope
 from repro.core.store import ResultStore
@@ -336,10 +344,68 @@ class CusumDetector(Detector):
         )
 
 
+class PairedDeltaDetector(Detector):
+    """Judges per-round duet deltas instead of absolute series.
+
+    Both roles of a duet round run back-to-back on one worker, so shared
+    multiplicative noise (frequency scaling, noisy neighbors) divides out of
+    each relative delta — the inputs here are already effects, not raw
+    values.  ``baseline`` is the historical delta series (older duets of the
+    same cell), ``candidate`` the current duet's per-round deltas:
+
+    * effect = median current delta, recentered on the historical delta
+      median once enough history exists (cancels any systematic asymmetry
+      between the two roles, e.g. cache warm-up favoring the second
+      invocation);
+    * confidence = fraction of rounds whose delta clears half the
+      tolerance, damped by ``1 - 0.5**rounds`` so one or two unanimous
+      rounds can warn but never fail on their own.
+
+    Deterministic — no resampling, so CI verdicts are reproducible.
+    """
+
+    name = "paired"
+    scans_history = False
+
+    def __init__(self, min_rounds: int = 2, center_min_history: int = 3):
+        self.min_rounds = max(1, int(min_rounds))
+        self.center_min_history = max(1, int(center_min_history))
+
+    def verdict(self, baseline, candidate, spec, *, prefix="",
+                baseline_seqs=None, candidate_seqs=None) -> Verdict:
+        hist = np.asarray(baseline, dtype=np.float64)
+        cand = np.asarray(candidate, dtype=np.float64)
+        if cand.size < self.min_rounds:
+            return self._skip(spec, prefix, int(hist.size), int(cand.size),
+                              f"fewer than {self.min_rounds} completed "
+                              "duet rounds")
+        finite_hist = hist[np.isfinite(hist)]
+        center = (float(np.median(finite_hist))
+                  if finite_hist.size >= self.center_min_history else 0.0)
+        d = cand - center
+        effect = float(np.median(d))
+        over = d > spec.tolerance / 2
+        confidence = float(np.mean(over)) * (1.0 - 0.5 ** int(cand.size))
+        change_seq = None
+        if (candidate_seqs is not None and len(candidate_seqs) == cand.size
+                and bool(over.any())):
+            change_seq = int(list(candidate_seqs)[int(np.argmax(over))])
+        return Verdict(
+            status=classify(effect, confidence, spec),
+            detector=self.name, metric=spec.name, prefix=prefix,
+            effect=effect, confidence=confidence,
+            baseline_n=int(hist.size), candidate_n=int(cand.size),
+            change_seq=change_seq,
+            detail=(f"paired deltas: median {effect:+.4g} over "
+                    f"{int(cand.size)} rounds (center {center:+.4g})"),
+        )
+
+
 DETECTORS = {
     MadZScoreDetector.name: MadZScoreDetector,
     BootstrapDetector.name: BootstrapDetector,
     CusumDetector.name: CusumDetector,
+    PairedDeltaDetector.name: PairedDeltaDetector,
 }
 
 DEFAULT_DETECTORS = ("mad", "bootstrap", "cusum")
@@ -372,6 +438,10 @@ class Baseline:
     pinned: bool = False
     commit: str = ""
     expired: bool = False
+    # Environment-class key (fingerprint.key) the window was measured under;
+    # "" for legacy/untagged baselines.  A candidate whose key differs is
+    # judged against stratified history instead, and never promotes.
+    fingerprint: str = ""
 
     def to_payload(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -429,7 +499,7 @@ class BaselineManager:
 
     def promote(self, source_prefix: str, metric: str,
                 values: Sequence[float], seqs: Sequence[int],
-                commit: str = "") -> Baseline:
+                commit: str = "", fingerprint: str = "") -> Baseline:
         cur = self.current(source_prefix, metric)
         if cur is not None and cur.pinned:
             return cur
@@ -447,8 +517,9 @@ class BaselineManager:
             return cur
         merged_v = (old_v + [v for v, _ in fresh])[-self.window:]
         merged_s = (old_s + [s for _, s in fresh])[-self.window:]
-        return self._record(Baseline(metric, source_prefix, merged_v, merged_s,
-                                     commit=commit))
+        return self._record(Baseline(
+            metric, source_prefix, merged_v, merged_s, commit=commit,
+            fingerprint=fingerprint or (cur.fingerprint if cur else "")))
 
     def pin(self, source_prefix: str, metric: str, *,
             values: Optional[Sequence[float]] = None,
@@ -509,6 +580,8 @@ class GateSpec:
     baseline_prefix: str = "baseline"
     record_prefix: str = ""   # "" -> gate.<source_prefix>; "none" disables
     use_columnar: bool = True  # series from the columnar plane (O(delta) warm)
+    duet: bool = True         # judge paired deltas when duet data exists
+    duet_rounds: int = 2      # min completed pairs in the newest duet to engage
     detector_params: Dict[str, Dict[str, Any]] = dataclasses.field(
         default_factory=dict)
 
@@ -556,6 +629,8 @@ class GateSpec:
             baseline_prefix=str(inp.get("baseline_prefix", "baseline")),
             record_prefix=str(inp.get("prefix", inp.get("record_prefix", ""))),
             use_columnar=bool(inp.get("columnar", True)),
+            duet=bool(inp.get("duet", True)),
+            duet_rounds=int(inp.get("duet_rounds", 2)),
             detector_params=params,
         )
 
@@ -595,6 +670,12 @@ GATE_SCHEMA = ComponentSchema(
                        "default gate.<source_prefix>)"),
         InputSpec("record_prefix", str),
         InputSpec("columnar", bool, default=_GS["use_columnar"]),
+        InputSpec("duet", bool, default=_GS["duet"],
+                  help="judge paired per-round deltas whenever the newest "
+                       "duet has enough completed rounds"),
+        InputSpec("duet_rounds", int, default=_GS["duet_rounds"],
+                  help="minimum completed pairs in the newest duet before "
+                       "paired mode engages (else absolute fallback)"),
         InputSpec("detector_params", dict,
                   help="nested per-detector tuning (JSON pipelines)"),
     ),
@@ -626,11 +707,31 @@ class RegressionGate:
                                      last_entries=sp.history)
                 for m in sp.metrics
             }
+            pairs_for = ({m.name: table.duet_pairs(m.name,
+                                                   last_entries=sp.history)
+                          for m in sp.metrics} if sp.duet else {})
+            fp_map = table.seq_fingerprints()
+            trusted = {int(s) for s, t in zip(table.columns["seq"].tolist(),
+                                              table.columns["trusted"].tolist())
+                       if t}
         else:
             pairs = store.query_with_entries(sp.source_prefix, last=sp.history)
             series_for = {m.name: _series(pairs, m.name) for m in sp.metrics}
-        gates = [self._gate_metric(mgr, series_for[m.name], m)
-                 for m in sp.metrics]
+            pairs_for = ({m.name: duet_mod.pairs_from_reports(pairs, m.name)
+                          for m in sp.metrics} if sp.duet else {})
+            fp_map = {int(e.seq): fp_mod.key_of(r) for e, r in pairs}
+            trusted = {int(e.seq) for e, r in pairs
+                       if r.reporter.chain_of_trust}
+        gates = []
+        for m in sp.metrics:
+            hist_p, cand_p = _split_duet_pairs(pairs_for.get(m.name, []),
+                                               sp.candidate)
+            if cand_p and len(cand_p) >= max(1, sp.duet_rounds):
+                gates.append(self._gate_metric_paired(hist_p, cand_p, m,
+                                                      fp_map=fp_map))
+            else:
+                gates.append(self._gate_metric(mgr, series_for[m.name], m,
+                                               fp_map=fp_map, trusted=trusted))
         status = worst(g["status"] for g in gates)
         summary = {
             "component": "gate",
@@ -648,8 +749,11 @@ class RegressionGate:
         return summary
 
     def _gate_metric(self, mgr: BaselineManager, series: Any,
-                     mspec: MetricSpec) -> Dict[str, Any]:
+                     mspec: MetricSpec, *,
+                     fp_map: Optional[Dict[int, str]] = None,
+                     trusted: Optional[set] = None) -> Dict[str, Any]:
         sp = self.spec
+        fp_map = fp_map or {}
         # ``series`` is either a columnar ``MetricSeries`` (arrays, no
         # conversion) or the report-path ``[(seq, value), ...]`` list; both
         # are normalized to aligned numpy columns once, here.
@@ -664,19 +768,43 @@ class RegressionGate:
         hist_vals, hist_seqs = vals[:split], seqs[:split]
         cvals, cseqs = vals[split:], seqs[split:]
         cseq_list = cseqs.tolist()
+        # Fingerprint stratification: when the candidate carries an
+        # environment-class key, only history measured under the SAME class
+        # may serve as a judged-against or re-seeded baseline.  Untagged
+        # candidates ("" — legacy reports, synthetic injections) keep the
+        # pre-fingerprint behavior exactly.
+        cand_fp = fp_map.get(int(cseq_list[-1]), "") if cseq_list else ""
+        stratified_out = 0
+        if cand_fp and hist_seqs.size:
+            keep = np.fromiter(
+                (fp_map.get(int(s), "") in ("", cand_fp) for s in hist_seqs),
+                dtype=bool, count=int(hist_seqs.size))
+            stratified_out = int(hist_seqs.size - keep.sum())
+            if stratified_out:
+                hist_vals, hist_seqs = hist_vals[keep], hist_seqs[keep]
         base = mgr.current(sp.source_prefix, mspec.name)
-        if base is not None:
+        base_fp = base.fingerprint if base is not None else ""
+        drift_fields: List[str] = []
+        if base is not None and base_fp and cand_fp and base_fp != cand_fp:
+            # The recorded baseline was measured under a different
+            # environment class: judge from stratified history instead, and
+            # block promotion below — a drifted run must never silently
+            # become the reference.
+            drift_fields = fp_mod.drift(base_fp, cand_fp) or ["fingerprint"]
+        if base is not None and not drift_fields:
             bvals = np.asarray(base.values, dtype=np.float64)
             bseqs, pinned = list(base.seqs), base.pinned
         else:
             bvals = hist_vals[-sp.window:]
-            bseqs, pinned = hist_seqs[-sp.window:].tolist(), False
+            bseqs = hist_seqs[-sp.window:].tolist()
+            pinned = base.pinned if base is not None else False
         nb, nc = int(bvals.size), int(cvals.size)
         out: Dict[str, Any] = {
             "prefix": sp.source_prefix,
             "metric": mspec.name,
             "direction": mspec.direction,
             "tolerance": mspec.tolerance,
+            "mode": "absolute",
             "baseline": {
                 "n": nb,
                 "pinned": pinned,
@@ -684,6 +812,12 @@ class RegressionGate:
             },
             "candidate_seqs": cseq_list,
             "warn_only": sp.warn_only,
+            "fingerprint": {
+                "candidate": cand_fp,
+                "baseline": base_fp,
+                "drift": drift_fields,
+                "stratified_out": stratified_out,
+            },
         }
         if nb < sp.min_points or not nc:
             verdicts = [Verdict(
@@ -713,16 +847,111 @@ class RegressionGate:
         out["change_seq"] = next(
             (v.change_seq for v in verdicts if v.change_seq is not None), None)
         # Only green runs roll the baseline forward — a failed candidate must
-        # never become part of the reference it just violated.
+        # never become part of the reference it just violated.  Drifted or
+        # untrusted candidates never promote either: a changed environment
+        # must be acknowledged (baseline expire/pin), not laundered in.
+        promotion = "skipped"
         if sp.update_baseline and raw_status != FAIL and nc:
-            if base is None:
-                mgr.promote(sp.source_prefix, mspec.name,
-                            np.concatenate([bvals, cvals]),
-                            bseqs + cseq_list)
+            if drift_fields:
+                promotion = "blocked-drift"
+            elif base is not None and base.pinned:
+                promotion = "frozen-pinned"
             else:
-                mgr.promote(sp.source_prefix, mspec.name, cvals, cseq_list)
+                keep_idx = [i for i, s in enumerate(cseq_list)
+                            if trusted is None or int(s) in trusted]
+                if not keep_idx:
+                    promotion = "blocked-untrusted"
+                else:
+                    pv = cvals[keep_idx]
+                    ps = [int(cseq_list[i]) for i in keep_idx]
+                    if base is None:
+                        mgr.promote(sp.source_prefix, mspec.name,
+                                    np.concatenate([bvals, pv]), bseqs + ps,
+                                    fingerprint=cand_fp)
+                    else:
+                        mgr.promote(sp.source_prefix, mspec.name, pv, ps,
+                                    fingerprint=cand_fp)
+                    promotion = "updated"
+        out["promotion"] = promotion
         out["status"] = WARN if (sp.warn_only and raw_status == FAIL) else raw_status
         return out
+
+    def _gate_metric_paired(self, hist_pairs: List["duet_mod.DuetPair"],
+                            cand_pairs: List["duet_mod.DuetPair"],
+                            mspec: MetricSpec, *,
+                            fp_map: Optional[Dict[int, str]] = None
+                            ) -> Dict[str, Any]:
+        """Paired-delta gate path: the newest duet's per-round relative
+        deltas (already noise-cancelled) judged against the historical delta
+        series of older duets.  No absolute baseline participates — the
+        interleaved baseline role IS the reference, so there is nothing to
+        promote and environment drift cannot bias the verdict (it shifts
+        both roles of a pair together)."""
+        sp = self.spec
+        fp_map = fp_map or {}
+        hist_d = np.asarray([mspec.effect(p.candidate, p.baseline)
+                             for p in hist_pairs], dtype=np.float64)
+        cand_d = np.asarray([mspec.effect(p.candidate, p.baseline)
+                             for p in cand_pairs], dtype=np.float64)
+        det = PairedDeltaDetector(**sp.detector_params.get("paired", {}))
+        v = det.verdict(hist_d, cand_d, mspec, prefix=sp.source_prefix,
+                        baseline_seqs=[p.seq for p in hist_pairs],
+                        candidate_seqs=[p.seq for p in cand_pairs])
+        raw_status = v.status
+        cand_fp = fp_map.get(int(cand_pairs[-1].seq), "")
+        finite_hist = hist_d[np.isfinite(hist_d)]
+        out: Dict[str, Any] = {
+            "prefix": sp.source_prefix,
+            "metric": mspec.name,
+            "direction": mspec.direction,
+            "tolerance": mspec.tolerance,
+            "mode": "paired",
+            "duet": {
+                "duet_ids": sorted({p.duet_id for p in cand_pairs}),
+                "rounds": len(cand_pairs),
+                "history_pairs": len(hist_pairs),
+            },
+            "baseline": {
+                "n": len(hist_pairs),
+                "pinned": False,
+                "median": (float(np.median(finite_hist))
+                           if finite_hist.size else None),
+            },
+            "candidate_seqs": [p.seq for p in cand_pairs],
+            "warn_only": sp.warn_only,
+            "fingerprint": {
+                "candidate": cand_fp,
+                "baseline": "",
+                "drift": [],
+                "stratified_out": 0,
+            },
+            "verdicts": [v.to_dict()],
+            "change_seq": v.change_seq,
+            # Absolute baselines do not roll in paired mode: the paired
+            # history is read straight from stored duet reports.
+            "promotion": "paired",
+        }
+        out["status"] = WARN if (sp.warn_only and raw_status == FAIL) else raw_status
+        return out
+
+
+def _split_duet_pairs(
+    dpairs: Sequence["duet_mod.DuetPair"], n_current: int
+) -> Tuple[List["duet_mod.DuetPair"], List["duet_mod.DuetPair"]]:
+    """(historical pairs, current-run pairs): the newest ``n_current`` duet
+    groups (by candidate store order) are "this run", everything older is
+    the paired-delta history."""
+    order: List[str] = []
+    groups: Dict[str, List[Any]] = {}
+    for p in dpairs:  # already sorted by (candidate seq, round)
+        if p.duet_id not in groups:
+            order.append(p.duet_id)
+            groups[p.duet_id] = []
+        groups[p.duet_id].append(p)
+    cut = max(1, int(n_current))
+    cand = [p for i in order[-cut:] for p in groups[i]]
+    hist = [p for i in order[:-cut] for p in groups[i]]
+    return hist, cand
 
 
 def _series(pairs: Sequence[Tuple[Any, Any]], metric: str) -> List[Tuple[int, float]]:
@@ -824,6 +1053,11 @@ def main(argv=None) -> int:
     gate.add_argument("--min-points", type=int, default=3)
     gate.add_argument("--window", type=int, default=32)
     gate.add_argument("--no-update-baseline", action="store_true")
+    gate.add_argument("--no-duet", action="store_true",
+                      help="ignore duet pairs; judge the absolute series")
+    gate.add_argument("--duet-rounds", type=int, default=2,
+                      help="min completed pairs in the newest duet before "
+                           "the paired path engages")
     gate.add_argument("--no-columnar", action="store_true",
                       help="judge from report objects instead of the "
                            "columnar plane (debug/parity checks)")
@@ -868,6 +1102,8 @@ def main(argv=None) -> int:
         "window": args.window,
         "update_baseline": not args.no_update_baseline,
         "columnar": not args.no_columnar,
+        "duet": not args.no_duet,
+        "duet_rounds": args.duet_rounds,
     })).run(store)
     if args.report:
         from pathlib import Path

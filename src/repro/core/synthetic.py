@@ -14,7 +14,15 @@ milliseconds:
 * :class:`BlockingHarness` — writes a ``started.<cell>.<pid>`` sentinel and
   then blocks until a release file appears; the crash-reclaim tests SIGKILL
   the worker mid-cell (pid comes from the sentinel) and verify the lease
-  protocol recovers.
+  protocol recovers.  ``block_calls`` narrows the trap to one specific
+  invocation so duet tests can kill a worker *between* rounds.
+* :class:`DuetNoiseHarness` — a noisy-environment model: each duet round
+  draws one multiplicative jitter shared by both roles of the pair (the
+  two invocations of a round are consecutive calls on one worker), so the
+  absolute metric series is noisy while per-round deltas are clean.  The
+  candidate-side slowdown is injected through ``EXACB_DUET_SLOWDOWN`` —
+  this is the harness behind the duet-gate discrimination tests and the
+  ``duet`` CI job.
 
 Both are spawn-safe (:meth:`Harness.spawn_spec`) — construction state is a
 plain kwargs dict, never a closure.
@@ -34,6 +42,10 @@ from repro.core.protocol import DataEntry, Report, new_report
 #: Env var SpinHarness echoes into its metrics — lets tests prove an
 #: injection frame was genuinely applied inside a spawned worker.
 SPIN_ENV_KNOB = "EXACB_SPIN_ENV"
+
+#: Env var DuetNoiseHarness reads as a multiplicative slowdown — duet tests
+#: inject it on the candidate role only to model a real regression.
+DUET_SLOWDOWN_KNOB = "EXACB_DUET_SLOWDOWN"
 
 
 def _deterministic_report(spec: BenchmarkSpec, *, digest_salt: str) -> Report:
@@ -95,17 +107,32 @@ class BlockingHarness(Harness):
 
     name = "blocking"
 
-    def __init__(self, *, sentinel_dir: str, timeout_s: float = 60.0):
+    def __init__(self, *, sentinel_dir: str, timeout_s: float = 60.0,
+                 block_calls: Optional[int] = None):
         self.sentinel_dir = str(sentinel_dir)
         self.timeout_s = float(timeout_s)
+        # None: every call blocks (the original single-cell trap).  An int
+        # blocks only that 0-based call *of this process* — a duet test sets
+        # 2 to let round 0's pair persist, then traps round 1's baseline.
+        # The counter is per-interpreter, so a reclaimed retry (fresh spawn)
+        # starts at call 0 and sails past the trap.
+        self.block_calls = block_calls if block_calls is None else int(block_calls)
+        self._calls = 0
 
     def spawn_spec(self):
         return "repro.core.synthetic:BlockingHarness", {
-            "sentinel_dir": self.sentinel_dir, "timeout_s": self.timeout_s}
+            "sentinel_dir": self.sentinel_dir, "timeout_s": self.timeout_s,
+            "block_calls": self.block_calls}
 
     def run(self, spec: BenchmarkSpec, injections: Optional[Injections] = None) -> Report:
+        call = self._calls
+        self._calls += 1
+        if self.block_calls is not None and call != self.block_calls:
+            return _deterministic_report(spec, digest_salt="blocking")
         root = Path(self.sentinel_dir)
         root.mkdir(parents=True, exist_ok=True)
+        # The sentinel is written only by the blocking call, so a test that
+        # waits for it knows every earlier call has already persisted.
         (root / f"started.{spec.cell}.{os.getpid()}").write_text(str(time.time()))
         deadline = time.monotonic() + self.timeout_s
         while not (root / "release").exists():
@@ -113,3 +140,49 @@ class BlockingHarness(Harness):
                 raise RuntimeError(f"BlockingHarness timed out on {spec.cell}")
             time.sleep(0.02)
         return _deterministic_report(spec, digest_salt="blocking")
+
+
+class DuetNoiseHarness(Harness):
+    """Noisy-environment model for duet-gate discrimination tests.
+
+    Every duet round draws one multiplicative jitter from a hash of
+    ``(seed, round)`` — and because the two roles of a round execute as
+    consecutive calls on one worker, both sides of a pair see the *same*
+    jitter, exactly like frequency scaling or a noisy neighbor hitting a
+    real interleaved pair.  The absolute ``step_time_s`` series therefore
+    swings by up to ``noise`` between rounds (enough to fool an absolute
+    gate at tight tolerance) while per-round candidate−baseline deltas
+    stay clean.  A genuine regression is modeled by injecting
+    ``EXACB_DUET_SLOWDOWN`` on the candidate role only.
+    """
+
+    name = "duet-noise"
+
+    def __init__(self, *, base_s: float = 1.0, noise: float = 0.5,
+                 seed: int = 0, pair_calls: int = 2):
+        self.base_s = float(base_s)
+        self.noise = float(noise)
+        self.seed = int(seed)
+        # Calls per round (baseline + candidate); the per-process call
+        # counter divided by this yields the shared-jitter round index.
+        self.pair_calls = max(1, int(pair_calls))
+        self._calls = 0
+
+    def spawn_spec(self):
+        return "repro.core.synthetic:DuetNoiseHarness", {
+            "base_s": self.base_s, "noise": self.noise,
+            "seed": self.seed, "pair_calls": self.pair_calls}
+
+    def run(self, spec: BenchmarkSpec, injections: Optional[Injections] = None) -> Report:
+        inj = injections or Injections()
+        with injected_env(inj.env):
+            slowdown = float(os.environ.get(DUET_SLOWDOWN_KNOB, "1.0"))
+        round_idx = self._calls // self.pair_calls
+        self._calls += 1
+        h = int(hashlib.sha256(
+            f"{self.seed}.{round_idx}".encode()).hexdigest()[:8], 16)
+        jitter = 1.0 + self.noise * (h / 0xFFFFFFFF)
+        report = _deterministic_report(spec, digest_salt=f"duet.{round_idx}")
+        report.data[0].metrics["step_time_s"] = self.base_s * jitter * slowdown
+        report.data[0].metrics["duet_jitter"] = jitter
+        return report

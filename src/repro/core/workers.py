@@ -41,6 +41,8 @@ import uuid
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from repro.core import duet as duet_mod
+from repro.core import fingerprint as fingerprint_mod
 from repro.core.component import PipelineError
 from repro.core.harness import BenchmarkSpec, Harness, HarnessCapabilities, Injections, injected_env
 from repro.core.protocol import Report
@@ -92,6 +94,11 @@ class WorkerConfig:
     #: Give up after this long with no claimable work and an unfinished
     #: queue (an orphaned worker must not outlive its campaign forever).
     idle_timeout: float = 120.0
+    #: The broker's environment fingerprint at campaign start.  Workers
+    #: measure against this shared reference so a drifted worker host
+    #: (governor flip, different library set) marks its reports untrusted
+    #: instead of silently mixing environments into one campaign.
+    reference_fingerprint: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -161,6 +168,27 @@ def _find_adopted(store: ResultStore, prefix: str, task_uid: str) -> Optional[Re
     return None
 
 
+def _duet_adopted(
+    store: ResultStore, prefix: str, task_uid: str,
+) -> Tuple[Optional[str], Dict[Tuple[int, str], Report]]:
+    """Per-slot adoption for duet cells.  A worker killed mid-duet may have
+    persisted only some ``(round, role)`` invocations; the retry must resume
+    the *same* duet (reusing its ``duet_id``) and execute only the missing
+    slots — never re-measuring a persisted one, or the pair extraction would
+    see duplicate slots and exactly-once would be lost."""
+    duet_id: Optional[str] = None
+    slots: Dict[Tuple[int, str], Report] = {}
+    for report in store.query(prefix):
+        if report.parameter.get("task_uid") != task_uid:
+            continue
+        ctx = duet_mod.context_of(report)
+        if ctx is None:
+            continue
+        duet_id = str(ctx["duet_id"])
+        slots[(int(ctx.get("round", -1)), str(ctx.get("role", "")))] = report
+    return duet_id, slots
+
+
 def _execute_payload(
     payload: Dict[str, Any],
     *,
@@ -168,10 +196,12 @@ def _execute_payload(
     harness: Harness,
     worker_id: str,
     attempt: int,
+    reference_fingerprint: Optional[Dict[str, Any]] = None,
 ) -> Dict[str, Any]:
     """Run one queue cell to a terminal result dict (the done-marker body).
     Never raises: execution errors are results, like everywhere else."""
-    from repro.core.orchestrator import ExecutionOrchestrator  # lazy: cycle
+    from repro.core.orchestrator import (  # lazy: cycle
+        CellResult, ExecutionOrchestrator, reduce_duet)
 
     task_uid = str(payload.get("task_uid", ""))
     base = {
@@ -186,7 +216,9 @@ def _execute_payload(
         spec = BenchmarkSpec(**payload["spec"])
         prefix = payload.get("prefix", "default")
         record = bool(payload.get("record", True))
-        if attempt > 1 and record:
+        raw_inputs = dict(payload.get("inputs", {}))
+        duet = bool(raw_inputs.get("duet"))
+        if attempt > 1 and record and not duet:
             adopted = _find_adopted(store, prefix, task_uid)
             if adopted is not None:
                 # A prior attempt died AFTER persisting: adopt its report
@@ -204,16 +236,44 @@ def _execute_payload(
         # (feature-injection sweep points); the worker always executes
         # through the execution orchestrator, so keep only its inputs.
         allowed = {s.name for s in ExecutionOrchestrator.schema.inputs}
-        inputs = {k: v for k, v in dict(payload.get("inputs", {})).items()
-                  if k in allowed}
+        inputs = {k: v for k, v in raw_inputs.items() if k in allowed}
         ex = ExecutionOrchestrator(
             inputs=inputs,
             harness=tagged,
             store=store,
             resource_scope="process",
             worker_id=worker_id,
+            reference_fingerprint=reference_fingerprint,
         )
-        res = ex.run_cell(spec, _injections_from_payload(payload.get("injections")))
+        inj = _injections_from_payload(payload.get("injections"))
+        if duet:
+            # The whole duet is ONE queue task, so every interleaved
+            # invocation of the pair runs on this worker — the pinning the
+            # paired gate's noise-cancellation argument depends on.
+            adopted_id: Optional[str] = None
+            slots: Dict[Tuple[int, str], Report] = {}
+            if attempt > 1 and record:
+                adopted_id, slots = _duet_adopted(store, prefix, task_uid)
+            invocations = ex.run_duet(
+                spec, inj, duet_id=adopted_id, skip=set(slots))
+            results = [
+                CellResult(spec, rep,
+                           Readiness(int(rep.parameter.get("readiness", 0))))
+                for rep in slots.values()
+            ] + invocations
+            res = reduce_duet(spec, results)
+            return base | {
+                "cell": spec.cell,
+                "readiness": int(res.readiness),
+                "error": res.error,
+                "report": res.report.to_dict() if res.report is not None else None,
+                "duet": {
+                    "rounds": int(raw_inputs.get("duet_rounds", 4)),
+                    "invocations": len(results),
+                    "adopted": len(slots),
+                },
+            }
+        res = ex.run_cell(spec, inj)
         return base | {
             "cell": spec.cell,
             "readiness": int(res.readiness),
@@ -260,7 +320,8 @@ def worker_main(worker_id: str, queue_root: str, config: Dict[str, Any]) -> None
             try:
                 result = _execute_payload(
                     payload, store=store, harness=harness,
-                    worker_id=worker_id, attempt=attempt)
+                    worker_id=worker_id, attempt=attempt,
+                    reference_fingerprint=cfg.reference_fingerprint or None)
             finally:
                 beat.stop()
             queue.complete(idx, result)
@@ -325,6 +386,9 @@ class CampaignBroker:
             lease_timeout=self.lease_timeout,
             heartbeat_interval=self.heartbeat_interval,
             max_attempts=self.max_attempts,
+            # One reference for the whole pool: every worker compares its
+            # own capture against the broker's, not against itself.
+            reference_fingerprint=fingerprint_mod.capture(),
         )
 
     def materialize(self, payloads: Sequence[Dict[str, Any]]) -> WorkQueue:

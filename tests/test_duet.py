@@ -1,0 +1,519 @@
+"""Tests for the duet measurement plane: environment fingerprints (capture,
+graceful degradation, drift), duet execution (pairing, exactly-once across
+SIGKILL, worker pinning), and the paired-delta gate — including the
+discrimination property the methodology exists for: under shared
+multiplicative environment noise the absolute-series gate misclassifies
+identical binaries while the paired gate passes them AND still flags an
+injected slowdown."""
+
+import json
+import os
+import signal
+import time
+from pathlib import Path
+
+import multiprocessing as mp
+
+import numpy as np
+import pytest
+
+from repro.core import duet, fingerprint
+from repro.core.harness import BenchmarkSpec, Injections
+from repro.core.orchestrator import ExecutionOrchestrator, reduce_duet
+from repro.core.protocol import DataEntry, new_report
+from repro.core.readiness import Readiness
+from repro.core.regression import (
+    FAIL,
+    PASS,
+    GateSpec,
+    MetricSpec,
+    PairedDeltaDetector,
+    RegressionGate,
+)
+from repro.core.store import ResultStore
+from repro.core.synthetic import (
+    DUET_SLOWDOWN_KNOB,
+    DuetNoiseHarness,
+    SpinHarness,
+)
+from repro.core.workers import WorkerConfig, cell_payload, worker_main
+from repro.core.workqueue import WorkQueue
+
+SPAWN = mp.get_context("spawn")
+
+SPEC = BenchmarkSpec(arch="archA", shape="train_4k", system="sysA")
+
+FP_A = {"hostname": "host-1", "machine": "x86_64", "cpu_count": 8,
+        "governor": "performance", "python": "3.12.0", "numpy": "2.0.0"}
+FP_B = dict(FP_A, governor="powersave")
+
+
+def _wait_for(predicate, timeout_s, what):
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        got = predicate()
+        if got:
+            return got
+        time.sleep(0.05)
+    raise AssertionError(f"timed out waiting for {what}")
+
+
+def _append(store, prefix, value, *, fp=None, trusted=True,
+            metric="step_time_s"):
+    r = new_report(system="t", variant="v", usecase="u", pipeline_id="p")
+    r.data.append(DataEntry(success=True, runtime=max(value, 0.0),
+                            metrics={metric: value}))
+    if fp is not None:
+        fingerprint.stamp(r, fp)
+    r.reporter.chain_of_trust = trusted
+    store.append(prefix, r)
+
+
+def _append_duet(store, prefix, duet_id, jitters, *, base=1.0, factor=1.0,
+                 fp=None, metric="step_time_s"):
+    """One complete duet: len(jitters) rounds, both roles sharing each
+    round's jitter, candidate scaled by ``factor`` — the synthetic
+    noisy-environment model from the acceptance criteria."""
+    rounds = len(jitters)
+    for i, jitter in enumerate(jitters):
+        for role, scale in ((duet.ROLE_BASELINE, 1.0),
+                            (duet.ROLE_CANDIDATE, factor)):
+            val = base * jitter * scale
+            r = new_report(system="t", variant="v", usecase="u",
+                           pipeline_id=f"{duet_id}-{i}-{role}")
+            r.parameter[duet.PARAMETER] = duet.tag(duet_id, role, i, rounds)
+            if fp is not None:
+                fingerprint.stamp(r, fp)
+            r.data.append(DataEntry(success=True, runtime=val,
+                                    metrics={metric: val}))
+            store.append(prefix, r)
+
+
+def _gate(store, prefix, **overrides):
+    inputs = {"source_prefix": prefix, "metrics": ["step_time_s"],
+              "tolerance": 0.05, "min_points": 4, "update_baseline": False,
+              "record_prefix": "none"}
+    inputs.update(overrides)
+    return RegressionGate(GateSpec.from_inputs(inputs)).run(store)
+
+
+# ---------------------------------------------------------------------------
+# fingerprint capture + key/drift semantics
+# ---------------------------------------------------------------------------
+
+def test_capture_degrades_gracefully_on_missing_roots(tmp_path):
+    fp = fingerprint.capture(sysfs_root=str(tmp_path / "nosys"),
+                             proc_root=str(tmp_path / "noproc"))
+    # Unreadable probes yield None, never an exception.
+    assert fp["governor"] is None
+    assert fp["cpu_freq_khz"] is None
+    assert fp["cgroup_cpu_max"] is None
+    assert fp["thermal_c"] is None
+    # Host-level fields still captured.
+    assert fp["hostname"] and fp["python"]
+    assert fp["cpu_count"] == os.cpu_count()
+
+
+def test_capture_reads_fabricated_sysfs_tree(tmp_path):
+    sysfs = tmp_path / "sys"
+    cpufreq = sysfs / "devices" / "system" / "cpu" / "cpu0" / "cpufreq"
+    cpufreq.mkdir(parents=True)
+    (cpufreq / "scaling_governor").write_text("performance\n")
+    (cpufreq / "scaling_cur_freq").write_text("2400000\n")
+    (cpufreq / "scaling_max_freq").write_text("3500000\n")
+    (sysfs / "fs" / "cgroup").mkdir(parents=True)
+    (sysfs / "fs" / "cgroup" / "cpu.max").write_text("200000 100000\n")
+    thermal = sysfs / "class" / "thermal" / "thermal_zone0"
+    thermal.mkdir(parents=True)
+    (thermal / "temp").write_text("45000\n")
+    fp = fingerprint.capture(sysfs_root=str(sysfs))
+    assert fp["governor"] == "performance"
+    assert fp["cpu_freq_khz"] == 2400000
+    assert fp["cpu_freq_max_khz"] == 3500000
+    assert fp["cgroup_cpu_max"] == "200000 100000"
+    assert fp["thermal_c"] == 45.0
+
+
+def test_capture_tolerates_unreadable_sysfs_entries(tmp_path):
+    # A probe path that exists but is not a readable file (here: a
+    # directory, the case root-run CI can still exercise) must degrade to
+    # None like a missing one.
+    sysfs = tmp_path / "sys"
+    (sysfs / "devices" / "system" / "cpu" / "cpu0" / "cpufreq"
+     / "scaling_governor").mkdir(parents=True)
+    fp = fingerprint.capture(sysfs_root=str(sysfs))
+    assert fp["governor"] is None
+
+
+def test_key_ignores_volatile_observations():
+    a = dict(FP_A, cpu_freq_khz=2_400_000, loadavg_1m=0.5, thermal_c=40.0)
+    b = dict(FP_A, cpu_freq_khz=1_200_000, loadavg_1m=7.9, thermal_c=88.0)
+    assert fingerprint.key(a) == fingerprint.key(b)
+    assert fingerprint.drift(a, b) == []
+
+
+def test_drift_names_differing_key_fields():
+    assert fingerprint.drift(FP_A, FP_B) == ["governor"]
+    # Key strings compare exactly like the dicts they came from.
+    assert fingerprint.drift(fingerprint.key(FP_A),
+                             fingerprint.key(FP_B)) == ["governor"]
+    # Empty/absent fingerprints never drift.
+    assert fingerprint.drift(None, FP_A) == []
+    assert fingerprint.drift("", FP_A) == []
+    assert fingerprint.key({}) == ""
+    assert fingerprint.key({"cpu_freq_khz": 1}) == ""
+
+
+# ---------------------------------------------------------------------------
+# orchestrator: stamping, drift downgrade, duet pairing
+# ---------------------------------------------------------------------------
+
+def test_run_cell_stamps_fingerprint_and_keeps_trust(tmp_path):
+    store = ResultStore(tmp_path / "s")
+    ex = ExecutionOrchestrator(inputs={"prefix": "p", "arch": "archA"},
+                               harness=SpinHarness(iters=10), store=store)
+    res = ex.run_cell(SPEC)
+    rep = res.report
+    assert rep.parameter[fingerprint.PARAMETER]["hostname"]
+    assert rep.reporter.environment.get("hostname")
+    assert rep.reporter.chain_of_trust is True
+    assert fingerprint.DRIFT_PARAMETER not in rep.parameter
+
+
+def test_run_cell_drift_downgrades_chain_of_trust(tmp_path):
+    store = ResultStore(tmp_path / "s")
+    reference = dict(fingerprint.capture(), governor="__elsewhere__")
+    ex = ExecutionOrchestrator(inputs={"prefix": "p", "arch": "archA"},
+                               harness=SpinHarness(iters=10), store=store,
+                               reference_fingerprint=reference)
+    rep = ex.run_cell(SPEC).report
+    assert rep.reporter.chain_of_trust is False
+    assert "governor" in rep.parameter[fingerprint.DRIFT_PARAMETER]
+
+
+@pytest.mark.parametrize("backend", ["dir", "jsonl"])
+def test_run_duet_pairs_and_columnar_parity(tmp_path, backend):
+    store = ResultStore(tmp_path / "s", backend=backend)
+    ex = ExecutionOrchestrator(
+        inputs={"prefix": "p", "arch": "archA", "duet": True,
+                "duet_rounds": 3},
+        harness=SpinHarness(iters=10), store=store)
+    results = ex.run_duet(SPEC)
+    assert len(results) == 6
+    ctxs = [duet.context_of(r.report) for r in results]
+    assert len({c["duet_id"] for c in ctxs}) == 1
+    assert [(c["round"], c["role"]) for c in ctxs] == [
+        (r, role) for r in range(3) for role in duet.ROLES]
+    # Columnar extraction and the raw-report fallback see identical pairs.
+    col = store.columnar.table("p").duet_pairs("step_time_s")
+    raw = duet.pairs_from_reports(
+        store.query_with_entries("p"), "step_time_s")
+    assert [p.to_dict() for p in col] == [p.to_dict() for p in raw]
+    assert len(col) == 3
+    # Interleaved A/B: each round's candidate directly follows its baseline.
+    assert all(p.seq == p.baseline_seq + 1 for p in col)
+    # The collapsed summary keeps the one-result-per-spec shape.
+    red = reduce_duet(SPEC, results)
+    assert duet.context_of(red.report)["role"] == duet.ROLE_CANDIDATE
+    assert red.attempts == 6
+
+
+def test_orphaned_half_round_never_judged(tmp_path):
+    store = ResultStore(tmp_path / "s")
+    _append_duet(store, "p", "d1", [1.0, 1.1])
+    # A half-completed round (baseline only) is dropped by extraction.
+    r = new_report(system="t", variant="v", usecase="u", pipeline_id="x")
+    r.parameter[duet.PARAMETER] = duet.tag("d1", duet.ROLE_BASELINE, 2, 3)
+    r.data.append(DataEntry(success=True, runtime=1.0,
+                            metrics={"step_time_s": 1.0}))
+    store.append("p", r)
+    pairs = store.columnar.table("p").duet_pairs("step_time_s")
+    assert [p.round for p in pairs] == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# the acceptance criterion: paired gate discriminates under noise
+# ---------------------------------------------------------------------------
+
+HIST_JITTERS = [[1.0, 1.02, 0.98, 1.01], [0.99, 1.01, 1.0, 1.02],
+                [1.01, 0.98, 1.0, 0.99], [1.02, 1.0, 0.97, 1.01]]
+#: Sustained environmental slowdown (e.g. a governor drop) hitting the
+#: final duet: both roles of every round scale by 1.8.
+NOISY_JITTERS = [1.8, 1.82, 1.79, 1.81]
+
+
+def _noisy_store(tmp_path, *, factor):
+    store = ResultStore(tmp_path / f"noisy-{factor}")
+    fp = FP_A
+    for i, jit in enumerate(HIST_JITTERS):
+        _append_duet(store, "n", f"hist{i}", jit, fp=fp)
+    _append_duet(store, "n", "final", NOISY_JITTERS, factor=factor, fp=fp)
+    return store
+
+
+def test_absolute_gate_misclassifies_shared_noise(tmp_path):
+    # Identical binaries (factor 1.0) under a 1.8x environment swing: the
+    # absolute-series gate blames the binary for the machine.
+    store = _noisy_store(tmp_path, factor=1.0)
+    out = _gate(store, "n", duet=False, candidate=2)
+    assert out["status"] == FAIL
+    assert out["gates"][0]["mode"] == "absolute"
+
+
+def test_paired_gate_passes_identical_binaries_under_noise(tmp_path):
+    store = _noisy_store(tmp_path, factor=1.0)
+    out = _gate(store, "n", duet=True, candidate=1)
+    g = out["gates"][0]
+    assert out["status"] == PASS
+    assert g["mode"] == "paired"
+    assert g["duet"]["duet_ids"] == ["final"]
+    # The shared jitter divides out: per-round deltas are ~0.
+    assert abs(g["verdicts"][0]["effect"]) < 1e-9
+    assert g["fingerprint"]["candidate"] == fingerprint.key(FP_A)
+
+
+@pytest.mark.parametrize("columnar", [True, False])
+def test_paired_gate_flags_injected_slowdown_under_noise(tmp_path, columnar):
+    store = _noisy_store(tmp_path, factor=20.0)
+    out = _gate(store, "n", duet=True, candidate=1, columnar=columnar)
+    g = out["gates"][0]
+    assert out["status"] == FAIL
+    assert g["mode"] == "paired"
+    v = g["verdicts"][0]
+    assert v["detector"] == "paired" and v["status"] == FAIL
+    assert v["effect"] == pytest.approx(19.0)
+    assert g["change_seq"] is not None
+    assert g["promotion"] == "paired"
+
+
+def test_paired_gate_columnar_report_parity(tmp_path):
+    store = _noisy_store(tmp_path, factor=20.0)
+    a = _gate(store, "n", duet=True, candidate=1, columnar=True)["gates"][0]
+    b = _gate(store, "n", duet=True, candidate=1, columnar=False)["gates"][0]
+    assert a == b
+
+
+def test_gate_falls_back_to_absolute_below_duet_rounds(tmp_path):
+    store = ResultStore(tmp_path / "s")
+    for v in [1.0, 1.01, 0.99, 1.0, 1.02]:
+        _append(store, "p", v)
+    _append_duet(store, "p", "d1", [1.0])  # one completed pair < duet_rounds
+    out = _gate(store, "p", duet=True, duet_rounds=2, candidate=1)
+    assert out["gates"][0]["mode"] == "absolute"
+    out = _gate(store, "p", duet=True, duet_rounds=1, candidate=1)
+    assert out["gates"][0]["mode"] == "paired"
+
+
+def test_paired_detector_confidence_scales_with_rounds():
+    m = MetricSpec.parse("step_time_s", tolerance=0.05)
+    det = PairedDeltaDetector()
+    hist = np.zeros(0)
+    v2 = det.verdict(hist, np.asarray([19.0, 19.0]), m)
+    v4 = det.verdict(hist, np.asarray([19.0] * 4), m)
+    assert v2.confidence < 0.9 <= v4.confidence  # 2 rounds warn, 4 fail
+    assert v4.status == FAIL
+
+
+# ---------------------------------------------------------------------------
+# fingerprint stratification + promotion blocking (absolute path)
+# ---------------------------------------------------------------------------
+
+STABLE = [1.0, 1.02, 0.99, 1.01, 1.0, 0.98, 1.03, 1.0]
+
+
+@pytest.mark.parametrize("columnar", [True, False])
+def test_history_stratified_by_fingerprint(tmp_path, columnar):
+    store = ResultStore(tmp_path / "s")
+    for v in STABLE:
+        _append(store, "p", 50.0 * v, fp=FP_B)  # other environment class
+    for v in STABLE:
+        _append(store, "p", v, fp=FP_A)
+    _append(store, "p", 1.0, fp=FP_A)
+    out = _gate(store, "p", columnar=columnar)
+    g = out["gates"][0]
+    # The FP_B rows never reach the baseline: the candidate is judged only
+    # against same-class history and passes.
+    assert out["status"] == PASS
+    assert g["fingerprint"]["stratified_out"] == len(STABLE)
+    assert g["baseline"]["median"] == pytest.approx(1.0, abs=0.05)
+
+
+def test_fingerprint_drift_blocks_baseline_promotion(tmp_path):
+    store = ResultStore(tmp_path / "s")
+    for v in STABLE:
+        _append(store, "p", v, fp=FP_A)
+    out = _gate(store, "p", update_baseline=True)
+    assert out["gates"][0]["promotion"] == "updated"
+    from repro.core.regression import BaselineManager
+    mgr = BaselineManager(store)
+    before = mgr.current("p", "step_time_s")
+    assert before.fingerprint == fingerprint.key(FP_A)
+
+    # Same values, different environment class: must not become baseline.
+    _append(store, "p", 1.0, fp=FP_B)
+    out = _gate(store, "p", update_baseline=True)
+    g = out["gates"][0]
+    assert g["promotion"] == "blocked-drift"
+    assert "governor" in g["fingerprint"]["drift"]
+    after = mgr.current("p", "step_time_s")
+    assert after.fingerprint == fingerprint.key(FP_A)
+    assert list(after.seqs) == list(before.seqs)  # provably unchanged
+
+
+def test_untrusted_candidate_blocks_baseline_promotion(tmp_path):
+    store = ResultStore(tmp_path / "s")
+    for v in STABLE:
+        _append(store, "p", v)
+    _append(store, "p", 1.0, trusted=False)  # drifted run, downgraded trust
+    out = _gate(store, "p", update_baseline=True)
+    assert out["gates"][0]["promotion"] == "blocked-untrusted"
+    from repro.core.regression import BaselineManager
+    assert BaselineManager(store).current("p", "step_time_s") is None
+
+
+# ---------------------------------------------------------------------------
+# DuetNoiseHarness end to end (the CI discrimination harness)
+# ---------------------------------------------------------------------------
+
+def test_duet_noise_harness_shares_jitter_within_round(tmp_path):
+    store = ResultStore(tmp_path / "s")
+    ex = ExecutionOrchestrator(
+        inputs={"prefix": "p", "arch": "archA", "duet": True,
+                "duet_rounds": 4},
+        harness=DuetNoiseHarness(noise=0.5, seed=7), store=store)
+    results = ex.run_duet(SPEC)
+    jitters = [r.report.data[0].metrics["duet_jitter"] for r in results]
+    # Both roles of a round draw the same jitter; rounds differ.
+    assert jitters[0::2] == jitters[1::2]
+    assert len(set(jitters[0::2])) > 1
+    out = _gate(store, "p", duet=True, candidate=1)
+    assert out["status"] == PASS
+
+
+def test_duet_noise_harness_candidate_injection_flags_regression(tmp_path):
+    store = ResultStore(tmp_path / "s")
+    ex = ExecutionOrchestrator(
+        inputs={"prefix": "p", "arch": "archA", "duet": True,
+                "duet_rounds": 4},
+        harness=DuetNoiseHarness(noise=0.5, seed=7), store=store)
+    ex.run_duet(SPEC, candidate_injections=Injections(
+        env={DUET_SLOWDOWN_KNOB: "20"}))
+    out = _gate(store, "p", duet=True, candidate=1)
+    g = out["gates"][0]
+    assert out["status"] == FAIL
+    assert g["mode"] == "paired" and g["verdicts"][0]["detector"] == "paired"
+
+
+# ---------------------------------------------------------------------------
+# worker plane: duet pinning + exactly-once across SIGKILL mid-pair
+# ---------------------------------------------------------------------------
+
+def test_worker_executes_whole_duet_with_task_uid(tmp_path):
+    from repro.core.workers import _execute_payload
+
+    store = ResultStore(tmp_path / "s")
+    payload = cell_payload(SPEC, {"prefix": "d", "duet": True,
+                                  "duet_rounds": 2})
+    payload["task_uid"] = "d:0"
+    result = _execute_payload(payload, store=store,
+                              harness=SpinHarness(iters=10),
+                              worker_id="w1", attempt=1)
+    assert result["duet"] == {"rounds": 2, "invocations": 4, "adopted": 0}
+    reports = store.query("d")
+    assert len(reports) == 4
+    assert all(r.parameter["task_uid"] == "d:0" for r in reports)
+    # All invocations pinned to one worker.
+    assert {r.parameter["worker"] for r in reports} == {"w1"}
+
+
+def test_duet_retry_adopts_persisted_slots(tmp_path):
+    """A retry after a crash mid-duet resumes the SAME duet_id and executes
+    only the missing (round, role) slots — per-slot exactly-once."""
+    from repro.core.workers import _duet_adopted, _execute_payload
+
+    store = ResultStore(tmp_path / "s")
+    payload = cell_payload(SPEC, {"prefix": "d", "duet": True,
+                                  "duet_rounds": 2})
+    payload["task_uid"] = "d:0"
+    harness = SpinHarness(iters=10)
+    _execute_payload(payload, store=store, harness=harness,
+                     worker_id="w1", attempt=1)
+    duet_id, slots = _duet_adopted(store, "d", "d:0")
+    assert len(slots) == 4
+    # Simulate a partial first attempt: drop round 1 from the store view by
+    # re-running against a fresh store seeded with only round 0.
+    partial = ResultStore(tmp_path / "partial")
+    for rep in store.query("d"):
+        if duet.context_of(rep)["round"] == 0:
+            partial.append("d", rep)
+    result = _execute_payload(payload, store=partial, harness=harness,
+                              worker_id="w2", attempt=2)
+    assert result["duet"]["adopted"] == 2
+    reports = partial.query("d")
+    assert len(reports) == 4  # round 0 adopted, round 1 executed once
+    ctxs = [duet.context_of(r) for r in reports]
+    assert len({c["duet_id"] for c in ctxs}) == 1  # duet_id resumed
+    assert sorted((c["round"], c["role"]) for c in ctxs) == sorted(
+        (r, role) for r in range(2) for role in duet.ROLES)
+
+
+@pytest.mark.parametrize("backend", ["dir", "jsonl"])
+def test_sigkill_mid_pair_reclaimed_exactly_once(tmp_path, backend):
+    """SIGKILL between duet rounds: the lease is reclaimed, a fresh worker
+    adopts the persisted round-0 pair and completes only the remaining
+    slots — every (round, role) measured exactly once, one duet_id."""
+    store = ResultStore(tmp_path / "store", backend=backend)
+    sentinels = tmp_path / "sentinels"
+    queue_root = tmp_path / "queue"
+    cfg = WorkerConfig(
+        store_root=str(store.root), store_backend=backend,
+        harness_ref="repro.core.synthetic:BlockingHarness",
+        harness_kwargs={"sentinel_dir": str(sentinels), "timeout_s": 60.0,
+                        # Round 0's pair (calls 0, 1) completes and
+                        # persists; call 2 (round 1 baseline) traps.
+                        "block_calls": 2},
+        lease_timeout=0.6, poll_s=0.05, idle_timeout=60.0,
+    ).to_dict()
+    queue = WorkQueue(queue_root, lease_timeout=0.6)
+    queue.create([cell_payload(SPEC, {"prefix": "crash", "duet": True,
+                                      "duet_rounds": 2})], campaign="crash")
+
+    w1 = SPAWN.Process(target=worker_main, args=("w1", str(queue_root), cfg),
+                       daemon=True)
+    w1.start()
+    try:
+        sentinel = _wait_for(
+            lambda: next(iter(sentinels.glob(f"started.{SPEC.cell}.*")), None),
+            30.0, "worker to reach round 1")
+        victim = int(sentinel.name.rsplit(".", 1)[1])
+        os.kill(victim, signal.SIGKILL)
+        w1.join(timeout=10)
+        assert not w1.is_alive()
+        # Round 0's pair reached the store before the kill.
+        assert len(store.query("crash")) == 2
+
+        _wait_for(lambda: queue.reclaim_expired() == [0], 10.0, "reclaim")
+        (sentinels / "release").write_text("go")
+        w2 = SPAWN.Process(target=worker_main, args=("w2", str(queue_root), cfg),
+                           daemon=True)
+        w2.start()
+        w2.join(timeout=30)
+        assert queue.finished()
+    finally:
+        for p in (w1,):
+            if p.is_alive():
+                p.terminate()
+
+    result = queue.results()[0]
+    assert result["worker"] == "w2" and result["attempts"] == 2
+    assert result["duet"]["adopted"] == 2  # round 0's pair, not re-measured
+    reports = store.query("crash")
+    assert len(reports) == 4  # exactly one report per (round, role)
+    ctxs = [duet.context_of(r) for r in reports]
+    assert len({c["duet_id"] for c in ctxs}) == 1
+    assert sorted((c["round"], c["role"]) for c in ctxs) == sorted(
+        (r, role) for r in range(2) for role in duet.ROLES)
+    # Round 0 ran on w1 (adopted), round 1 on w2 — but every slot exactly
+    # once, and the gate sees two complete pairs.
+    pairs = store.columnar.table("crash").duet_pairs("step_time_s")
+    assert [p.round for p in pairs] == [0, 1]
