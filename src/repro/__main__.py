@@ -5,6 +5,8 @@ Subcommands::
     python -m repro run examples/pipelines/smoke.yml --store S [--gate]
     python -m repro validate examples/pipelines/smoke.yml
     python -m repro components
+    python -m repro daemon examples/pipelines/continuous.yml --store S
+    python -m repro daemon-status examples/pipelines/continuous.yml --store S
 """
 
 import sys

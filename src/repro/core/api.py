@@ -219,6 +219,42 @@ def main(argv=None) -> int:
     sub.add_parser("components",
                    help="list every registered component with its schema")
 
+    def _daemon_common(p):
+        p.add_argument("documents", nargs="+",
+                       help="pipeline documents to watch (schedule@v1 "
+                            "declares each document's refresh policy)")
+        p.add_argument("--store", default="exacb_data")
+        p.add_argument("--store-backend", default="dir",
+                       choices=("dir", "jsonl"))
+        p.add_argument("--state", default=None,
+                       help="daemon state file (default: "
+                            "<store>/daemon_state.json)")
+        p.add_argument("--target-lag", type=float, default=None,
+                       help="override every document's target_lag (seconds)")
+
+    dmn = sub.add_parser(
+        "daemon",
+        help="continuous service: re-execute cells on declarative triggers "
+             "(lag / downstream / watermark), resuming from the store")
+    _daemon_common(dmn)
+    dmn.add_argument("--interval", type=float, default=None,
+                     help="override the tick interval (seconds)")
+    dmn.add_argument("--workers", type=int, default=2)
+    dmn.add_argument("--worker-mode", default="thread",
+                     choices=("thread", "process"),
+                     help="refresh dispatch: in-process scheduler, or "
+                          "broker + spawned worker pool")
+    dmn.add_argument("--max-ticks", type=int, default=None,
+                     help="exit cleanly after N ticks (CI / smoke mode)")
+
+    dst = sub.add_parser(
+        "daemon-status",
+        help="per-document lag / last-refresh / next-due / queue-depth "
+             "from the state file and store (no running daemon needed)")
+    _daemon_common(dst)
+    dst.add_argument("--json", action="store_true", dest="as_json",
+                     help="machine-readable output")
+
     args = ap.parse_args(argv)
     if args.cmd == "run":
         # Delegate to the cicd CLI so gate-report/exit-code semantics stay
@@ -238,5 +274,43 @@ def main(argv=None) -> int:
         # Same delegation as `run`: one implementation of the INVALID/OK
         # reporting and exit codes, in cicd.main.
         return cicd.main([args.pipeline, "--validate"])
+    if args.cmd == "daemon":
+        from repro.core.daemon import CampaignDaemon
+
+        try:
+            daemon = CampaignDaemon(
+                args.store, args.documents,
+                backend=args.store_backend,
+                state_path=args.state,
+                workers=args.workers,
+                worker_mode=args.worker_mode,
+                target_lag=args.target_lag,
+                interval=args.interval,
+                max_ticks=args.max_ticks,
+            )
+        except (OSError, PipelineError) as e:
+            import sys
+            print(f"daemon: {e}", file=sys.stderr)
+            return 1
+        return daemon.run()
+    if args.cmd == "daemon-status":
+        from repro.core.daemon import daemon_status, render_status
+
+        try:
+            status = daemon_status(
+                args.store, args.documents,
+                backend=args.store_backend,
+                state_path=args.state,
+                target_lag=args.target_lag,
+            )
+        except (OSError, PipelineError) as e:
+            import sys
+            print(f"daemon-status: {e}", file=sys.stderr)
+            return 1
+        if args.as_json:
+            print(json.dumps(status, indent=2, default=str))
+        else:
+            print(render_status(status))
+        return 0
     print(json.dumps(Campaign().components(), indent=2, default=str))
     return 0

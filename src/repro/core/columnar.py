@@ -295,8 +295,9 @@ class ColumnTable:
     ) -> List["_duet.DuetPair"]:
         """Completed duet rounds for one metric, sorted by (candidate seq,
         round).  Semantics mirror :func:`duet.pairs_from_reports` exactly
-        (success filtering, runtime fallback, last-value-wins per slot) so
-        both gate paths judge identical pairs."""
+        (success filtering, runtime fallback, lowest-seq-wins per slot —
+        rows are seq-ascending, so duplicate slots from a fencing gap are
+        ignored) so both gate paths judge identical pairs."""
         key = ("duet_pairs", metric, success_only, last_entries)
         hit = self.cache.get(key)
         if hit is not None:
@@ -321,8 +322,8 @@ class ColumnTable:
                 continue
             role = self.vocabs["duet_role"][int(self.codes["duet_role"][i])]
             slot = slots.setdefault((did, int(self.columns["duet_round"][i])), {})
-            slot[role] = (float(vals[i]), int(self.columns["seq"][i]),
-                          float(self.columns["timestamp"][i]))
+            slot.setdefault(role, (float(vals[i]), int(self.columns["seq"][i]),
+                                   float(self.columns["timestamp"][i])))
         out = _duet.pairs_from_slots(slots)
         self.cache[key] = out
         return list(out)
@@ -706,6 +707,14 @@ class ColumnarIndex:
 
     def series(self, prefix: str, metric: str, **kw) -> MetricSeries:
         return self.table(prefix).series(metric, **kw)
+
+    def watermark(self, prefix: str) -> int:
+        """Highest store seq covered by the prefix's column table (−1 when
+        empty).  The daemon's watch trigger compares this against its saved
+        mark: an advanced watermark means new measurements landed upstream.
+        Refreshing the table is a pure fingerprint check when unchanged, so
+        polling this every tick is cheap."""
+        return self.table(prefix).watermark
 
     def frame(self, prefixes: Optional[Sequence[str]] = None) -> "CampaignFrame":
         return CampaignFrame(self.store, prefixes=prefixes)

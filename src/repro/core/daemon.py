@@ -1,0 +1,674 @@
+"""Continuous campaign daemon: lag-driven refresh over pipeline documents.
+
+A one-shot ``python -m repro run`` executes a pipeline and exits — but the
+paper's whole point is *continuous* benchmarking: a collection that keeps
+pace with an evolving ecosystem instead of being re-measured by hand.  This
+module is that service mode::
+
+    python -m repro daemon examples/pipelines/continuous.yml --store S
+
+The daemon watches a set of registered pipeline documents and re-executes
+cells on declarative triggers, declared per document by a ``schedule@v1``
+component (see :data:`repro.core.orchestrator.SCHEDULE_SCHEMA`):
+
+* ``lag`` — a producer cell whose newest store entry is older than the
+  document's ``target_lag`` budget is stale and gets re-executed.
+* ``watermark`` — when a watched prefix's *columnar watermark* advances
+  (new measurements landed upstream, e.g. written by another daemon or a
+  CI job sharing the store), every producer cell of the document is
+  marked stale.
+* ``downstream`` — consumer analyses/gates re-run only when the store
+  sequence of a prefix they read has advanced past the cursor saved at
+  their last run: an analysis is never recomputed over unchanged inputs.
+
+**The incremental contract**: each tick computes staleness *per cell* from
+the store manifest (no report is parsed on the warm path) plus the columnar
+watermarks, and drains only the stale slice — through the in-process thread
+scheduler or the ``CampaignBroker`` process pool (``worker_mode``).  A fresh
+cell is never re-executed; on a crash restart the daemon resumes from
+``daemon_state.json`` and, where that is missing, recovers each cell's last
+refresh time by matching stored reports against the cell's signature
+(prefix + spec fields + injection frame) — finished work is never repeated.
+
+**Operational hardening** (the Clubmark playbook): per-tick and per-cell
+deadlines, SIGTERM/SIGINT graceful drain (finish the in-flight cell batch,
+persist the state cursor, exit 0), SIGHUP re-reads the document set, and
+``python -m repro daemon-status`` renders per-document lag / last-refresh /
+next-due / queue-depth from the state file and store directories without
+touching the running process.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import signal
+import tempfile
+import threading
+import time
+import traceback
+import uuid
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core import cicd
+from repro.core.component import REGISTRY, ComponentRegistry, PipelineError
+from repro.core.harness import Harness
+from repro.core.orchestrator import SCHEDULE_TRIGGERS
+from repro.core.store import ResultStore
+
+STATE_VERSION = 1
+STATE_FILENAME = "daemon_state.json"
+DEFAULT_TARGET_LAG = 300.0
+DEFAULT_TICK_S = 5.0
+DEFAULT_TRIGGERS = ("lag", "downstream")
+
+
+# ---------------------------------------------------------------------------
+# Cell identity — what "this cell" means across ticks and restarts
+# ---------------------------------------------------------------------------
+
+def _sig_hash(doc: Dict[str, Any]) -> str:
+    return hashlib.sha1(
+        json.dumps(doc, sort_keys=True, default=str).encode()).hexdigest()[:16]
+
+
+def payload_signature(payload: Dict[str, Any]) -> str:
+    """Stable identity of one producer cell: prefix + spec fields +
+    injection frame.  Seed and scheduling inputs are deliberately excluded —
+    identity is *what gets measured*, not how it is dispatched."""
+    spec = payload.get("spec", {}) or {}
+    inj = payload.get("injections") or {}
+    return _sig_hash({
+        "prefix": payload.get("prefix", "default"),
+        "arch": spec.get("arch", ""),
+        "shape": spec.get("shape", ""),
+        "system": spec.get("system", ""),
+        "variant": spec.get("variant") or spec.get("shape", ""),
+        "env": {k: str(v) for k, v in (inj.get("env") or {}).items()},
+        "overrides": {k: str(v) for k, v in (inj.get("overrides") or {}).items()},
+    })
+
+
+def report_signature(prefix: str, report) -> str:
+    """The same signature computed from a *stored* report, so a daemon with
+    no state file can recognize which cell produced an existing entry.
+    Mirrors :func:`payload_signature` field by field: harnesses record
+    ``arch`` and the injection frame in ``report.parameter``, and the spec
+    vocabulary in ``report.experiment``."""
+    inj = report.parameter.get("injections") or {}
+    return _sig_hash({
+        "prefix": prefix,
+        "arch": str(report.parameter.get("arch", "")),
+        "shape": report.experiment.usecase,
+        "system": report.experiment.system,
+        "variant": report.experiment.variant,
+        "env": {k: str(v) for k, v in (inj.get("env") or {}).items()},
+        "overrides": {k: str(v) for k, v in (inj.get("overrides") or {}).items()},
+    })
+
+
+# ---------------------------------------------------------------------------
+# Per-document schedule policy (the schedule@v1 declaration, resolved)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SchedulePolicy:
+    target_lag: float = DEFAULT_TARGET_LAG
+    triggers: Tuple[str, ...] = DEFAULT_TRIGGERS
+    watch: Tuple[str, ...] = ()
+    tick_s: float = DEFAULT_TICK_S
+    cell_deadline_s: float = 0.0
+    tick_deadline_s: float = 0.0
+    max_cells_per_tick: int = 0
+
+    @staticmethod
+    def from_calls(calls: Sequence[Any], *,
+                   target_lag: Optional[float] = None,
+                   tick_s: Optional[float] = None) -> "SchedulePolicy":
+        """The document's ``schedule@v1`` declaration (defaults when absent);
+        explicit daemon-level overrides win over the document."""
+        inputs: Dict[str, Any] = {}
+        for call in calls:
+            if call.name == "schedule":
+                inputs = dict(call.inputs)
+                break
+        triggers = tuple(str(t) for t in inputs.get("triggers", DEFAULT_TRIGGERS))
+        unknown = sorted(set(triggers) - set(SCHEDULE_TRIGGERS))
+        if unknown:
+            raise PipelineError(
+                f"schedule: unknown trigger(s) {unknown}; "
+                f"known: {list(SCHEDULE_TRIGGERS)}")
+        return SchedulePolicy(
+            target_lag=float(target_lag if target_lag is not None
+                             else inputs.get("target_lag", DEFAULT_TARGET_LAG)),
+            triggers=triggers,
+            watch=tuple(str(p) for p in inputs.get("watch", ())),
+            tick_s=float(tick_s if tick_s is not None
+                         else inputs.get("tick_s", DEFAULT_TICK_S)),
+            cell_deadline_s=float(inputs.get("cell_deadline_s", 0.0)),
+            tick_deadline_s=float(inputs.get("tick_deadline_s", 0.0)),
+            max_cells_per_tick=int(inputs.get("max_cells_per_tick", 0)),
+        )
+
+
+@dataclasses.dataclass
+class _Document:
+    """One registered pipeline document, parsed and decomposed."""
+
+    path: str
+    calls: List[Any]
+    policy: SchedulePolicy
+    #: {cell_key: payload} for every producer cell (sweep points included).
+    cells: Dict[str, Dict[str, Any]]
+    #: [(consumer_key, call, consumed_prefixes)] for analyses/gates.
+    consumers: List[Tuple[str, Any, List[str]]]
+    #: prefixes this document's producers write.
+    produced: List[str]
+
+
+def _decompose(path: str, calls: List[Any], policy: SchedulePolicy) -> _Document:
+    from repro.core import workers as workers_mod  # lazy: heavy import chain
+
+    payloads, owners = workers_mod.pipeline_payloads(calls)
+    cells: Dict[str, Dict[str, Any]] = {}
+    for ci, idxs in owners.items():
+        for k, j in enumerate(idxs):
+            payload = payloads[j]
+            key = f"{ci:03d}.{k:03d}.{payload_signature(payload)}"
+            cells[key] = payload
+    produced = sorted({p.get("prefix", "default") for p in payloads})
+    consumers: List[Tuple[str, Any, List[str]]] = []
+    for ci, call in enumerate(calls):
+        if call.name in cicd._PRODUCERS or call.name == "schedule":
+            continue
+        prefixes = cicd._consumed_prefixes(call)
+        if call.name == "campaign-report" and not prefixes:
+            prefixes = list(produced)  # whole-store report: watch our producers
+        consumers.append((f"{ci:03d}.{call.name}", call, prefixes))
+    return _Document(path=path, calls=calls, policy=policy,
+                     cells=cells, consumers=consumers, produced=produced)
+
+
+# ---------------------------------------------------------------------------
+# The daemon
+# ---------------------------------------------------------------------------
+
+class CampaignDaemon:
+    """Long-running refresh service over registered pipeline documents.
+
+    ``tick(now=...)`` is the testable unit: one staleness pass + refresh of
+    exactly the stale slice, state persisted afterwards.  ``run()`` wraps it
+    with the signal-handled service loop.
+    """
+
+    def __init__(
+        self,
+        store: Union[str, Path, ResultStore],
+        documents: Sequence[Union[str, Path]],
+        *,
+        backend: str = "dir",
+        state_path: Optional[Union[str, Path]] = None,
+        harness: Optional[Harness] = None,
+        workers: int = 2,
+        worker_mode: str = "thread",
+        target_lag: Optional[float] = None,
+        interval: Optional[float] = None,
+        max_ticks: Optional[int] = None,
+        registry: Optional[ComponentRegistry] = None,
+    ):
+        self.store = (store if isinstance(store, ResultStore)
+                      else ResultStore(store, backend=backend))
+        self.document_paths = [str(p) for p in documents]
+        self.state_path = Path(state_path) if state_path else (
+            Path(self.store.root) / STATE_FILENAME)
+        if harness is None:
+            from repro.core.harness import ExecHarness  # the run_pipeline default
+            harness = ExecHarness(steps=2, batch=2, seq=16)
+        self.harness = harness
+        self.workers = max(1, int(workers))
+        if worker_mode not in ("thread", "process"):
+            raise PipelineError(
+                f"bad worker_mode {worker_mode!r} (want 'thread' or 'process')")
+        self.worker_mode = worker_mode
+        self.target_lag_override = target_lag
+        self.interval_override = interval
+        self.max_ticks = max_ticks
+        self.registry = registry or REGISTRY
+        self.documents: List[_Document] = []
+        self.state: Dict[str, Any] = {}
+        self.ticks = 0
+        self._stop = threading.Event()
+        self._reload = threading.Event()
+        self.load_documents()
+        self.state = self._load_state()
+
+    # ------------------------------------------------------------ documents
+    def load_documents(self) -> None:
+        """(Re-)parse every registered document — the SIGHUP path."""
+        docs: List[_Document] = []
+        for path in self.document_paths:
+            text = Path(path).read_text()
+            calls = cicd.parse_pipeline_text(text, registry=self.registry)
+            policy = SchedulePolicy.from_calls(
+                calls, target_lag=self.target_lag_override,
+                tick_s=self.interval_override)
+            docs.append(_decompose(path, calls, policy))
+        if not docs:
+            raise PipelineError("daemon needs at least one pipeline document")
+        self.documents = docs
+
+    # ---------------------------------------------------------------- state
+    def _load_state(self) -> Dict[str, Any]:
+        try:
+            state = json.loads(self.state_path.read_text())
+        except (OSError, ValueError):
+            state = {}
+        if int(state.get("version", STATE_VERSION)) != STATE_VERSION:
+            state = {}
+        state.setdefault("version", STATE_VERSION)
+        state.setdefault("ticks", 0)
+        state.setdefault("documents", {})
+        self.ticks = int(state.get("ticks", 0))
+        return state
+
+    def save_state(self) -> None:
+        self.state["version"] = STATE_VERSION
+        self.state["ticks"] = self.ticks
+        self.state["updated"] = time.time()
+        self.state_path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=self.state_path.parent, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self.state, f, indent=2, default=str)
+            os.replace(tmp, self.state_path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    def _doc_state(self, doc: _Document) -> Dict[str, Any]:
+        docs = self.state.setdefault("documents", {})
+        st = docs.setdefault(doc.path, {})
+        st.setdefault("cells", {})
+        st.setdefault("consumers", {})
+        st.setdefault("watch_marks", {})
+        return st
+
+    # ------------------------------------------------------------ staleness
+    def _recovered_refresh_times(self, doc: _Document) -> Dict[str, float]:
+        """{cell_key: newest matching entry timestamp} recovered from the
+        store itself — the crash-restart path.  Parses each produced prefix
+        once (warm queries hit the parsed-report cache); only consulted for
+        cells the state file doesn't know."""
+        by_sig: Dict[Tuple[str, str], float] = {}
+        for prefix in doc.produced:
+            for entry, report in self.store.query_with_entries(prefix):
+                sig = report_signature(prefix, report)
+                ts = float(entry.timestamp)
+                key = (prefix, sig)
+                if ts > by_sig.get(key, float("-inf")):
+                    by_sig[key] = ts
+        out: Dict[str, float] = {}
+        for key, payload in doc.cells.items():
+            sig = payload_signature(payload)
+            ts = by_sig.get((payload.get("prefix", "default"), sig))
+            if ts is not None:
+                out[key] = ts
+        return out
+
+    def _stale_cells(self, doc: _Document, now: float) -> Dict[str, str]:
+        """{cell_key: reason} for every producer cell due for refresh."""
+        st = self._doc_state(doc)
+        cells_st = st["cells"]
+        recovered: Optional[Dict[str, float]] = None
+        watch_advanced: List[str] = []
+        if "watermark" in doc.policy.triggers:
+            marks = st["watch_marks"]
+            for prefix in doc.policy.watch:
+                wm = int(self.store.columnar.watermark(prefix))
+                if wm > int(marks.get(prefix, -1)):
+                    watch_advanced.append(prefix)
+        stale: Dict[str, str] = {}
+        for key, payload in doc.cells.items():
+            last = cells_st.get(key, {}).get("last_refresh")
+            if last is None:
+                if recovered is None:
+                    recovered = self._recovered_refresh_times(doc)
+                last = recovered.get(key)
+                if last is not None:
+                    # Persist the recovery so the next tick is manifest-only.
+                    cells_st.setdefault(key, {})["last_refresh"] = float(last)
+                    cells_st[key].setdefault("cell", _cell_label(payload))
+            if last is None:
+                stale[key] = "never-run"
+            elif "lag" in doc.policy.triggers and \
+                    now - float(last) > doc.policy.target_lag:
+                stale[key] = "lag"
+            elif watch_advanced:
+                stale[key] = f"watermark:{','.join(watch_advanced)}"
+        return stale
+
+    def _due_consumers(self, doc: _Document) -> List[Tuple[str, Any, Dict[str, int]]]:
+        """Consumers whose consumed prefixes advanced past their cursors."""
+        if "downstream" not in doc.policy.triggers:
+            return []
+        st = self._doc_state(doc)
+        due = []
+        for key, call, prefixes in doc.consumers:
+            cursors = {p: _last_seq(self.store, p) for p in prefixes}
+            saved = st["consumers"].get(key, {}).get("cursors", {})
+            if any(seq > int(saved.get(p, -1)) for p, seq in cursors.items()):
+                due.append((key, call, cursors))
+        return due
+
+    # -------------------------------------------------------------- refresh
+    def _refresh_cells(
+        self, doc: _Document, stale: Dict[str, str], now: float,
+    ) -> Dict[str, Dict[str, Any]]:
+        """Execute exactly the stale slice; returns {cell_key: result}."""
+        from repro.core import workers as workers_mod  # lazy: heavy import
+
+        keys = sorted(stale)
+        if doc.policy.max_cells_per_tick > 0:
+            keys = keys[: doc.policy.max_cells_per_tick]
+        batch = f"daemon-t{self.ticks}-{uuid.uuid4().hex[:6]}"
+        payloads = []
+        for i, key in enumerate(keys):
+            p = dict(doc.cells[key])
+            # A FRESH uid per refresh: reusing one across ticks would make a
+            # future retry's adoption check adopt a stale tick's report.
+            p["task_uid"] = f"{batch}:{i}"
+            payloads.append(p)
+        results: Dict[str, Dict[str, Any]] = {}
+        if not payloads:
+            return results
+        if self.worker_mode == "process":
+            broker = workers_mod.CampaignBroker(
+                self.store, workers=self.workers, name=batch,
+                deadline_s=doc.policy.cell_deadline_s or None)
+            by_idx = broker.run(payloads, harness=self.harness)
+            for i, key in enumerate(keys):
+                results[key] = by_idx.get(i) or {}
+        else:
+            t0 = time.monotonic()
+
+            def _one(payload: Dict[str, Any]) -> Dict[str, Any]:
+                return workers_mod._execute_payload(
+                    payload, store=self.store, harness=self.harness,
+                    worker_id="daemon", attempt=1, resource_scope="thread")
+
+            if self.workers > 1 and len(payloads) > 1:
+                from repro.core.scheduler import CampaignScheduler
+                sched = CampaignScheduler(
+                    parallelism=self.workers, name="daemon.refresh")
+                trs = sched.map_items(_one, payloads)
+                for key, tr in zip(keys, trs):
+                    results[key] = tr.value if tr.error is None else {
+                        "error": tr.error, "readiness": 0}
+            else:
+                for key, payload in zip(keys, payloads):
+                    if self._stop.is_set():
+                        break  # graceful drain: leave the rest to next start
+                    if doc.policy.tick_deadline_s and \
+                            time.monotonic() - t0 > doc.policy.tick_deadline_s:
+                        break  # per-tick deadline: remaining cells stay stale
+                    results[key] = _one(payload)
+        st = self._doc_state(doc)
+        for key, result in results.items():
+            cell_st = st["cells"].setdefault(key, {})
+            cell_st["cell"] = _cell_label(doc.cells[key])
+            cell_st["last_refresh"] = now
+            cell_st["last_seq"] = _last_seq(
+                self.store, doc.cells[key].get("prefix", "default"))
+            cell_st["refresh_count"] = int(cell_st.get("refresh_count", 0)) + 1
+            cell_st["last_error"] = result.get("error")
+        return results
+
+    def _run_consumers(
+        self, doc: _Document, due: List[Tuple[str, Any, Dict[str, int]]],
+        now: float,
+    ) -> Dict[str, Dict[str, Any]]:
+        st = self._doc_state(doc)
+        out: Dict[str, Dict[str, Any]] = {}
+        for key, call, cursors in due:
+            if self._stop.is_set():
+                break
+            try:
+                summary = cicd._run_component(
+                    call, store=self.store, harness=self.harness,
+                    harness_factory=None, registry=self.registry)
+            except Exception as e:  # noqa: BLE001 — isolation, like run_pipeline
+                summary = {"component": call.name, "component_ref": call.ref,
+                           "error": f"{type(e).__name__}: {e}\n"
+                                    f"{traceback.format_exc(limit=3)}"}
+            out[key] = summary
+            # Cursors move even on error: a crashing analysis must not spin
+            # every tick — it re-runs when its inputs next advance.
+            cst = st["consumers"].setdefault(key, {})
+            cst["cursors"] = {p: int(s) for p, s in cursors.items()}
+            cst["last_run"] = now
+            cst["run_count"] = int(cst.get("run_count", 0)) + 1
+            cst["last_error"] = summary.get("error")
+        return out
+
+    # ----------------------------------------------------------------- tick
+    def tick(self, now: Optional[float] = None) -> Dict[str, Any]:
+        """One staleness pass: refresh stale producers, re-run due consumers,
+        persist state.  ``now`` is injectable for deterministic tests."""
+        now = time.time() if now is None else float(now)
+        summary: Dict[str, Any] = {"tick": self.ticks, "now": now,
+                                   "documents": {}}
+        for doc in self.documents:
+            if self._stop.is_set():
+                break
+            stale = self._stale_cells(doc, now)
+            refreshed = self._refresh_cells(doc, stale, now)
+            # Watch marks advance only once acted on, so a missed tick never
+            # loses an upstream change.
+            if "watermark" in doc.policy.triggers:
+                marks = self._doc_state(doc)["watch_marks"]
+                for prefix in doc.policy.watch:
+                    marks[prefix] = int(self.store.columnar.watermark(prefix))
+            due = self._due_consumers(doc)
+            consumed = self._run_consumers(doc, due, now)
+            st = self._doc_state(doc)
+            st["last_tick"] = now
+            summary["documents"][doc.path] = {
+                "cells": len(doc.cells),
+                "stale": {k: stale[k] for k in sorted(stale)},
+                "refreshed": sorted(refreshed),
+                "fresh": sorted(set(doc.cells) - set(stale)),
+                "consumers_run": sorted(consumed),
+            }
+        self.ticks += 1
+        self.save_state()
+        return summary
+
+    # ---------------------------------------------------------- service loop
+    def request_stop(self) -> None:
+        self._stop.set()
+
+    def _install_signals(self) -> bool:
+        if threading.current_thread() is not threading.main_thread():
+            return False
+
+        def _term(signum, frame):  # noqa: ARG001
+            self._stop.set()
+
+        def _hup(signum, frame):  # noqa: ARG001
+            self._reload.set()
+
+        signal.signal(signal.SIGTERM, _term)
+        signal.signal(signal.SIGINT, _term)
+        if hasattr(signal, "SIGHUP"):
+            signal.signal(signal.SIGHUP, _hup)
+        return True
+
+    def _interval(self) -> float:
+        if self.interval_override is not None:
+            return max(0.05, float(self.interval_override))
+        return max(0.05, min(d.policy.tick_s for d in self.documents))
+
+    def run(self) -> int:
+        """The service loop: tick, sleep, repeat — until SIGTERM/SIGINT
+        (graceful drain: the in-flight cell finishes, state persists, exit
+        0) or ``max_ticks`` ticks have run (the CI harness mode)."""
+        self._install_signals()
+        try:
+            while not self._stop.is_set():
+                if self._reload.is_set():
+                    self._reload.clear()
+                    try:
+                        self.load_documents()
+                    except (OSError, PipelineError) as e:
+                        # A torn edit must not kill the service; the old
+                        # document set keeps running until the next HUP.
+                        print(f"daemon: reload failed, keeping old documents: {e}")
+                self.tick()
+                if self.max_ticks is not None and self.ticks >= self.max_ticks:
+                    break
+                deadline = time.monotonic() + self._interval()
+                while time.monotonic() < deadline:
+                    if self._stop.is_set() or self._reload.is_set():
+                        break
+                    time.sleep(min(0.1, max(0.01, deadline - time.monotonic())))
+        finally:
+            self.save_state()
+        return 0
+
+
+def _cell_label(payload: Dict[str, Any]) -> str:
+    spec = payload.get("spec", {}) or {}
+    return (f"{payload.get('prefix', 'default')}/"
+            f"{spec.get('arch', '?')}.{spec.get('shape', '?')}."
+            f"{spec.get('system', '?')}")
+
+
+def _last_seq(store: ResultStore, prefix: str) -> int:
+    index = store.index(prefix)
+    return int(index[-1].seq) if index else -1
+
+
+# ---------------------------------------------------------------------------
+# Status view — reads state + store + queue directories, no daemon required
+# ---------------------------------------------------------------------------
+
+def queue_depth(store_root: Union[str, Path]) -> int:
+    """Outstanding (not-done) cells across every work queue under the store
+    root — the broker removes finished queues, so nonzero means a drain is
+    in flight right now."""
+    from repro.core.workers import QUEUE_DIRNAME
+    from repro.core.workqueue import WorkQueue, WorkQueueError
+
+    depth = 0
+    base = Path(store_root) / QUEUE_DIRNAME
+    if not base.is_dir():
+        return 0
+    for qdir in sorted(base.iterdir()):
+        if not qdir.is_dir():
+            continue
+        try:
+            q = WorkQueue(qdir)
+            depth += max(0, q.n_tasks - q.done_count())
+        except WorkQueueError:
+            continue  # torn/partial queue directory
+    return depth
+
+
+def daemon_status(
+    store: Union[str, Path, ResultStore],
+    documents: Sequence[Union[str, Path]],
+    *,
+    backend: str = "dir",
+    state_path: Optional[Union[str, Path]] = None,
+    target_lag: Optional[float] = None,
+    now: Optional[float] = None,
+    registry: Optional[ComponentRegistry] = None,
+) -> Dict[str, Any]:
+    """Per-document lag / last-refresh / next-due / queue-depth, computed
+    from the state file and the store manifest (the daemon itself is not
+    contacted — this works on a crashed or stopped deployment too)."""
+    store = (store if isinstance(store, ResultStore)
+             else ResultStore(store, backend=backend))
+    state_file = Path(state_path) if state_path else (
+        Path(store.root) / STATE_FILENAME)
+    try:
+        state = json.loads(state_file.read_text())
+    except (OSError, ValueError):
+        state = {}
+    now = time.time() if now is None else float(now)
+    registry = registry or REGISTRY
+    out: Dict[str, Any] = {
+        "state_path": str(state_file),
+        "ticks": int(state.get("ticks", 0)),
+        "updated": state.get("updated"),
+        "queue_depth": queue_depth(store.root),
+        "documents": {},
+    }
+    for path in documents:
+        path = str(path)
+        calls = cicd.parse_pipeline_text(Path(path).read_text(),
+                                         registry=registry)
+        policy = SchedulePolicy.from_calls(calls, target_lag=target_lag)
+        doc = _decompose(path, calls, policy)
+        doc_st = state.get("documents", {}).get(path, {})
+        cells_st = doc_st.get("cells", {})
+        cells = []
+        for key in sorted(doc.cells):
+            payload = doc.cells[key]
+            st = cells_st.get(key, {})
+            last = st.get("last_refresh")
+            if last is None:
+                # No state: fall back to the prefix manifest's newest entry
+                # (cheap, metadata-only; per-cell precision needs the state).
+                prefix = payload.get("prefix", "default")
+                index = store.index(prefix)
+                last = float(index[-1].timestamp) if index else None
+            lag = (now - float(last)) if last is not None else None
+            next_due = (float(last) + policy.target_lag
+                        if last is not None else now)
+            cells.append({
+                "key": key,
+                "cell": _cell_label(payload),
+                "last_refresh": last,
+                "lag_s": lag,
+                "next_due": next_due,
+                "due": lag is None or lag > policy.target_lag,
+                "refresh_count": int(st.get("refresh_count", 0)),
+                "last_error": st.get("last_error"),
+            })
+        out["documents"][path] = {
+            "target_lag": policy.target_lag,
+            "triggers": list(policy.triggers),
+            "last_tick": doc_st.get("last_tick"),
+            "cells": cells,
+            "consumers": {
+                key: {
+                    "last_run": doc_st.get("consumers", {}).get(key, {}).get("last_run"),
+                    "run_count": int(doc_st.get("consumers", {})
+                                     .get(key, {}).get("run_count", 0)),
+                }
+                for key, _, _ in doc.consumers
+            },
+        }
+    return out
+
+
+def render_status(status: Dict[str, Any]) -> str:
+    """Human view of :func:`daemon_status` (one line per cell)."""
+    lines = [f"daemon state: {status['state_path']} "
+             f"(ticks={status['ticks']}, queue_depth={status['queue_depth']})"]
+    for path, doc in status["documents"].items():
+        lines.append(f"\n{path}  target_lag={doc['target_lag']:.0f}s "
+                     f"triggers={','.join(doc['triggers'])}")
+        for c in doc["cells"]:
+            lag = "never" if c["lag_s"] is None else f"{c['lag_s']:.1f}s"
+            due = "DUE" if c["due"] else "fresh"
+            lines.append(f"  {c['cell']:<44} lag={lag:<10} {due:<6} "
+                         f"refreshes={c['refresh_count']}")
+        for key, c in doc["consumers"].items():
+            lines.append(f"  [consumer] {key:<33} runs={c['run_count']}")
+    return "\n".join(lines)

@@ -92,7 +92,10 @@ def pairs_from_reports(pairs: Iterable[Tuple[Any, Report]],
 
     Matches the columnar semantics exactly: successful entries only,
     ``runtime`` falls back to the entry runtime when absent from metrics,
-    and the last value per (duet_id, round, role) wins.
+    and the *lowest-seq* value per (duet_id, round, role) wins — input is
+    seq-ordered, so duplicate slots (a fencing gap letting a paused worker
+    append after the retry) are ignored rather than silently replacing the
+    canonical measurement.
     """
     slots: Slots = {}
     for entry, report in pairs:
@@ -114,6 +117,6 @@ def pairs_from_reports(pairs: Iterable[Tuple[Any, Report]],
             continue
         slot = slots.setdefault(
             (str(ctx["duet_id"]), int(ctx.get("round", -1))), {})
-        slot[str(ctx.get("role", ""))] = (
-            value, int(entry.seq), float(report.experiment.timestamp))
+        slot.setdefault(str(ctx.get("role", "")), (
+            value, int(entry.seq), float(report.experiment.timestamp)))
     return pairs_from_slots(slots)

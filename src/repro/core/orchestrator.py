@@ -171,6 +171,36 @@ CAMPAIGN_REPORT_SCHEMA = ComponentSchema(
     description="cross-prefix campaign summary in one columnar scan",
 )
 
+#: Trigger names the continuous daemon understands (see docs/daemon.md).
+SCHEDULE_TRIGGERS = ("lag", "downstream", "watermark")
+
+SCHEDULE_SCHEMA = ComponentSchema(
+    "schedule", 1,
+    (
+        InputSpec("target_lag", float, default=300.0,
+                  help="lag budget in seconds: a producer cell whose newest "
+                       "store entry is older than this is stale"),
+        InputSpec("triggers", list, default=("lag",), element=str,
+                  wrap_scalar=True,
+                  help="refresh triggers: 'lag' (target_lag budget), "
+                       "'downstream' (a consumer analysis/gate needs fresher "
+                       "inputs), 'watermark' (a watched prefix's columnar "
+                       "watermark advanced)"),
+        InputSpec("watch", list, default=(), element=str, wrap_scalar=True,
+                  help="store prefixes whose columnar watermark advance "
+                       "marks this document's producers stale"),
+        InputSpec("tick_s", float, default=5.0,
+                  help="daemon tick interval for this document"),
+        InputSpec("cell_deadline_s", float, default=0.0,
+                  help="broker deadline per refreshed cell batch; 0 = none"),
+        InputSpec("tick_deadline_s", float, default=0.0,
+                  help="wall budget for one document refresh; 0 = none"),
+        InputSpec("max_cells_per_tick", int, default=0,
+                  help="cap on stale cells refreshed per tick; 0 = all"),
+    ),
+    description="declarative refresh policy for the continuous campaign daemon",
+)
+
 # The construction-surface union for PostProcessingOrchestrator: its three
 # analyses are the schema-bearing sub-components above; a directly
 # constructed orchestrator validates against their merged declaration.
@@ -802,6 +832,27 @@ def _run_campaign_report(inputs: ComponentInputs, ctx: ComponentContext) -> Dict
     }
 
 
+def _run_schedule(inputs: ComponentInputs, ctx: ComponentContext) -> Dict[str, Any]:
+    """Batch-run behavior of ``schedule@v1``: pure declaration echo.  The
+    policy only *acts* under ``python -m repro daemon``; in a one-shot
+    ``repro run`` it validates and reports itself so a document stays
+    runnable both ways."""
+    triggers = [str(t) for t in inputs.get("triggers", ())]
+    unknown = sorted(set(triggers) - set(SCHEDULE_TRIGGERS))
+    if unknown:
+        raise PipelineError(
+            f"schedule: unknown trigger(s) {unknown}; "
+            f"known: {list(SCHEDULE_TRIGGERS)}")
+    return {
+        "component": "schedule",
+        "triggers": triggers,
+        "target_lag": float(inputs.get("target_lag", 300.0)),
+        "watch": [str(p) for p in inputs.get("watch", ())],
+        "tick_s": float(inputs.get("tick_s", 5.0)),
+        "note": "declarative refresh policy; enforced by `repro daemon`",
+    }
+
+
 def _migrate_cell_vocabulary(inputs: Dict[str, Any]) -> Dict[str, Any]:
     """v3 → v4 shim: the paper vocabulary (``usecase``/``machine``) was
     canonical in v3, so the rename is silent here — only a *v4* document
@@ -823,6 +874,7 @@ def register_components(registry: ComponentRegistry) -> ComponentRegistry:
     registry.register(SCALABILITY_SCHEMA, _run_scalability)
     registry.register(GATE_SCHEMA, _run_gate)
     registry.register(CAMPAIGN_REPORT_SCHEMA, _run_campaign_report)
+    registry.register(SCHEDULE_SCHEMA, _run_schedule)
     for name in ("execution", "feature-injection", "time-series",
                  "machine-comparison", "scalability"):
         registry.register_migration(name, 3, 4, _migrate_cell_vocabulary)

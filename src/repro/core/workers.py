@@ -160,8 +160,40 @@ def _injections_from_payload(doc: Optional[Dict[str, Any]]) -> Optional[Injectio
                       overrides=dict(doc.get("overrides", {})))
 
 
+class LeaseLostError(RuntimeError):
+    """The worker's lease was reclaimed while it was still executing."""
+
+
+class _FencedStore:
+    """Store proxy that re-verifies lease ownership immediately before every
+    append — the fencing-token check that closes the slow-but-alive window.
+    A worker paused mid-cell (SIGSTOP, NFS stall, GC-like hiccup) and resumed
+    *after* the reclaimed retry's adoption check would otherwise append a
+    second report for the same ``task_uid``; with the fence it fails here and
+    the report is dropped instead."""
+
+    def __init__(self, inner: ResultStore, fence):
+        self._inner = inner
+        self._fence = fence
+
+    def append(self, prefix, report, **kwargs):
+        if not self._fence():
+            raise LeaseLostError(
+                f"lease lost before store append to {prefix!r}; dropping "
+                "report — the reclaimed retry owns this cell now")
+        return self._inner.append(prefix, report, **kwargs)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
 def _find_adopted(store: ResultStore, prefix: str, task_uid: str) -> Optional[Report]:
-    """A report persisted by a previous (killed) attempt of this cell."""
+    """A report persisted by a previous (killed) attempt of this cell.
+
+    ``store.query`` yields in seq order, so the first match is the
+    lowest-seq report — the canonical one if a fencing gap ever let a
+    duplicate ``task_uid`` entry slip in (defense-in-depth: every reader
+    converges on the same record)."""
     for report in store.query(prefix):
         if report.parameter.get("task_uid") == task_uid:
             return report
@@ -184,8 +216,13 @@ def _duet_adopted(
         ctx = duet_mod.context_of(report)
         if ctx is None:
             continue
-        duet_id = str(ctx["duet_id"])
-        slots[(int(ctx.get("round", -1)), str(ctx.get("role", "")))] = report
+        if duet_id is None:
+            duet_id = str(ctx["duet_id"])
+        # Lowest store seq wins per (round, role) slot: query is seq-ordered,
+        # so keep the first report seen — duplicates from a fencing gap are
+        # ignored, matching duet.pairs_from_reports / columnar.duet_pairs.
+        slots.setdefault(
+            (int(ctx.get("round", -1)), str(ctx.get("role", ""))), report)
     return duet_id, slots
 
 
@@ -197,12 +234,24 @@ def _execute_payload(
     worker_id: str,
     attempt: int,
     reference_fingerprint: Optional[Dict[str, Any]] = None,
+    fence=None,
+    resource_scope: str = "process",
 ) -> Dict[str, Any]:
     """Run one queue cell to a terminal result dict (the done-marker body).
-    Never raises: execution errors are results, like everywhere else."""
+    Never raises: execution errors are results, like everywhere else.
+
+    ``fence`` is a zero-arg callable returning whether the caller still owns
+    the cell's lease.  When provided, every store append is fenced (see
+    :class:`_FencedStore`) and the returned dict carries ``fenced: True``
+    whenever ownership was lost — the caller must then *not* write the done
+    marker: the reclaimed retry owns the cell, and our (possibly stale or
+    FAILED) marker could win the first-writer race against its good result.
+    """
     from repro.core.orchestrator import (  # lazy: cycle
         CellResult, ExecutionOrchestrator, reduce_duet)
 
+    if fence is not None:
+        store = _FencedStore(store, fence)
     task_uid = str(payload.get("task_uid", ""))
     base = {
         "task_uid": task_uid,
@@ -212,7 +261,7 @@ def _execute_payload(
         "worker": worker_id,
         "attempts": attempt,
     }
-    try:
+    def _run() -> Dict[str, Any]:
         spec = BenchmarkSpec(**payload["spec"])
         prefix = payload.get("prefix", "default")
         record = bool(payload.get("record", True))
@@ -241,7 +290,7 @@ def _execute_payload(
             inputs=inputs,
             harness=tagged,
             store=store,
-            resource_scope="process",
+            resource_scope=resource_scope,
             worker_id=worker_id,
             reference_fingerprint=reference_fingerprint,
         )
@@ -280,13 +329,33 @@ def _execute_payload(
             "error": res.error,
             "report": res.report.to_dict() if res.report is not None else None,
         }
+
+    try:
+        out = _run()
+    except LeaseLostError as e:
+        # A fenced append outside the orchestrator's own retry loop: the
+        # report was dropped, nothing reached the store from this attempt.
+        out = base | {
+            "cell": payload.get("spec", {}).get("arch", "?"),
+            "readiness": 0,
+            "error": str(e),
+            "report": None,
+        }
     except Exception as e:  # noqa: BLE001 — a worker must never die on one cell
-        return base | {
+        out = base | {
             "cell": payload.get("spec", {}).get("arch", "?"),
             "readiness": 0,
             "error": f"{type(e).__name__}: {e}\n{traceback.format_exc(limit=3)}",
             "report": None,
         }
+    if fence is not None and not fence():
+        # Post-execution ownership check.  A LeaseLostError raised inside
+        # run_cell is swallowed by its per-cell retry (it surfaces as a
+        # FAILED result) — without this check the worker would go on to
+        # write that FAILED marker and could beat the retry's good one.
+        out = dict(out)
+        out["fenced"] = True
+    return out
 
 
 def worker_main(worker_id: str, queue_root: str, config: Dict[str, Any]) -> None:
@@ -300,6 +369,7 @@ def worker_main(worker_id: str, queue_root: str, config: Dict[str, Any]) -> None
     store = ResultStore(cfg.store_root, backend=cfg.store_backend)
     harness = resolve_harness(cfg.harness_ref, cfg.harness_kwargs)
     idle_since = time.monotonic()
+    last_done = queue.done_count()
     # Ambient injection frames do NOT survive spawn — re-enter them here so
     # every cell this worker runs sees the campaign's environment.
     with injected_env(cfg.env):
@@ -309,6 +379,15 @@ def worker_main(worker_id: str, queue_root: str, config: Dict[str, Any]) -> None
                 if queue.finished() or queue.stop_requested():
                     return
                 queue.reclaim_expired(max_attempts=cfg.max_attempts)
+                # Campaign progress = liveness: while *other* workers are
+                # finishing cells, this one must keep polling even with
+                # nothing claimable — the remaining long-running cells may
+                # yet be reclaimed onto it.  Only bail when both claims AND
+                # progress have stalled for idle_timeout.
+                done = queue.done_count()
+                if done != last_done:
+                    last_done = done
+                    idle_since = time.monotonic()
                 if time.monotonic() - idle_since > cfg.idle_timeout:
                     return
                 time.sleep(cfg.poll_s)
@@ -321,9 +400,15 @@ def worker_main(worker_id: str, queue_root: str, config: Dict[str, Any]) -> None
                 result = _execute_payload(
                     payload, store=store, harness=harness,
                     worker_id=worker_id, attempt=attempt,
-                    reference_fingerprint=cfg.reference_fingerprint or None)
+                    reference_fingerprint=cfg.reference_fingerprint or None,
+                    fence=lambda i=idx, a=attempt: queue.owns(i, worker_id, a))
             finally:
                 beat.stop()
+            if result.get("fenced") or not queue.owns(idx, worker_id, attempt):
+                # Lease reclaimed while executing: the retry owns this cell.
+                # Our marker (possibly stale or FAILED) must not contest the
+                # first-writer race against the retry's result.
+                continue
             queue.complete(idx, result)
 
 

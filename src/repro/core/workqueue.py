@@ -110,7 +110,15 @@ class WorkQueue:
     def claim_next(self, worker: str) -> Optional[Tuple[int, Dict[str, Any], int]]:
         """Claim the lowest unowned, unfinished cell via the ``O_EXCL`` lease
         race; returns ``(idx, payload, attempt)`` or ``None`` when every cell
-        is either done or currently leased."""
+        is either done or currently leased.
+
+        A task file that cannot be *read back* after the lease create wins
+        must not leak the lease (the cell would be blocked until
+        ``lease_timeout`` and the journal would charge a phantom attempt):
+        a transient read failure releases the lease and moves on, while a
+        truly corrupt payload (unparseable JSON) is terminally failed with
+        a structured error marker — failure isolation, not a stuck queue.
+        """
         reclaims = self._reclaim_counts()
         for idx in range(self.n_tasks):
             name = _task_name(idx)
@@ -130,8 +138,46 @@ class WorkQueue:
                 }).encode())
             finally:
                 os.close(fd)
-            return idx, self.payload(idx), attempt
+            try:
+                payload = self.payload(idx)
+            except ValueError as e:
+                # Corrupt payload: terminal marker (complete() releases the
+                # lease we hold, so the write is race-free) — every observer
+                # gets one structured answer instead of a wedged cell.
+                self.complete(idx, {
+                    "task_uid": "",
+                    "error": f"corrupt task payload {name}.json: {e}",
+                    "readiness": 0,
+                    "corrupt": True,
+                })
+                continue
+            except OSError:
+                # Transient (NFS hiccup, slow materialization): release the
+                # lease so the cell is immediately claimable again.
+                lease.unlink(missing_ok=True)
+                continue
+            return idx, payload, attempt
         return None
+
+    def lease_info(self, idx: int) -> Optional[Dict[str, Any]]:
+        """The current lease body for a cell, or ``None`` when unleased
+        (completed, reclaimed, or never claimed)."""
+        try:
+            return json.loads((self._leases / f"{_task_name(idx)}.lease").read_text())
+        except (OSError, ValueError):
+            return None
+
+    def owns(self, idx: int, worker: str, attempt: int) -> bool:
+        """Fencing check: does ``worker``'s claim (at ``attempt``) still hold
+        the lease?  A slow-but-alive worker whose lease was reclaimed — and
+        possibly re-claimed by a retry — sees False and must abandon its
+        side effects (store append, done marker).  This is what makes the
+        store append exactly-once under pauses (SIGSTOP, NFS stall, GC-like
+        hiccups), not just under SIGKILL."""
+        info = self.lease_info(idx)
+        return (info is not None
+                and info.get("worker") == worker
+                and int(info.get("attempt", -1)) == int(attempt))
 
     def heartbeat(self, idx: int) -> bool:
         """Refresh the lease's liveness signal (mtime).  Returns False when

@@ -218,6 +218,32 @@ def test_run_duet_pairs_and_columnar_parity(tmp_path, backend):
     assert red.attempts == 6
 
 
+@pytest.mark.parametrize("backend", ["dir", "jsonl"])
+def test_duplicate_slot_lowest_seq_wins_in_both_extractions(tmp_path, backend):
+    """A fencing gap (paused worker appending after the retry) can leave a
+    historical store with two entries for one (duet_id, round, role) slot.
+    Both extraction paths must keep the lowest-seq record — and agree —
+    rather than letting the late duplicate silently replace the canonical
+    measurement."""
+    store = ResultStore(tmp_path / "s", backend=backend)
+    _append_duet(store, "p", "d1", [1.0, 1.1])  # seqs 0..3, rounds 0-1
+    # The late duplicate: round 0's candidate again, different value.
+    r = new_report(system="t", variant="v", usecase="u", pipeline_id="dup")
+    r.parameter[duet.PARAMETER] = duet.tag("d1", duet.ROLE_CANDIDATE, 0, 2)
+    r.data.append(DataEntry(success=True, runtime=9.9,
+                            metrics={"step_time_s": 9.9}))
+    store.append("p", r)
+
+    col = store.columnar.table("p").duet_pairs("step_time_s")
+    raw = duet.pairs_from_reports(store.query_with_entries("p"),
+                                  "step_time_s")
+    assert [p.to_dict() for p in col] == [p.to_dict() for p in raw]
+    assert [p.round for p in col] == [0, 1]
+    round0 = col[0]
+    assert round0.candidate == pytest.approx(1.0)  # seq 1, not the seq-4 dup
+    assert round0.seq == 1
+
+
 def test_orphaned_half_round_never_judged(tmp_path):
     store = ResultStore(tmp_path / "s")
     _append_duet(store, "p", "d1", [1.0, 1.1])

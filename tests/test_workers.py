@@ -331,6 +331,161 @@ def test_sigkill_mid_cell_reclaimed_exactly_once(tmp_path, backend):
     assert reports[0].parameter["attempt"] == 2
 
 
+@pytest.mark.parametrize("backend", ["dir", "jsonl"])
+def test_sigstop_paused_worker_is_fenced_exactly_one_store_entry(tmp_path, backend):
+    """A worker paused mid-cell (SIGSTOP — alive, not dead) loses its lease
+    to the reclaimed retry.  When it resumes it is already PAST its adoption
+    check with a report in hand; pre-fix that report appended unconditionally
+    and the store held two entries for one (task_uid, slot).  The lease
+    fence (ownership re-check before append and before complete) is what
+    makes the effect exactly-once, on both store backends."""
+    from repro.core.workers import LeaseLostError, _FencedStore, _find_adopted
+    from repro.core.protocol import Report
+
+    store = ResultStore(tmp_path / "store", backend=backend)
+    sentinels = tmp_path / "sentinels"
+    queue_root = tmp_path / "queue"
+    spec = _specs(1)[0]
+    cfg = WorkerConfig(
+        store_root=str(store.root), store_backend=backend,
+        harness_ref="repro.core.synthetic:BlockingHarness",
+        harness_kwargs={"sentinel_dir": str(sentinels), "timeout_s": 60.0},
+        lease_timeout=0.6, poll_s=0.05, idle_timeout=60.0,
+    ).to_dict()
+    queue = WorkQueue(queue_root, lease_timeout=0.6)
+    queue.create([cell_payload(spec, {"prefix": "pause"})], campaign="pause")
+
+    w1 = SPAWN.Process(target=worker_main, args=("w1", str(queue_root), cfg),
+                       daemon=True)
+    w1.start()
+    victim = None
+    try:
+        sentinel = _wait_for(
+            lambda: next(iter(sentinels.glob(f"started.{spec.cell}.*")), None),
+            30.0, "w1 to start the cell")
+        victim = int(sentinel.name.rsplit(".", 1)[1])
+        os.kill(victim, signal.SIGSTOP)  # paused mid-run: heartbeats freeze
+
+        _wait_for(lambda: queue.reclaim_expired() == [0], 10.0, "reclaim")
+        # The retry completes the cell while w1 is still frozen.
+        (sentinels / "release").write_text("go")
+        w2 = SPAWN.Process(target=worker_main, args=("w2", str(queue_root), cfg),
+                           daemon=True)
+        w2.start()
+        w2.join(timeout=30)
+        assert queue.finished()
+        assert len(store.query("pause")) == 1
+
+        # Resume the paused worker: it finishes its blocked harness call and
+        # reaches its store append — the fence must drop it.
+        os.kill(victim, signal.SIGCONT)
+        w1.join(timeout=30)
+        assert not w1.is_alive()
+    finally:
+        if victim is not None and w1.is_alive():
+            try:
+                os.kill(victim, signal.SIGCONT)
+            except ProcessLookupError:
+                pass
+        for p in (w1,):
+            if p.is_alive():
+                p.terminate()
+
+    # Exactly one done marker (the retry's) and exactly one store entry.
+    result = queue.results()[0]
+    assert result["worker"] == "w2" and result["attempts"] == 2
+    reports = store.query("pause")
+    assert len(reports) == 1
+    assert reports[0].parameter["worker"] == "w2"
+    assert reports[0].parameter["task_uid"] == "pause:0"
+
+    # Pre-fix repro: the resumed worker's append was an unconditional
+    # store.append — replay that exact write and the duplicate lands.
+    ghost = Report.from_dict(reports[0].to_dict())
+    ghost.parameter["worker"] = "w1-ghost"
+    with pytest.raises(LeaseLostError):
+        # The fix: the fenced proxy re-checks lease ownership first.
+        _FencedStore(store, lambda: queue.owns(0, "w1", 1)).append("pause", ghost)
+    assert len(store.query("pause")) == 1  # fenced write never landed
+    store.append("pause", ghost)  # the pre-fix behavior
+    assert len(store.query("pause")) == 2  # ...duplicated the cell
+
+    # Defense-in-depth for historical stores that already carry such a
+    # duplicate: every reader keeps the lowest-seq record.
+    adopted = _find_adopted(store, "pause", "pause:0")
+    assert adopted is not None and adopted.parameter["worker"] == "w2"
+
+
+def test_corrupt_task_payload_fails_terminally_without_leaking_lease(tmp_path):
+    """``claim_next`` winning the lease race and then failing to parse the
+    task payload must not leave the lease behind (the cell would wedge until
+    lease_timeout and the journal would charge a phantom attempt): the cell
+    is terminally failed with a structured marker and the claim moves on."""
+    q = WorkQueue(tmp_path / "q").create(_payloads(2))
+    (tmp_path / "q" / "tasks" / "00000.json").write_text("{corrupt")
+
+    claim = q.claim_next("w1")
+    assert claim is not None
+    idx, payload, attempt = claim
+    assert idx == 1 and attempt == 1  # the healthy cell, claimed normally
+    assert payload["task_uid"] == "campaign:1"
+
+    # The corrupt cell got a terminal marker, not a stuck lease.
+    r0 = q.results()[0]
+    assert r0["corrupt"] and r0["readiness"] == 0
+    assert "corrupt task payload" in r0["error"]
+    assert q.lease_info(0) is None  # complete() released the held lease
+    assert q.reclaim_journal() == []  # no phantom attempt charged
+    assert q.claim_next("w2") is None  # nothing else claimable
+
+    q.complete(1, {"readiness": 3})
+    assert q.finished()  # the campaign terminates normally
+
+
+def test_idle_worker_outlives_slow_peer_while_campaign_progresses(tmp_path):
+    """Campaign progress = liveness: a worker with nothing claimable must
+    not abandon an unfinished campaign while ANOTHER worker is still
+    completing cells — pre-fix it idle-timed-out and the last cell, later
+    reclaimed, had nobody left to run it."""
+    store = ResultStore(tmp_path / "s")
+    queue_root = tmp_path / "q"
+    q = WorkQueue(queue_root, lease_timeout=60.0)
+    q.create(_payloads(3, prefix="idle"), campaign="idle")
+    # A slow peer owns every cell before our worker starts.
+    for want in range(3):
+        idx, _, _ = q.claim_next("peer")
+        assert idx == want
+
+    cfg = WorkerConfig(
+        store_root=str(store.root),
+        harness_ref="repro.core.synthetic:SpinHarness",
+        harness_kwargs={"iters": 100},
+        lease_timeout=60.0, poll_s=0.05, idle_timeout=1.0,
+    ).to_dict()
+    t = threading.Thread(target=worker_main,
+                         args=("w-idle", str(queue_root), cfg), daemon=True)
+    t.start()
+
+    # The peer finishes a cell every 0.6s — each completion advances
+    # done_count and must reset the worker's idle clock.  Total idle time
+    # far exceeds idle_timeout (1.0s), but no single gap does.
+    time.sleep(0.6)
+    q.complete(0, {"readiness": 3, "worker": "peer"})
+    time.sleep(0.6)
+    q.complete(1, {"readiness": 3, "worker": "peer"})
+    time.sleep(0.6)
+    assert t.is_alive()  # ~1.8s idle total: alive only if progress resets
+
+    # The peer dies on its last cell; once the lease frees up, the
+    # still-alive worker claims and finishes the campaign.
+    (queue_root / "leases" / "00002.lease").unlink()
+    _wait_for(q.finished, 15.0, "idle worker to pick up the freed cell")
+    t.join(timeout=10)
+    assert not t.is_alive()
+    assert q.results()[2]["worker"] == "w-idle"
+    assert len(store.query("idle")) == 1  # only the cell w-idle executed
+
+
 def test_retry_adopts_orphaned_store_result(tmp_path):
     """A worker killed AFTER persisting but BEFORE its done marker must not
     make the retry re-append: the retry finds the ``task_uid``-tagged report
