@@ -1,0 +1,170 @@
+"""Chaos CI: replay fixed seeded fault scenarios over the reference
+collection pipeline and assert store parity with a fault-free run.
+
+Each scenario drains the producer cells of
+``examples/pipelines/collection.yml`` through the real broker + spawned
+process workers while ``EXACB_CHAOS`` injects a scripted fault sequence
+(see ``repro.core.chaos`` and ``docs/failure_model.md``):
+
+* ``kill-mid-append``      — SIGKILL the worker at its 3rd store append;
+  the reclaimed retry must re-execute without duplicating any record.
+* ``stall-past-lease``     — every worker's first claim stalls past the
+  lease timeout; the fencing token must drop the stale attempt's appends.
+* ``enospc-on-claim``      — the first ``claim_next`` per worker raises
+  ``ENOSPC``; the bounded retry must absorb it transparently.
+* ``skewed-clock-reclaim`` — one reclaim pass per process runs with a
+  clock +1h fast and steals every live lease; adoption + fencing must
+  still converge on exactly one record per cell.
+
+After every scenario the store canon (``strip_volatile``) must be
+byte-identical to the fault-free baseline — the exactly-once guarantee,
+checked under injected faults instead of the happy path.  On failure the
+scenario's full spec (seed included) is printed for local replay:
+
+    EXACB_CHAOS='<spec>' PYTHONPATH=src python scripts/ci_chaos.py --only <name>
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from pathlib import Path
+
+from repro.core import accounting, chaos
+from repro.core.cicd import parse_pipeline_text
+from repro.core.store import ResultStore
+from repro.core.synthetic import SpinHarness
+from repro.core.workers import CampaignBroker, pipeline_payloads
+
+PIPELINE = Path("examples/pipelines/collection.yml")
+
+#: (name, chaos spec, broker overrides).  Seeds are FIXED: a red run is
+#: replayable bit-for-bit by exporting the printed spec locally.
+SCENARIOS = [
+    ("kill-mid-append",
+     "seed=9001;site=store.append:kind=kill:at=3:times=1",
+     {"workers": 1, "lease_timeout": 1.0}),
+    ("stall-past-lease",
+     "seed=9002;site=worker.claimed:kind=stall:at=1:dur=2.5",
+     {"workers": 2, "lease_timeout": 1.0}),
+    ("enospc-on-claim",
+     "seed=9003;site=queue.claim:kind=enospc:at=1",
+     {"workers": 2}),
+    ("skewed-clock-reclaim",
+     "seed=9004;site=queue.reclaim:kind=skew:skew=3600:times=1",
+     {"workers": 2, "max_attempts": 5}),
+]
+
+
+def _producer_payloads():
+    calls = parse_pipeline_text(PIPELINE.read_text())
+    payloads, _owners = pipeline_payloads(calls)
+    if not payloads:
+        raise SystemExit(f"no producer cells in {PIPELINE}")
+    return payloads
+
+
+def _drain(store_root: Path, payloads, name: str, overrides) -> dict:
+    store = ResultStore(store_root)
+    broker = CampaignBroker(store, name=name, **overrides)
+    results = broker.run(payloads, harness=SpinHarness(iters=2000))
+    return {"store": store, "results": results}
+
+
+def _canon(store: ResultStore, prefix: str):
+    return sorted(json.dumps(accounting.strip_volatile(r.to_dict()),
+                             sort_keys=True)
+                  for r in store.query(prefix))
+
+
+def _prefixes(payloads):
+    return sorted({p.get("prefix", "default") for p in payloads})
+
+
+def run_scenario(name: str, spec: str, overrides, payloads, baseline,
+                 work: Path) -> None:
+    # Export the scenario and re-initialize THIS process's engine from it;
+    # spawned workers pick it up lazily from the inherited environment.
+    os.environ[chaos.ENV_VAR] = spec
+    chaos.reset()
+    try:
+        out = _drain(work / f"store_{name}", payloads, f"chaos-{name}",
+                     dict(overrides))
+    finally:
+        os.environ.pop(chaos.ENV_VAR, None)
+        chaos.install(None)
+
+    failures = [
+        (idx, r.get("error"))
+        for idx, r in sorted(out["results"].items())
+        if r.get("error") or int(r.get("readiness", 0)) < 1
+    ]
+    assert not failures, f"cells failed under chaos: {failures}"
+    for prefix in _prefixes(payloads):
+        got = _canon(out["store"], prefix)
+        want = _canon(baseline["store"], prefix)
+        assert len(got) == len(want), (
+            f"prefix {prefix!r}: {len(got)} records vs {len(want)} fault-free "
+            "(duplicate or lost append)")
+        assert got == want, f"prefix {prefix!r}: store canon diverged"
+    attempts = [int(r.get("attempts", 1)) for r in out["results"].values()]
+    print(f"  ok: {len(out['results'])} cells, "
+          f"attempts per cell {sorted(attempts)}, parity holds")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--only", default=None,
+                    help="run a single scenario by name")
+    ap.add_argument("--workdir", default="chaos_ci",
+                    help="scratch directory for the per-scenario stores")
+    args = ap.parse_args(argv)
+
+    work = Path(args.workdir)
+    if work.exists():
+        shutil.rmtree(work)
+    work.mkdir(parents=True)
+
+    payloads = _producer_payloads()
+    print(f"fault-free baseline: {len(payloads)} producer cells "
+          f"from {PIPELINE}")
+    chaos.install(None)  # the baseline must see zero injection
+    baseline = _drain(work / "store_baseline", payloads, "chaos-baseline",
+                      {"workers": 2})
+    base_failures = [(i, r.get("error"))
+                     for i, r in sorted(baseline["results"].items())
+                     if r.get("error")]
+    if base_failures:
+        print(f"baseline itself failed: {base_failures}", file=sys.stderr)
+        return 1
+
+    selected = [s for s in SCENARIOS
+                if args.only is None or s[0] == args.only]
+    if not selected:
+        print(f"unknown scenario {args.only!r}; have "
+              f"{[s[0] for s in SCENARIOS]}", file=sys.stderr)
+        return 2
+    failed = []
+    for name, spec, overrides in selected:
+        print(f"scenario {name}: EXACB_CHAOS='{spec}'")
+        try:
+            run_scenario(name, spec, overrides, payloads, baseline, work)
+        except AssertionError as e:
+            failed.append(name)
+            print(f"  FAILED: {e}\n"
+                  f"  replay locally with:\n"
+                  f"    EXACB_CHAOS='{spec}' PYTHONPATH=src "
+                  f"python scripts/ci_chaos.py --only {name}",
+                  file=sys.stderr)
+    if failed:
+        print(f"chaos scenarios failed: {failed}", file=sys.stderr)
+        return 1
+    print(f"all {len(selected)} chaos scenario(s) parity-equal to fault-free")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -38,7 +38,7 @@ RESOURCE_METRICS = ("res_wall_s", "res_cpu_s", "res_max_rss_mb")
 # Envelope keys stamped by the execution plane that legitimately differ
 # between two otherwise-identical runs (who ran it, when, at what cost,
 # and under which observed environment conditions).
-VOLATILE_PARAMETERS = ("resources", "task_uid", "worker", "attempt",
+VOLATILE_PARAMETERS = ("resources", "task_uid", "worker", "host", "attempt",
                        "env_fingerprint", "fingerprint_drift")
 
 

@@ -254,6 +254,11 @@ def main(argv=None) -> int:
     _daemon_common(dst)
     dst.add_argument("--json", action="store_true", dest="as_json",
                      help="machine-readable output")
+    dst.add_argument("--clear-quarantine", nargs="?", const="", default=None,
+                     dest="clear_quarantine", metavar="CELL",
+                     help="lift quarantine before reporting: pass a cell key "
+                          "to clear one cell, or no value to clear every "
+                          "quarantined cell")
 
     args = ap.parse_args(argv)
     if args.cmd == "run":
@@ -294,9 +299,20 @@ def main(argv=None) -> int:
             return 1
         return daemon.run()
     if args.cmd == "daemon-status":
-        from repro.core.daemon import daemon_status, render_status
+        from repro.core.daemon import CampaignDaemon, daemon_status, render_status
 
         try:
+            if args.clear_quarantine is not None:
+                daemon = CampaignDaemon(
+                    args.store, args.documents,
+                    backend=args.store_backend,
+                    state_path=args.state,
+                    target_lag=args.target_lag,
+                )
+                cleared = daemon.clear_quarantine(
+                    args.clear_quarantine or None)
+                for key in cleared:
+                    print(f"cleared quarantine: {key}")
             status = daemon_status(
                 args.store, args.documents,
                 backend=args.store_backend,

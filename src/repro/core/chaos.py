@@ -1,0 +1,355 @@
+"""Deterministic, seeded fault injection over the execution plane.
+
+The exactly-once guarantees of the broker/worker/queue stack (PR 6/8) were
+proven on two hand-picked races.  This module turns that into a *searched*
+property: every trust boundary in the plane — store appends, queue claims,
+heartbeats, reclaim, worker lifecycle — calls a named **injection site**
+(:func:`trip` / :func:`torn` / :func:`skew`), and a seeded
+:class:`ChaosEngine` decides, reproducibly, which calls fail and how.
+
+Spec format (the ``EXACB_CHAOS`` environment variable, also accepted by
+the ``chaos@v1`` component)::
+
+    seed=42;site=store.append:kind=eio:at=2;site=worker.claimed:kind=kill:p=0.2:times=1
+
+Clauses are ``;``-separated.  ``seed=N`` seeds the engine's RNG; every
+other clause is a rule of ``:``-separated ``key=value`` pairs:
+
+``site``    fnmatch glob over injection-site names (``queue.*``)
+``kind``    ``eio`` | ``enospc`` | ``stall`` | ``kill`` | ``stop`` |
+            ``exit`` | ``torn`` | ``skew``
+``p``       fire probability per matching call (seeded RNG; default 1.0)
+``at``      fire only on the N-th matching call (1-based)
+``times``   total fire budget for the rule (default: unbounded)
+``dur``     seconds: stall length / SIGSTOP length (default 0.05 / 0.75)
+``skew``    seconds of injected clock skew (``skew`` kind)
+``frac``    fraction of bytes written before a torn write fails
+
+Determinism contract: with a fixed spec (seed included), the engine's
+fire/skip decision for the N-th call at a given site is a pure function of
+the spec — the per-rule call counters and the seeded RNG stream are the
+only state.  ``engine.log`` records every fired decision so tests can
+assert two replays are identical.  The engine installs lazily from the
+environment in *every* process, so spawned broker workers inherit the
+scenario automatically.
+
+Injection sites live where the faults would really bite (see
+``docs/failure_model.md``): ``store.append``, ``queue.claim``,
+``queue.complete``, ``queue.heartbeat``, ``queue.reclaim``,
+``worker.claimed``, ``worker.pre_complete``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import errno
+import fnmatch
+import os
+import random
+import signal
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.component import ComponentSchema, InputSpec, PipelineError
+
+#: Environment variable carrying the active chaos spec.  Set it before
+#: spawning workers (the broker uses multiprocessing "spawn", which
+#: inherits the environment) and every process replays the same scenario.
+ENV_VAR = "EXACB_CHAOS"
+
+FAULT_KINDS = ("eio", "enospc", "stall", "kill", "stop", "exit",
+               "torn", "skew")
+
+#: Kinds handled by :func:`trip` (raise / sleep / signal the process).
+_TRIP_KINDS = ("eio", "enospc", "stall", "kill", "stop", "exit")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosRule:
+    """One parsed fault rule."""
+
+    site: str                       # fnmatch glob over injection sites
+    kind: str                       # one of FAULT_KINDS
+    p: float = 1.0                  # fire probability per matching call
+    at: int = 0                     # fire only on the N-th call (0 = any)
+    times: int = 0                  # total fire budget (0 = unbounded)
+    dur: float = 0.0                # stall / stop duration override
+    skew: float = 0.0               # injected clock offset (skew kind)
+    frac: float = 0.5               # torn-write fraction (torn kind)
+
+    def render(self) -> str:
+        parts = [f"site={self.site}", f"kind={self.kind}"]
+        if self.p != 1.0:
+            parts.append(f"p={self.p:g}")
+        if self.at:
+            parts.append(f"at={self.at}")
+        if self.times:
+            parts.append(f"times={self.times}")
+        if self.dur:
+            parts.append(f"dur={self.dur:g}")
+        if self.skew:
+            parts.append(f"skew={self.skew:g}")
+        if self.frac != 0.5:
+            parts.append(f"frac={self.frac:g}")
+        return ":".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosSpec:
+    """A full scenario: a seed plus an ordered tuple of rules."""
+
+    seed: int = 0
+    rules: Tuple[ChaosRule, ...] = ()
+
+    @classmethod
+    def parse(cls, text: str) -> "ChaosSpec":
+        seed = 0
+        rules: List[ChaosRule] = []
+        for clause in filter(None, (c.strip() for c in text.split(";"))):
+            if clause.startswith("seed="):
+                try:
+                    seed = int(clause[5:])
+                except ValueError:
+                    raise PipelineError(f"chaos: bad seed clause {clause!r}")
+                continue
+            kv: Dict[str, str] = {}
+            for pair in clause.split(":"):
+                if "=" not in pair:
+                    raise PipelineError(
+                        f"chaos: bad rule token {pair!r} in {clause!r} "
+                        "(want key=value)")
+                k, v = pair.split("=", 1)
+                kv[k.strip()] = v.strip()
+            site = kv.pop("site", "")
+            kind = kv.pop("kind", "")
+            if not site or kind not in FAULT_KINDS:
+                raise PipelineError(
+                    f"chaos: rule {clause!r} needs site=<glob> and "
+                    f"kind=<{'|'.join(FAULT_KINDS)}>")
+            try:
+                rule = ChaosRule(
+                    site=site, kind=kind,
+                    p=float(kv.pop("p", 1.0)),
+                    at=int(kv.pop("at", 0)),
+                    times=int(kv.pop("times", 0)),
+                    dur=float(kv.pop("dur", 0.0)),
+                    skew=float(kv.pop("skew", 0.0)),
+                    frac=float(kv.pop("frac", 0.5)),
+                )
+            except ValueError as e:
+                raise PipelineError(f"chaos: bad rule {clause!r}: {e}")
+            if kv:
+                raise PipelineError(
+                    f"chaos: unknown key(s) {sorted(kv)} in rule {clause!r}")
+            rules.append(rule)
+        return cls(seed=seed, rules=tuple(rules))
+
+    def render(self) -> str:
+        """Canonical text round-trip (``parse(render()) == self``)."""
+        parts = [f"seed={self.seed}"]
+        parts += [r.render() for r in self.rules]
+        return ";".join(parts)
+
+
+class ChaosError(OSError):
+    """An injected I/O failure.  An OSError subclass carrying a real errno
+    so the retry taxonomy (and every existing ``except OSError``) treats it
+    exactly like the storage fault it emulates."""
+
+    def __init__(self, code: int, site: str, call: int):
+        super().__init__(code, f"chaos[{site}#{call}]: injected "
+                               f"{errno.errorcode.get(code, code)}")
+        self.site = site
+        self.call = call
+
+
+class ChaosEngine:
+    """Seeded decision engine.  One instance per process; all state (per-
+    rule call counters, fire counts, the RNG stream) advances only on
+    matching calls, so a replay from the same spec is bit-identical."""
+
+    def __init__(self, spec: ChaosSpec):
+        self.spec = spec
+        self.rng = random.Random(spec.seed)
+        self._lock = threading.RLock()
+        self._calls = [0] * len(spec.rules)
+        self._fired = [0] * len(spec.rules)
+        #: Every fired decision, in order: (site, rule_index, call_no, kind).
+        self.log: List[Tuple[str, int, int, str]] = []
+
+    # -- decision core ----------------------------------------------------
+
+    def _decide(self, site: str, kinds: Tuple[str, ...]) -> List[Tuple[ChaosRule, int]]:
+        """Advance counters for every rule matching ``site``/``kinds`` and
+        return the (rule, call_no) pairs that fire on this call."""
+        fired: List[Tuple[ChaosRule, int]] = []
+        with self._lock:
+            for i, rule in enumerate(self.spec.rules):
+                if rule.kind not in kinds:
+                    continue
+                if not fnmatch.fnmatchcase(site, rule.site):
+                    continue
+                self._calls[i] += 1
+                call = self._calls[i]
+                if rule.times and self._fired[i] >= rule.times:
+                    continue
+                if rule.at and call != rule.at:
+                    continue
+                if rule.p < 1.0 and self.rng.random() >= rule.p:
+                    continue
+                self._fired[i] += 1
+                self.log.append((site, i, call, rule.kind))
+                fired.append((rule, call))
+        return fired
+
+    # -- actions ----------------------------------------------------------
+
+    def trip(self, site: str) -> None:
+        """Raise/stall/signal according to the first firing trip rule."""
+        for rule, call in self._decide(site, _TRIP_KINDS):
+            if rule.kind == "eio":
+                raise ChaosError(errno.EIO, site, call)
+            if rule.kind == "enospc":
+                raise ChaosError(errno.ENOSPC, site, call)
+            if rule.kind == "stall":
+                time.sleep(rule.dur or 0.05)
+                continue                      # stall then carry on
+            if rule.kind == "exit":
+                os._exit(70)                  # EX_SOFTWARE: scripted crash
+            if rule.kind == "kill":
+                os.kill(os.getpid(), signal.SIGKILL)
+                time.sleep(5.0)               # pragma: no cover — dying
+            if rule.kind == "stop":
+                self._sigstop_self(rule.dur or 0.75)
+
+    def torn(self, site: str, size: int) -> Optional[int]:
+        """For a write of ``size`` bytes: None (write everything) or the
+        number of bytes to write before failing with EIO."""
+        for rule, _call in self._decide(site, ("torn",)):
+            return max(0, min(size - 1, int(size * rule.frac)))
+        return None
+
+    def skew(self, site: str) -> float:
+        """Injected clock offset (seconds) to add at ``site``."""
+        total = 0.0
+        for rule, _call in self._decide(site, ("skew",)):
+            total += rule.skew
+        return total
+
+    @staticmethod
+    def _sigstop_self(dur: float) -> None:
+        """SIGSTOP the current process, with a forked resumer that delivers
+        SIGCONT after ``dur`` seconds (the stopped process can't resume
+        itself).  The child does nothing but sleep/kill/_exit."""
+        pid = os.getpid()
+        if os.fork() == 0:  # pragma: no cover — trivial resumer child
+            time.sleep(dur)
+            try:
+                os.kill(pid, signal.SIGCONT)
+            finally:
+                os._exit(0)
+        os.kill(pid, signal.SIGSTOP)
+
+    def counters(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "seed": self.spec.seed,
+                "rules": [r.render() for r in self.spec.rules],
+                "calls": list(self._calls),
+                "fired": list(self._fired),
+                "log": [list(entry) for entry in self.log],
+            }
+
+
+# ---------------------------------------------------------------------------
+# Process-wide engine: installed explicitly (tests, chaos@v1) or lazily from
+# EXACB_CHAOS on first use (spawned workers inherit the scenario that way).
+# ---------------------------------------------------------------------------
+
+_UNSET = object()
+_engine: Any = _UNSET
+_engine_lock = threading.Lock()
+
+
+def current() -> Optional[ChaosEngine]:
+    global _engine
+    if _engine is _UNSET:
+        with _engine_lock:
+            if _engine is _UNSET:
+                text = os.environ.get(ENV_VAR, "").strip()
+                _engine = ChaosEngine(ChaosSpec.parse(text)) if text else None
+    return _engine
+
+
+def install(engine: Optional[ChaosEngine]) -> Optional[ChaosEngine]:
+    """Install ``engine`` process-wide (None disables injection)."""
+    global _engine
+    with _engine_lock:
+        _engine = engine
+    return engine
+
+
+def reset() -> None:
+    """Forget the installed engine; next use re-reads ``EXACB_CHAOS``."""
+    global _engine
+    with _engine_lock:
+        _engine = _UNSET
+
+
+def trip(site: str) -> None:
+    """Module-level injection hook — no-op unless an engine is active."""
+    engine = current()
+    if engine is not None:
+        engine.trip(site)
+
+
+def torn(site: str, size: int) -> Optional[int]:
+    engine = current()
+    return engine.torn(site, size) if engine is not None else None
+
+
+def skew(site: str) -> float:
+    engine = current()
+    return engine.skew(site) if engine is not None else 0.0
+
+
+# ---------------------------------------------------------------------------
+# chaos@v1 — the self-registering component: a pipeline document can pin a
+# scenario declaratively; the runner installs the engine (and exports the
+# spec so broker-spawned workers replay it too).
+# ---------------------------------------------------------------------------
+
+CHAOS_SCHEMA = ComponentSchema(
+    "chaos", 1,
+    (
+        InputSpec("spec", str, required=True,
+                  help="fault rules, ';'-separated: "
+                       "site=<glob>:kind=<eio|enospc|stall|kill|stop|exit|"
+                       "torn|skew>[:p=<f>][:at=<n>][:times=<m>][:dur=<s>]"
+                       "[:skew=<s>][:frac=<f>]"),
+        InputSpec("seed", int, default=0,
+                  help="scenario seed; overrides any seed= clause in spec"),
+        InputSpec("export", bool, default=True,
+                  help="export the scenario via EXACB_CHAOS so spawned "
+                       "worker processes inherit it"),
+    ),
+    description="deterministic seeded fault injection over the execution "
+                "plane (see docs/failure_model.md)",
+)
+
+
+def run_chaos_component(inputs: Any, ctx: Any) -> Dict[str, Any]:
+    spec = ChaosSpec.parse(inputs["spec"])
+    if inputs.get("seed"):
+        spec = dataclasses.replace(spec, seed=int(inputs["seed"]))
+    engine = ChaosEngine(spec)
+    install(engine)
+    if inputs.get("export", True):
+        os.environ[ENV_VAR] = spec.render()
+    return {
+        "component": "chaos",
+        "seed": spec.seed,
+        "rules": [r.render() for r in spec.rules],
+        "exported": bool(inputs.get("export", True)),
+    }

@@ -57,6 +57,7 @@ from repro.core import cicd
 from repro.core.component import REGISTRY, ComponentRegistry, PipelineError
 from repro.core.harness import Harness
 from repro.core.orchestrator import SCHEDULE_TRIGGERS
+from repro.core.retry import retry_counters
 from repro.core.store import ResultStore
 
 STATE_VERSION = 1
@@ -64,6 +65,9 @@ STATE_FILENAME = "daemon_state.json"
 DEFAULT_TARGET_LAG = 300.0
 DEFAULT_TICK_S = 5.0
 DEFAULT_TRIGGERS = ("lag", "downstream")
+DEFAULT_QUARANTINE_AFTER = 3
+#: Bounded per-cell failure history kept in the state file (newest last).
+QUARANTINE_HISTORY = 5
 
 
 # ---------------------------------------------------------------------------
@@ -123,6 +127,10 @@ class SchedulePolicy:
     cell_deadline_s: float = 0.0
     tick_deadline_s: float = 0.0
     max_cells_per_tick: int = 0
+    #: Circuit-breaker: a cell whose refresh fails this many consecutive
+    #: ticks is parked (skipped by staleness, surfaced by daemon-status)
+    #: instead of burning broker respawn budget forever.  0 disables.
+    quarantine_after: int = DEFAULT_QUARANTINE_AFTER
 
     @staticmethod
     def from_calls(calls: Sequence[Any], *,
@@ -151,6 +159,8 @@ class SchedulePolicy:
             cell_deadline_s=float(inputs.get("cell_deadline_s", 0.0)),
             tick_deadline_s=float(inputs.get("tick_deadline_s", 0.0)),
             max_cells_per_tick=int(inputs.get("max_cells_per_tick", 0)),
+            quarantine_after=int(
+                inputs.get("quarantine_after", DEFAULT_QUARANTINE_AFTER)),
         )
 
 
@@ -333,6 +343,8 @@ class CampaignDaemon:
                     watch_advanced.append(prefix)
         stale: Dict[str, str] = {}
         for key, payload in doc.cells.items():
+            if cells_st.get(key, {}).get("quarantined"):
+                continue  # parked by the circuit-breaker; clear to resume
             last = cells_st.get(key, {}).get("last_refresh")
             if last is None:
                 if recovered is None:
@@ -425,7 +437,49 @@ class CampaignDaemon:
                 self.store, doc.cells[key].get("prefix", "default"))
             cell_st["refresh_count"] = int(cell_st.get("refresh_count", 0)) + 1
             cell_st["last_error"] = result.get("error")
+            if result.get("error"):
+                # Circuit-breaker accounting: consecutive failed refreshes,
+                # with a bounded attempt history for the status view.
+                streak = int(cell_st.get("fail_streak", 0)) + 1
+                cell_st["fail_streak"] = streak
+                history = list(cell_st.get("history", []))
+                history.append({
+                    "ts": now,
+                    "error": str(result.get("error"))[:300],
+                    "attempts": int(result.get("attempts", 0) or 0),
+                })
+                cell_st["history"] = history[-QUARANTINE_HISTORY:]
+                qa = doc.policy.quarantine_after
+                if qa and streak >= qa:
+                    cell_st["quarantined"] = {
+                        "since": now,
+                        "reason": f"{streak} consecutive failed refreshes "
+                                  f"(quarantine_after={qa}); last: "
+                                  f"{str(result.get('error'))[:120]}",
+                        "fail_streak": streak,
+                    }
+            else:
+                cell_st["fail_streak"] = 0
+                cell_st.pop("history", None)
+                cell_st.pop("quarantined", None)
         return results
+
+    def clear_quarantine(self, cell_key: Optional[str] = None) -> List[str]:
+        """Un-park quarantined cells (all of them, or just ``cell_key``);
+        they become eligible for refresh on the next tick.  Returns the
+        cleared keys.  The operator path after fixing a poisoned cell."""
+        cleared: List[str] = []
+        for doc in self.documents:
+            cells_st = self._doc_state(doc)["cells"]
+            for key, cell_st in cells_st.items():
+                if cell_key is not None and key != cell_key:
+                    continue
+                if cell_st.pop("quarantined", None) is not None:
+                    cell_st["fail_streak"] = 0
+                    cleared.append(key)
+        if cleared:
+            self.save_state()
+        return cleared
 
     def _run_consumers(
         self, doc: _Document, due: List[Tuple[str, Any, Dict[str, int]]],
@@ -476,11 +530,14 @@ class CampaignDaemon:
             consumed = self._run_consumers(doc, due, now)
             st = self._doc_state(doc)
             st["last_tick"] = now
+            quarantined = sorted(
+                k for k, c in st["cells"].items() if c.get("quarantined"))
             summary["documents"][doc.path] = {
                 "cells": len(doc.cells),
                 "stale": {k: stale[k] for k in sorted(stale)},
                 "refreshed": sorted(refreshed),
-                "fresh": sorted(set(doc.cells) - set(stale)),
+                "fresh": sorted(set(doc.cells) - set(stale) - set(quarantined)),
+                "quarantined": quarantined,
                 "consumers_run": sorted(consumed),
             }
         self.ticks += 1
@@ -578,6 +635,35 @@ def queue_depth(store_root: Union[str, Path]) -> int:
     return depth
 
 
+def worker_liveness(store_root: Union[str, Path]) -> Dict[str, Any]:
+    """Per-host worker liveness aggregated from every active queue's worker
+    registry (``<queue>/workers/`` files; mtime = last touch).  Remote hosts
+    joined via ``python -m repro.core.workers`` appear here too — the
+    registry lives on the shared filesystem, like everything else."""
+    from repro.core.workers import QUEUE_DIRNAME, host_of
+    from repro.core.workqueue import WorkQueue
+
+    workers: List[Dict[str, Any]] = []
+    base = Path(store_root) / QUEUE_DIRNAME
+    if base.is_dir():
+        for qdir in sorted(base.iterdir()):
+            if not qdir.is_dir():
+                continue
+            try:
+                for w in WorkQueue(qdir).worker_registry():
+                    w["queue"] = qdir.name
+                    workers.append(w)
+            except OSError:
+                continue
+    hosts: Dict[str, Dict[str, int]] = {}
+    for w in workers:
+        host = str(w.get("host") or host_of(str(w.get("worker", ""))) or "?")
+        slot = hosts.setdefault(host, {"workers": 0, "alive": 0})
+        slot["workers"] += 1
+        slot["alive"] += int(bool(w.get("alive")))
+    return {"workers": workers, "hosts": hosts}
+
+
 def daemon_status(
     store: Union[str, Path, ResultStore],
     documents: Sequence[Union[str, Path]],
@@ -606,6 +692,10 @@ def daemon_status(
         "ticks": int(state.get("ticks", 0)),
         "updated": state.get("updated"),
         "queue_depth": queue_depth(store.root),
+        # Robustness surfaces: who is draining (per host), and how hard the
+        # I/O layer has been working (process-local retry counters).
+        "workers": worker_liveness(store.root),
+        "retry_counters": retry_counters(),
         "documents": {},
     }
     for path in documents:
@@ -630,20 +720,27 @@ def daemon_status(
             lag = (now - float(last)) if last is not None else None
             next_due = (float(last) + policy.target_lag
                         if last is not None else now)
+            quarantined = st.get("quarantined")
             cells.append({
                 "key": key,
                 "cell": _cell_label(payload),
                 "last_refresh": last,
                 "lag_s": lag,
                 "next_due": next_due,
-                "due": lag is None or lag > policy.target_lag,
+                # A quarantined cell is parked, not due — that is the point.
+                "due": (not quarantined
+                        and (lag is None or lag > policy.target_lag)),
                 "refresh_count": int(st.get("refresh_count", 0)),
                 "last_error": st.get("last_error"),
+                "fail_streak": int(st.get("fail_streak", 0)),
+                "quarantined": quarantined,
+                "history": list(st.get("history", [])),
             })
         out["documents"][path] = {
             "target_lag": policy.target_lag,
             "triggers": list(policy.triggers),
             "last_tick": doc_st.get("last_tick"),
+            "quarantined": [c["key"] for c in cells if c["quarantined"]],
             "cells": cells,
             "consumers": {
                 key: {
@@ -661,11 +758,31 @@ def render_status(status: Dict[str, Any]) -> str:
     """Human view of :func:`daemon_status` (one line per cell)."""
     lines = [f"daemon state: {status['state_path']} "
              f"(ticks={status['ticks']}, queue_depth={status['queue_depth']})"]
+    hosts = status.get("workers", {}).get("hosts", {})
+    for host in sorted(hosts):
+        h = hosts[host]
+        lines.append(f"  host {host:<30} workers={h['workers']} "
+                     f"alive={h['alive']}")
+    counters = status.get("retry_counters", {})
+    for site in sorted(counters):
+        c = counters[site]
+        if c.get("retries") or c.get("exhausted"):
+            lines.append(f"  retries {site:<27} calls={c['calls']} "
+                         f"retried={c['retries']} exhausted={c['exhausted']}")
     for path, doc in status["documents"].items():
         lines.append(f"\n{path}  target_lag={doc['target_lag']:.0f}s "
                      f"triggers={','.join(doc['triggers'])}")
         for c in doc["cells"]:
             lag = "never" if c["lag_s"] is None else f"{c['lag_s']:.1f}s"
+            if c.get("quarantined"):
+                q = c["quarantined"]
+                lines.append(f"  {c['cell']:<44} QUARANTINED "
+                             f"(streak={q.get('fail_streak', '?')}): "
+                             f"{q.get('reason', '')}")
+                for h in c.get("history", []):
+                    lines.append(f"      attempt@{h.get('ts', 0):.0f}: "
+                                 f"{str(h.get('error', '')).splitlines()[0][:100]}")
+                continue
             due = "DUE" if c["due"] else "fresh"
             lines.append(f"  {c['cell']:<44} lag={lag:<10} {due:<6} "
                          f"refreshes={c['refresh_count']}")

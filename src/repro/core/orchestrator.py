@@ -25,6 +25,7 @@ import uuid
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core import accounting, analysis
+from repro.core import chaos as chaos_mod
 from repro.core import duet as duet_mod
 from repro.core import fingerprint as fingerprint_mod
 from repro.core.columnar import CampaignFrame
@@ -197,6 +198,10 @@ SCHEDULE_SCHEMA = ComponentSchema(
                   help="wall budget for one document refresh; 0 = none"),
         InputSpec("max_cells_per_tick", int, default=0,
                   help="cap on stale cells refreshed per tick; 0 = all"),
+        InputSpec("quarantine_after", int, default=3,
+                  help="consecutive failed refreshes before a cell is "
+                       "quarantined (daemon skips it, daemon-status reports "
+                       "it); 0 = never quarantine"),
     ),
     description="declarative refresh policy for the continuous campaign daemon",
 )
@@ -875,6 +880,7 @@ def register_components(registry: ComponentRegistry) -> ComponentRegistry:
     registry.register(GATE_SCHEMA, _run_gate)
     registry.register(CAMPAIGN_REPORT_SCHEMA, _run_campaign_report)
     registry.register(SCHEDULE_SCHEMA, _run_schedule)
+    registry.register(chaos_mod.CHAOS_SCHEMA, chaos_mod.run_chaos_component)
     for name in ("execution", "feature-injection", "time-series",
                  "machine-comparison", "scalability"):
         registry.register_migration(name, 3, 4, _migrate_cell_vocabulary)

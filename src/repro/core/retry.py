@@ -1,0 +1,167 @@
+"""Shared transient-vs-terminal error taxonomy and bounded retry policy.
+
+Every filesystem touch in the execution plane — store appends, queue
+claims, heartbeats, reclaim journaling — crosses a trust boundary where a
+shared exascale filesystem can return ``EIO`` on a healthy path or
+``ENOSPC`` that clears a second later.  Before this module each call site
+improvised its own ``except OSError`` policy; now they all share one
+taxonomy:
+
+* **transient** — worth retrying with backoff (``EIO``, ``ENOSPC``,
+  ``EAGAIN``, ``EINTR``, ``ETIMEDOUT``, ``ESTALE``, ``EBUSY``).  These are
+  the storage-fabric hiccups the JUPITER-class production partitions throw.
+* **terminal** — protocol signals or real misconfiguration that a retry
+  would only mask.  ``EEXIST``/``ENOENT`` are load-bearing here: the queue
+  uses ``O_EXCL`` creates and missing-lease checks as its arbitration
+  protocol, so blindly retrying them would convert a lost race into a
+  livelock.
+
+:func:`call_with_retry` is the one retry loop: bounded attempts,
+exponential backoff, and deterministic decorrelated jitter (seeded, so a
+chaos replay schedules identical sleeps).  Counters feed the robustness
+view in ``daemon-status`` via :func:`retry_counters`.
+
+See ``docs/failure_model.md`` for the full failure taxonomy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import errno
+import random
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+#: Errnos worth retrying: storage-fabric and contention hiccups.
+TRANSIENT_ERRNOS = frozenset({
+    errno.EIO,
+    errno.ENOSPC,
+    errno.EAGAIN,
+    errno.EINTR,
+    errno.ETIMEDOUT,
+    errno.ESTALE,
+    errno.EBUSY,
+    errno.EDQUOT,
+    errno.ENFILE,
+    errno.EMFILE,
+})
+
+#: Errnos that are protocol signals (O_EXCL arbitration, missing-lease
+#: checks) or genuine misconfiguration — never blind-retried.
+TERMINAL_ERRNOS = frozenset({
+    errno.ENOENT,
+    errno.EEXIST,
+    errno.ENOTDIR,
+    errno.EISDIR,
+    errno.EACCES,
+    errno.EPERM,
+    errno.EROFS,
+    errno.ENAMETOOLONG,
+    errno.EINVAL,
+})
+
+
+def is_transient(exc: BaseException) -> bool:
+    """True when ``exc`` is an OSError the taxonomy classes as retryable.
+
+    ``FileNotFoundError``/``FileExistsError`` (and anything else carrying a
+    terminal errno) answer False even though they subclass OSError — the
+    queue uses them as arbitration signals, not failures.
+    """
+    if not isinstance(exc, OSError):
+        return False
+    code = exc.errno
+    if code in TERMINAL_ERRNOS:
+        return False
+    return code in TRANSIENT_ERRNOS
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded exponential backoff with decorrelated jitter.
+
+    ``delay(attempt, rng)`` for attempt ``k`` (0-based, the delay *after*
+    failure ``k+1``) draws uniformly from ``[base·factor^k / 2,
+    base·factor^k]``, clamped to ``max_s`` — the classic "equal jitter"
+    shape: bounded above for liveness, spread below to decorrelate
+    contending workers.
+    """
+
+    tries: int = 4          # total attempts (1 initial + tries-1 retries)
+    base_s: float = 0.02
+    factor: float = 2.0
+    max_s: float = 1.0
+
+    def delay(self, attempt: int, rng: Optional[random.Random] = None) -> float:
+        ceiling = min(self.max_s, self.base_s * (self.factor ** attempt))
+        draw = (rng or random).uniform(ceiling / 2.0, ceiling)
+        return draw
+
+
+#: Default policy for store/queue I/O; small enough that a worker under a
+#: dead filesystem fences within a couple of lease ttls.
+DEFAULT_POLICY = RetryPolicy()
+
+# Process-wide retry accounting, surfaced by `daemon-status`.  Keyed by the
+# caller-supplied label ("store.append", "queue.claim", ...).
+_counters_lock = threading.Lock()
+_counters: Dict[str, Dict[str, int]] = {}
+
+
+def _charge(label: str, *, retried: bool, exhausted: bool) -> None:
+    with _counters_lock:
+        slot = _counters.setdefault(
+            label, {"calls": 0, "retries": 0, "exhausted": 0})
+        slot["calls"] += 1
+        if retried:
+            slot["retries"] += 1
+        if exhausted:
+            slot["exhausted"] += 1
+
+
+def retry_counters(reset: bool = False) -> Dict[str, Dict[str, int]]:
+    """Snapshot (optionally reset) the per-site retry counters."""
+    with _counters_lock:
+        out = {k: dict(v) for k, v in _counters.items()}
+        if reset:
+            _counters.clear()
+    return out
+
+
+def call_with_retry(
+    fn: Callable[[], Any],
+    *,
+    label: str = "io",
+    policy: RetryPolicy = DEFAULT_POLICY,
+    rng: Optional[random.Random] = None,
+    classify: Callable[[BaseException], bool] = is_transient,
+    sleep: Callable[[float], None] = time.sleep,
+) -> Any:
+    """Run ``fn`` retrying transient failures under ``policy``.
+
+    Terminal errors propagate immediately; a transient error that survives
+    every attempt propagates too (the caller's degraded mode — fencing,
+    synthesized failure — takes over).  Each retried call is charged to the
+    process-wide counters under ``label``.
+    """
+    retried = False
+    last: Optional[BaseException] = None
+    for attempt in range(max(1, policy.tries)):
+        try:
+            result = fn()
+        except BaseException as exc:  # noqa: BLE001 — classified below
+            if not classify(exc):
+                _charge(label, retried=retried, exhausted=False)
+                raise
+            last = exc
+            retried = True
+            if attempt + 1 >= max(1, policy.tries):
+                break
+            sleep(policy.delay(attempt, rng))
+            continue
+        _charge(label, retried=retried, exhausted=False)
+        return result
+    _charge(label, retried=True, exhausted=True)
+    assert last is not None
+    raise last

@@ -36,6 +36,7 @@ data can be ingested via an injection hook; such reports are marked
 from __future__ import annotations
 
 import dataclasses
+import errno
 import json
 import os
 import re
@@ -44,7 +45,9 @@ import threading
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple
 
+from repro.core import chaos
 from repro.core.protocol import ProtocolError, Report
+from repro.core.retry import call_with_retry
 
 _REPORT_RE = re.compile(r"^(\d{8})\.([0-9a-f]{16})\.json$")
 _CLAIM_RE = re.compile(r"^(\d{8})\.claim$")
@@ -175,6 +178,7 @@ class DirBackend(StoreBackend):
 
     # ---- write path ----
     def append(self, prefix: str, report: Report) -> Path:
+        chaos.trip("store.append")
         d = self._dir(prefix)
         d.mkdir(parents=True, exist_ok=True)
         digest = report.digest()
@@ -199,6 +203,16 @@ class DirBackend(StoreBackend):
                     os.close(fd)
                     try:
                         path = d / f"{seq:08d}.{digest}.json"
+                        cut = chaos.torn("store.append", len(payload))
+                        if cut is not None:
+                            # Emulate a filesystem without atomic rename: the
+                            # truncated bytes land at the *final* path before
+                            # the write errors out.  The read path skips the
+                            # digest-mismatched file; a retried append simply
+                            # allocates the next sequence.
+                            path.write_text(payload[:cut])
+                            raise OSError(
+                                errno.EIO, f"chaos: torn write {path.name}")
                         _atomic_write(path, payload)
                         self._append_manifest(
                             d, _entry_for(report, path.name, seq, digest)
@@ -343,6 +357,7 @@ class JsonlBackend(StoreBackend):
 
     # ---- write path ----
     def append(self, prefix: str, report: Report) -> Path:
+        chaos.trip("store.append")
         data = self._data(prefix)
         digest = report.digest()
         doc = report.to_dict()
@@ -367,6 +382,14 @@ class JsonlBackend(StoreBackend):
                 if size > 0 and os.pread(fd, 1, size - 1) != b"\n":
                     os.write(fd, b"\n")
                     offset = size + 1
+                cut = chaos.torn("store.append", len(line))
+                if cut is not None:
+                    # Crash-mid-append emulation: a partial envelope line
+                    # with no newline — exactly the torn tail the index
+                    # rebuild and the next append already know how to skip.
+                    os.write(fd, line[:cut])
+                    self._tail.pop(prefix, None)
+                    raise OSError(errno.EIO, "chaos: torn jsonl append")
                 os.write(fd, line)
                 entry = _entry_for(report, f"{seq}:{offset}:{len(line)}", seq, digest)
                 with open(self._idx(prefix), "a") as f:
@@ -524,9 +547,17 @@ class ResultStore:
     # ---- write path ----
     def append(self, prefix: str, report: Report) -> Path:
         """Atomically persist one report; returns its path.  Safe to call
-        from concurrent scheduler workers sharing one prefix."""
+        from concurrent scheduler workers sharing one prefix.
+
+        Transient I/O failures (the shared taxonomy in
+        ``repro.core.retry``) are retried with bounded backoff; both
+        backends leave no *indexed* state behind on a failed attempt, so a
+        retry is a clean re-append.  A failure that survives every retry
+        propagates — the worker's degraded mode (self-fence) takes over.
+        """
         report.validate()
-        return self.backend.append(prefix, report)
+        return call_with_retry(
+            lambda: self.backend.append(prefix, report), label="store.append")
 
     def ingest_external(self, prefix: str, doc: dict) -> Path:
         """Injection hook for externally provided data (§IV-E).

@@ -25,7 +25,12 @@ dispatch path the paper's JUREAP deployment model needs:
 
 Because the queue and the results both live in the store's filesystem, the
 same protocol extends to N *hosts* draining one campaign over shared
-storage — nothing here assumes the workers share a parent process.
+storage — nothing here assumes the workers share a parent process.  The
+multi-host entry point is ``python -m repro.core.workers <queue-root>``: a
+remote host sharing the filesystem reads the broker-published
+``worker_config.json`` and joins the drain with a ``host:pid:label``
+identity that flows into lease files, done markers, and report provenance
+(see ``docs/failure_model.md`` for the liveness assumptions).
 """
 
 from __future__ import annotations
@@ -34,6 +39,8 @@ import dataclasses
 import importlib
 import json
 import multiprocessing as mp
+import os
+import socket
 import threading
 import time
 import traceback
@@ -41,16 +48,39 @@ import uuid
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from repro.core import chaos
 from repro.core import duet as duet_mod
 from repro.core import fingerprint as fingerprint_mod
 from repro.core.component import PipelineError
 from repro.core.harness import BenchmarkSpec, Harness, HarnessCapabilities, Injections, injected_env
 from repro.core.protocol import Report
 from repro.core.readiness import Readiness
+from repro.core.retry import RetryPolicy, call_with_retry
 from repro.core.store import ResultStore
-from repro.core.workqueue import DEFAULT_LEASE_TIMEOUT, DEFAULT_MAX_ATTEMPTS, WorkQueue
+from repro.core.workqueue import (
+    DEFAULT_LEASE_TIMEOUT, DEFAULT_MAX_ATTEMPTS, WorkQueue, _atomic_json)
 
-QUEUE_DIRNAME = "_queue"  # under the store root; skipped by prefix scans
+QUEUE_DIRNAME = "_queue"   # under the store root; skipped by prefix scans
+WORKER_CONFIG = "worker_config.json"  # broker-published, read by remote hosts
+
+#: Host identity override for workers — lets tests (and containerized
+#: deployments whose hostname is meaningless) simulate distinct hosts.
+HOST_ENV = "EXACB_HOST"
+
+
+def host_identity() -> str:
+    """This process's host identity: ``$EXACB_HOST`` or the hostname."""
+    return os.environ.get(HOST_ENV, "").strip() or socket.gethostname()
+
+
+def worker_identity(label: str = "") -> str:
+    """Compose the full ``host:pid:label`` worker id for this process."""
+    return f"{host_identity()}:{os.getpid()}:{label or uuid.uuid4().hex[:8]}"
+
+
+def host_of(worker_id: str) -> str:
+    """The host component of a ``host:pid:label`` worker id ('' if none)."""
+    return worker_id.split(":", 1)[0] if ":" in worker_id else ""
 
 
 # ---------------------------------------------------------------------------
@@ -115,23 +145,51 @@ class WorkerConfig:
 # Worker side
 # ---------------------------------------------------------------------------
 
+#: Heartbeat I/O retry: total backoff must stay well under the lease
+#: timeout, or the retries themselves would let the lease expire.
+_HEARTBEAT_POLICY = RetryPolicy(tries=4, base_s=0.02, factor=2.0, max_s=0.25)
+
+
 class _Heartbeat(threading.Thread):
     """Refreshes one cell's lease while the harness runs, so a *live* worker
-    on a slow cell is never mistaken for a dead one."""
+    on a slow cell is never mistaken for a dead one.
+
+    A heartbeat that *errors* used to kill this thread silently: the lease
+    then aged out mid-run and a peer reclaimed the cell while this worker
+    kept executing — the exact slow-but-alive race fencing exists for, now
+    entered through an I/O blip instead of a pause.  Transient failures are
+    retried with backoff; persistent failure (or a vanished lease) sets
+    ``lost``, which the worker's fence checks before every store append —
+    the cell is fenced promptly instead of racing the reclaimer.
+    """
 
     def __init__(self, queue: WorkQueue, idx: int, interval: float):
         super().__init__(daemon=True, name=f"heartbeat-{idx:05d}")
         self.queue = queue
         self.idx = idx
         self.interval = interval
-        self._stop = threading.Event()
+        # NB: not `_stop` — that would shadow threading.Thread's internal
+        # `_stop()` method and break `join()`.
+        self._halt = threading.Event()
+        #: Set when the lease is gone or unheartbeatable — ownership can no
+        #: longer be asserted, so the owner must consider itself fenced.
+        self.lost = threading.Event()
 
     def run(self) -> None:
-        while not self._stop.wait(self.interval):
-            self.queue.heartbeat(self.idx)
+        while not self._halt.wait(self.interval):
+            try:
+                alive = call_with_retry(
+                    lambda: self.queue.heartbeat(self.idx),
+                    label="queue.heartbeat", policy=_HEARTBEAT_POLICY)
+            except Exception:  # noqa: BLE001 — persistent failure fences
+                self.lost.set()
+                return
+            if not alive:
+                self.lost.set()
+                return
 
     def stop(self) -> None:
-        self._stop.set()
+        self._halt.set()
 
 
 class _TaggingHarness(Harness):
@@ -175,13 +233,22 @@ class _FencedStore:
     def __init__(self, inner: ResultStore, fence):
         self._inner = inner
         self._fence = fence
+        #: Set when an append failed *as I/O* even after the store's own
+        #: bounded retries — the signal for the worker to fence itself
+        #: (release the lease, skip the done marker) rather than terminally
+        #: fail the cell on a sick storage path.
+        self.append_failed = False
 
     def append(self, prefix, report, **kwargs):
         if not self._fence():
             raise LeaseLostError(
                 f"lease lost before store append to {prefix!r}; dropping "
                 "report — the reclaimed retry owns this cell now")
-        return self._inner.append(prefix, report, **kwargs)
+        try:
+            return self._inner.append(prefix, report, **kwargs)
+        except OSError:
+            self.append_failed = True
+            raise
 
     def __getattr__(self, name):
         return getattr(self._inner, name)
@@ -250,8 +317,10 @@ def _execute_payload(
     from repro.core.orchestrator import (  # lazy: cycle
         CellResult, ExecutionOrchestrator, reduce_duet)
 
+    fenced_store: Optional[_FencedStore] = None
     if fence is not None:
-        store = _FencedStore(store, fence)
+        fenced_store = _FencedStore(store, fence)
+        store = fenced_store
     task_uid = str(payload.get("task_uid", ""))
     base = {
         "task_uid": task_uid,
@@ -259,6 +328,7 @@ def _execute_payload(
         "call_index": payload.get("call_index", 0),
         "cell_index": payload.get("cell_index", 0),
         "worker": worker_id,
+        "host": host_of(worker_id),
         "attempts": attempt,
     }
     def _run() -> Dict[str, Any]:
@@ -280,7 +350,8 @@ def _execute_payload(
                     "adopted": True,
                 }
         tagged = _TaggingHarness(harness, {
-            "task_uid": task_uid, "worker": worker_id, "attempt": attempt})
+            "task_uid": task_uid, "worker": worker_id,
+            "host": host_of(worker_id), "attempt": attempt})
         # Payloads may originate from a component with a wider schema
         # (feature-injection sweep points); the worker always executes
         # through the execution orchestrator, so keep only its inputs.
@@ -355,30 +426,68 @@ def _execute_payload(
         # write that FAILED marker and could beat the retry's good one.
         out = dict(out)
         out["fenced"] = True
+    if fenced_store is not None and fenced_store.append_failed:
+        # The store path is sick (append failed even after bounded retries):
+        # this is the worker's problem, not the cell's — the caller must
+        # self-fence (release the lease for a retry elsewhere) instead of
+        # recording a terminal FAILED marker.
+        out = dict(out)
+        out["store_failed"] = True
     return out
+
+
+def _release_quietly(queue: WorkQueue, idx: int, worker_id: str, attempt: int,
+                     max_attempts: int) -> None:
+    """Best-effort charged release: when even the release path errors the
+    lease simply ages out and the reclaimer charges the attempt instead."""
+    try:
+        queue.release(idx, worker_id, attempt, charge=True,
+                      max_attempts=max_attempts)
+    except OSError:
+        pass
 
 
 def worker_main(worker_id: str, queue_root: str, config: Dict[str, Any]) -> None:
     """Spawn entrypoint: drain the queue until the campaign finishes.
 
     Runs in a fresh interpreter — everything it needs arrives as plain data
-    in ``config`` (see :class:`WorkerConfig`).
+    in ``config`` (see :class:`WorkerConfig`).  A bare ``worker_id`` (no
+    ``:``) is treated as a *label* and expanded to the full
+    ``host:pid:label`` identity, so every lease, done marker, and report
+    carries the provenance needed to attribute work across hosts.
     """
+    if ":" not in worker_id:
+        worker_id = worker_identity(worker_id)
+    host = host_of(worker_id)
     cfg = WorkerConfig.from_dict(config)
     queue = WorkQueue(queue_root, lease_timeout=cfg.lease_timeout)
     store = ResultStore(cfg.store_root, backend=cfg.store_backend)
     harness = resolve_harness(cfg.harness_ref, cfg.harness_kwargs)
+    queue.register_worker(worker_id, host=host, pid=os.getpid())
     idle_since = time.monotonic()
     last_done = queue.done_count()
     # Ambient injection frames do NOT survive spawn — re-enter them here so
     # every cell this worker runs sees the campaign's environment.
     with injected_env(cfg.env):
         while True:
-            claim = queue.claim_next(worker_id)
+            queue.touch_worker(worker_id)
+            try:
+                claim = call_with_retry(
+                    lambda: queue.claim_next(worker_id, host=host),
+                    label="queue.claim")
+            except OSError:
+                # Queue root unreadable even after bounded retries: this
+                # worker's filesystem view is sick — exit instead of
+                # spinning (the broker's respawn budget covers a fresh
+                # process; other hosts keep draining).
+                return
             if claim is None:
                 if queue.finished() or queue.stop_requested():
                     return
-                queue.reclaim_expired(max_attempts=cfg.max_attempts)
+                try:
+                    queue.reclaim_expired(max_attempts=cfg.max_attempts)
+                except OSError:
+                    pass  # reclaim is cooperative; another pass will win
                 # Campaign progress = liveness: while *other* workers are
                 # finishing cells, this one must keep polling even with
                 # nothing claimable — the remaining long-running cells may
@@ -394,6 +503,7 @@ def worker_main(worker_id: str, queue_root: str, config: Dict[str, Any]) -> None
                 continue
             idle_since = time.monotonic()
             idx, payload, attempt = claim
+            chaos.trip("worker.claimed")
             beat = _Heartbeat(queue, idx, cfg.heartbeat_s())
             beat.start()
             try:
@@ -401,15 +511,41 @@ def worker_main(worker_id: str, queue_root: str, config: Dict[str, Any]) -> None
                     payload, store=store, harness=harness,
                     worker_id=worker_id, attempt=attempt,
                     reference_fingerprint=cfg.reference_fingerprint or None,
-                    fence=lambda i=idx, a=attempt: queue.owns(i, worker_id, a))
+                    # The fence folds in heartbeat health: a lease this
+                    # worker can no longer refresh (or that vanished) must
+                    # fence appends promptly, not only after a reclaimer
+                    # happens to race us.
+                    fence=lambda i=idx, a=attempt: (
+                        not beat.lost.is_set()
+                        and queue.owns(i, worker_id, a)))
             finally:
                 beat.stop()
+            if result.get("store_failed"):
+                # Self-fence: the report could not be persisted even with
+                # retries.  Hand the cell back charged (bounded attempts)
+                # and exit — this worker's store path cannot be trusted.
+                _release_quietly(queue, idx, worker_id, attempt,
+                                 cfg.max_attempts)
+                return
+            if beat.lost.is_set():
+                # Heartbeat died while executing: release promptly (charged)
+                # instead of leaving the lease to age out under a reclaimer.
+                _release_quietly(queue, idx, worker_id, attempt,
+                                 cfg.max_attempts)
+                continue
             if result.get("fenced") or not queue.owns(idx, worker_id, attempt):
                 # Lease reclaimed while executing: the retry owns this cell.
                 # Our marker (possibly stale or FAILED) must not contest the
                 # first-writer race against the retry's result.
                 continue
-            queue.complete(idx, result)
+            chaos.trip("worker.pre_complete")
+            try:
+                queue.complete(idx, result)
+            except OSError:
+                # The report (if any) is already persisted under its
+                # task_uid; releasing charged lets the retry adopt it.
+                _release_quietly(queue, idx, worker_id, attempt,
+                                 cfg.max_attempts)
 
 
 # ---------------------------------------------------------------------------
@@ -482,14 +618,49 @@ class CampaignBroker:
         self.queue = queue
         return queue
 
+    def publish(self, payloads: Sequence[Dict[str, Any]], *,
+                harness: Harness) -> WorkQueue:
+        """Materialize the queue AND publish ``worker_config.json`` into it,
+        so workers launched out-of-band — ``python -m repro.core.workers``
+        on any host sharing the filesystem — can join the drain with the
+        same store/harness/lease configuration as the local pool."""
+        cfg = self._config(harness).to_dict()   # validate before mutating
+        queue = self.materialize(payloads)
+        _atomic_json(self.queue_root / WORKER_CONFIG, cfg)
+        return queue
+
+    def _synthesized(self, payloads: Sequence[Dict[str, Any]],
+                     error: str) -> Dict[int, Dict[str, Any]]:
+        return {
+            idx: {
+                "task_uid": payloads[idx].get("task_uid", ""),
+                "readiness": 0,
+                "error": error,
+                "attempts": 0,
+                "report": None,
+            }
+            for idx in range(len(payloads))
+        }
+
     def run(self, payloads: Sequence[Dict[str, Any]], *, harness: Harness) -> Dict[int, Dict[str, Any]]:
         """Drain ``payloads`` through the worker pool; returns the terminal
         result dict for every cell index (synthesized failure records for
         cells that never completed — the caller always gets len(payloads)
-        answers)."""
+        answers).
+
+        Degraded mode: an unusable queue root (unreadable, out of space)
+        yields synthesized failure records for every cell instead of an
+        exception — a broker embedded in the daemon must report a sick
+        filesystem, not crash the service.
+        """
         payloads = list(payloads)
-        queue = self.materialize(payloads)
         cfg = self._config(harness).to_dict()
+        try:
+            queue = self.materialize(payloads)
+            _atomic_json(self.queue_root / WORKER_CONFIG, cfg)
+        except OSError as e:
+            return self._synthesized(
+                payloads, f"queue root unusable at {self.queue_root}: {e}")
         ctx = mp.get_context("spawn")  # spawn-safe by construction
         spawned = 0
 
@@ -510,7 +681,10 @@ class CampaignBroker:
         t0 = time.monotonic()
         try:
             while not queue.finished():
-                queue.reclaim_expired(max_attempts=self.max_attempts)
+                try:
+                    queue.reclaim_expired(max_attempts=self.max_attempts)
+                except OSError:
+                    pass  # cooperative: workers also reclaim; retry next tick
                 if queue.finished():
                     break
                 for i, proc in enumerate(self.processes):
@@ -526,7 +700,10 @@ class CampaignBroker:
                     break
                 time.sleep(self.poll_s)
         finally:
-            queue.request_stop()
+            try:
+                queue.request_stop()
+            except OSError:
+                pass  # workers still exit via idle timeout
             for proc in self.processes:
                 if proc is None:
                     continue
@@ -679,3 +856,59 @@ def pipeline_payloads(calls: Sequence[Any]) -> Tuple[List[Dict[str, Any]], Dict[
                 spec, dict(inputs), component_ref=inputs.component or call.ref,
                 call_index=ci, cell_index=k, injections=inj))
     return payloads, owners
+
+
+# ---------------------------------------------------------------------------
+# Multi-host entry point: `python -m repro.core.workers <queue-root>`
+# ---------------------------------------------------------------------------
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """Join a campaign drain from any host sharing the store filesystem.
+
+    The broker publishes ``worker_config.json`` into the queue root when it
+    materializes a campaign (see :meth:`CampaignBroker.publish`); this entry
+    point reads it, composes a ``host:pid:label`` identity (host from
+    ``$EXACB_HOST`` or the hostname), and drains until the campaign
+    finishes.  Exit code 0 = drained to completion, 2 = queue/config
+    unusable.
+    """
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.workers",
+        description="join a campaign work queue as a remote worker",
+    )
+    ap.add_argument("queue_root", help="the campaign's queue directory "
+                                       "(<store>/_queue/<name>-<id>)")
+    ap.add_argument("--harness", default="",
+                    help="module:factory harness override (default: the "
+                         "recipe published in worker_config.json)")
+    ap.add_argument("--label", default="",
+                    help="worker label; the full id is host:pid:label "
+                         "(default: a random 8-hex label)")
+    ap.add_argument("--host", default="",
+                    help="host identity override (default: $EXACB_HOST or "
+                         "the hostname)")
+    args = ap.parse_args(argv)
+
+    queue_root = Path(args.queue_root)
+    try:
+        config = json.loads((queue_root / WORKER_CONFIG).read_text())
+    except (OSError, ValueError) as e:
+        print(f"error: no usable {WORKER_CONFIG} under {queue_root}: {e}\n"
+              "(the broker publishes it when the campaign is materialized)",
+              flush=True)
+        return 2
+    if args.harness:
+        config["harness_ref"] = args.harness
+        config["harness_kwargs"] = {}
+    if args.host:
+        os.environ[HOST_ENV] = args.host
+    worker_id = worker_identity(args.label)
+    print(f"worker {worker_id} joining queue {queue_root}", flush=True)
+    worker_main(worker_id, str(queue_root), config)
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover — exercised via subprocess
+    raise SystemExit(main())

@@ -28,7 +28,16 @@ reuses the store's proven concurrency machinery (``DirBackend``'s flock +
 
 Liveness is judged by lease mtime, so on a shared filesystem all
 participating hosts should have reasonably synchronized clocks (the same
-assumption the store's mtime-fingerprint cache already makes).
+assumption the store's mtime-fingerprint cache already makes); the
+tolerated drift and the full failure taxonomy are written down in
+``docs/failure_model.md``.
+
+Every filesystem touch here goes through the shared retry taxonomy
+(``repro.core.retry``) and is wrapped by a named chaos injection site
+(``queue.claim`` / ``queue.heartbeat`` / ``queue.complete`` /
+``queue.reclaim`` — see ``repro.core.chaos``), so the protocol's
+exactly-once claims are exercised under a seeded fault space, not just the
+happy path.
 """
 
 from __future__ import annotations
@@ -40,6 +49,8 @@ import time
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.core import chaos
+from repro.core.retry import call_with_retry, is_transient
 from repro.core.store import _flock, _funlock
 
 DEFAULT_LEASE_TIMEOUT = 15.0
@@ -49,6 +60,7 @@ _META = "queue.json"
 _RECLAIMS = "reclaims.jsonl"
 _RECLAIM_LOCK = ".reclaim.lock"
 _STOP = "stop"
+_WORKERS = "workers"
 
 
 class WorkQueueError(RuntimeError):
@@ -107,7 +119,7 @@ class WorkQueue:
         return json.loads((self._tasks / f"{_task_name(idx)}.json").read_text())
 
     # ---------------------------------------------------------------- claim
-    def claim_next(self, worker: str) -> Optional[Tuple[int, Dict[str, Any], int]]:
+    def claim_next(self, worker: str, *, host: str = "") -> Optional[Tuple[int, Dict[str, Any], int]]:
         """Claim the lowest unowned, unfinished cell via the ``O_EXCL`` lease
         race; returns ``(idx, payload, attempt)`` or ``None`` when every cell
         is either done or currently leased.
@@ -119,6 +131,7 @@ class WorkQueue:
         truly corrupt payload (unparseable JSON) is terminally failed with
         a structured error marker — failure isolation, not a stuck queue.
         """
+        chaos.trip("queue.claim")
         reclaims = self._reclaim_counts()
         for idx in range(self.n_tasks):
             name = _task_name(idx)
@@ -132,12 +145,21 @@ class WorkQueue:
             except FileExistsError:
                 continue  # lost the race — another worker owns this cell
             attempt = 1 + reclaims.get(idx, 0)
+            body = json.dumps({
+                "worker": worker, "host": host, "attempt": attempt,
+                "claimed_at": time.time(),
+            }).encode()
             try:
-                os.write(fd, json.dumps({
-                    "worker": worker, "attempt": attempt, "claimed_at": time.time(),
-                }).encode())
-            finally:
+                # The lease body is the fencing token; a transient write
+                # failure is retried (an empty lease would fence its own
+                # owner), and a persistent one releases the claim.
+                call_with_retry(lambda: os.pwrite(fd, body, 0),
+                                label="queue.claim")
+            except OSError:
                 os.close(fd)
+                lease.unlink(missing_ok=True)
+                continue
+            os.close(fd)
             try:
                 payload = self.payload(idx)
             except ValueError as e:
@@ -182,22 +204,48 @@ class WorkQueue:
     def heartbeat(self, idx: int) -> bool:
         """Refresh the lease's liveness signal (mtime).  Returns False when
         the lease is gone — i.e. the cell was reclaimed out from under the
-        caller, whose eventual ``complete`` will simply lose the race."""
+        caller, whose eventual ``complete`` will simply lose the race.
+        Transient I/O failures *raise* (they say nothing about ownership);
+        the worker's heartbeat thread retries them with backoff and fences
+        the cell if they persist."""
+        chaos.trip("queue.heartbeat")
+        path = self._leases / f"{_task_name(idx)}.lease"
+        skew_s = chaos.skew("queue.heartbeat")
         try:
-            os.utime(self._leases / f"{_task_name(idx)}.lease")
+            if skew_s:
+                # Injected clock drift: stamp the mtime as a host whose
+                # clock runs `skew_s` seconds off would.
+                t = time.time() + skew_s
+                os.utime(path, (t, t))
+            else:
+                os.utime(path)
             return True
-        except OSError:
+        except FileNotFoundError:
+            return False
+        except OSError as e:
+            if is_transient(e):
+                raise
             return False
 
     def complete(self, idx: int, result: Dict[str, Any]) -> bool:
         """Write the terminal result marker, first writer wins.  Returns
         False when another writer (a reclaimed retry, or the reclaimer's
         terminal-failure marker) got there first."""
+        chaos.trip("queue.complete")
         done = self._done / f"{_task_name(idx)}.json"
-        fd, tmp = tempfile.mkstemp(dir=self._done, suffix=".tmp")
+
+        def _staged() -> str:
+            fd, tmp = tempfile.mkstemp(dir=self._done, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(result, f, default=str)
+            except BaseException:
+                os.unlink(tmp)
+                raise
+            return tmp
+
+        tmp = call_with_retry(_staged, label="queue.complete")
         try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(result, f, default=str)
             try:
                 os.link(tmp, done)  # atomic + exclusive (fails if done exists)
                 won = True
@@ -228,11 +276,14 @@ class WorkQueue:
         broker's monitor loop AND idle workers both do)."""
         if not self._leases.exists():
             return []
+        chaos.trip("queue.reclaim")
         reclaimed: List[int] = []
         lock_fd = os.open(self.root / _RECLAIM_LOCK, os.O_CREAT | os.O_RDWR, 0o644)
         try:
             _flock(lock_fd)
-            now = time.time()
+            # Injected clock skew emulates a reclaimer host whose clock runs
+            # fast — the drift scenario the liveness model must tolerate.
+            now = time.time() + chaos.skew("queue.reclaim")
             counts = self._reclaim_counts()
             for lease in sorted(self._leases.glob("*.lease")):
                 idx = int(lease.stem)
@@ -250,14 +301,25 @@ class WorkQueue:
                     info = json.loads(lease.read_text())
                 except (OSError, ValueError):
                     info = {}
-                lease.unlink(missing_ok=True)
                 attempts = counts.get(idx, 0) + 1
+                # Journal FIRST, then unlink: if the journal append fails
+                # persistently the lease stays put and the attempt stays
+                # uncharged — the next reclaim pass retries the whole step.
+                # (The reverse order could un-lease a cell without charging
+                # it, making its retry budget unbounded.)
+                try:
+                    call_with_retry(
+                        lambda: self._journal({
+                            "idx": idx, "worker": info.get("worker", "?"),
+                            "host": info.get("host", ""),
+                            "attempt": info.get("attempt", attempts),
+                            "ts": now,
+                        }),
+                        label="queue.reclaim")
+                except OSError:
+                    continue
                 counts[idx] = attempts
-                with open(self.root / _RECLAIMS, "a") as f:
-                    f.write(json.dumps({
-                        "idx": idx, "worker": info.get("worker", "?"),
-                        "attempt": info.get("attempt", attempts), "ts": now,
-                    }) + "\n")
+                lease.unlink(missing_ok=True)
                 if attempts >= max_attempts:
                     # Terminal failure marker — failure isolation, not retry
                     # forever.  complete() keeps first-writer-wins semantics.
@@ -274,6 +336,56 @@ class WorkQueue:
             _funlock(lock_fd)
             os.close(lock_fd)
         return reclaimed
+
+    def _journal(self, entry: Dict[str, Any]) -> None:
+        with open(self.root / _RECLAIMS, "a") as f:
+            f.write(json.dumps(entry) + "\n")
+
+    def release(self, idx: int, worker: str, attempt: int, *,
+                charge: bool = False,
+                max_attempts: int = DEFAULT_MAX_ATTEMPTS) -> bool:
+        """Ownership-checked voluntary lease release — a worker fencing
+        itself (persistent heartbeat failure, store append exhausted its
+        retries) hands the cell back *promptly* instead of letting the
+        lease age out.  Returns False when the caller no longer owns the
+        lease (someone reclaimed it already).
+
+        ``charge=True`` journals the release like a reclaim, so a cell
+        whose every execution self-fences still exhausts ``max_attempts``
+        and fails terminally instead of bouncing between workers forever.
+        """
+        lock_fd = os.open(self.root / _RECLAIM_LOCK, os.O_CREAT | os.O_RDWR, 0o644)
+        try:
+            _flock(lock_fd)
+            if not self.owns(idx, worker, attempt):
+                return False
+            if charge:
+                attempts = self._reclaim_counts().get(idx, 0) + 1
+                try:
+                    call_with_retry(
+                        lambda: self._journal({
+                            "idx": idx, "worker": worker, "attempt": attempt,
+                            "ts": time.time(), "released": True,
+                        }),
+                        label="queue.release")
+                except OSError:
+                    return False  # keep the lease; let reclaim arbitrate
+                (self._leases / f"{_task_name(idx)}.lease").unlink(missing_ok=True)
+                if attempts >= max_attempts:
+                    self.complete(idx, {
+                        "task_uid": self.payload(idx).get("task_uid", ""),
+                        "error": f"worker self-fenced after {attempts} failed "
+                                 f"attempts (last worker {worker})",
+                        "readiness": 0,
+                        "attempts": attempts,
+                        "released": True,
+                    })
+                return True
+            (self._leases / f"{_task_name(idx)}.lease").unlink(missing_ok=True)
+            return True
+        finally:
+            _funlock(lock_fd)
+            os.close(lock_fd)
 
     def _reclaim_counts(self) -> Dict[int, int]:
         counts: Dict[int, int] = {}
@@ -300,6 +412,54 @@ class WorkQueue:
                 out.append(json.loads(line))
             except ValueError:
                 continue
+        return out
+
+    # ------------------------------------------------------- worker registry
+    def _worker_file(self, worker: str) -> Path:
+        safe = "".join(c if (c.isalnum() or c in "._-") else "_" for c in worker)
+        return self.root / _WORKERS / f"{safe}.json"
+
+    def register_worker(self, worker: str, **meta: Any) -> None:
+        """Announce a worker (local or remote host) joining the campaign.
+        The registry file's mtime is the worker's liveness signal, exactly
+        like a lease — ``daemon-status`` renders per-host liveness from it.
+        Registration is best-effort: a worker that cannot register still
+        drains (the registry is an observability surface, not a lock)."""
+        try:
+            (self.root / _WORKERS).mkdir(exist_ok=True)
+            _atomic_json(self._worker_file(worker), {
+                "worker": worker,
+                "registered": time.time(),
+                **meta,
+            })
+        except OSError:
+            pass
+
+    def touch_worker(self, worker: str) -> None:
+        try:
+            os.utime(self._worker_file(worker))
+        except OSError:
+            pass
+
+    def worker_registry(self, *, alive_within: Optional[float] = None) -> List[Dict[str, Any]]:
+        """Every registered worker with its liveness age.  ``alive`` uses
+        ``alive_within`` (default: the lease timeout) against the registry
+        file's mtime."""
+        horizon = self.lease_timeout if alive_within is None else float(alive_within)
+        out: List[Dict[str, Any]] = []
+        wdir = self.root / _WORKERS
+        if not wdir.exists():
+            return out
+        now = time.time()
+        for p in sorted(wdir.glob("*.json")):
+            try:
+                entry = json.loads(p.read_text())
+                age = now - p.stat().st_mtime
+            except (OSError, ValueError):
+                continue
+            entry["age_s"] = age
+            entry["alive"] = age <= horizon
+            out.append(entry)
         return out
 
     # ------------------------------------------------------------ observers

@@ -1,0 +1,566 @@
+"""Tests for the chaos-hardened execution plane: the seeded fault-injection
+engine (spec round-trip, bit-identical replay), the transient-vs-terminal
+retry taxonomy, torn-write recovery on both store backends, heartbeat-death
+fencing, worker self-fencing on a sick store path, charged voluntary
+release, broker degraded mode, the concurrent-reclaimer race, and the
+multi-host ``python -m repro.core.workers`` entry point."""
+
+import errno
+import json
+import multiprocessing as mp
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.core import accounting, chaos
+from repro.core.chaos import (
+    ChaosEngine,
+    ChaosError,
+    ChaosRule,
+    ChaosSpec,
+    run_chaos_component,
+)
+from repro.core.component import PipelineError
+from repro.core.harness import BenchmarkSpec
+from repro.core.orchestrator import ExecutionOrchestrator
+from repro.core.retry import (
+    RetryPolicy,
+    call_with_retry,
+    is_transient,
+    retry_counters,
+)
+from repro.core.store import ResultStore
+from repro.core.synthetic import BlockingHarness, SpinHarness
+from repro.core.workers import (
+    CampaignBroker,
+    WorkerConfig,
+    _execute_payload,
+    cell_payload,
+    host_of,
+    worker_identity,
+)
+from repro.core.workqueue import WorkQueue
+
+REPO = Path(__file__).resolve().parent.parent
+SPAWN = mp.get_context("spawn")
+
+
+@pytest.fixture(autouse=True)
+def _no_chaos_leak():
+    """Chaos state is process-global; never let a scenario outlive its test."""
+    yield
+    chaos.install(None)
+    os.environ.pop(chaos.ENV_VAR, None)
+
+
+def _install(spec_text):
+    return chaos.install(ChaosEngine(ChaosSpec.parse(spec_text)))
+
+
+def _specs(n):
+    return [BenchmarkSpec(arch=f"arch{i}", shape="train_4k", system="sysA")
+            for i in range(n)]
+
+
+def _payloads(n, prefix="q"):
+    return [cell_payload(s, {"prefix": prefix}, cell_index=i)
+            for i, s in enumerate(_specs(n))]
+
+
+def _canon(store, prefix):
+    return sorted(json.dumps(accounting.strip_volatile(r.to_dict()),
+                             sort_keys=True)
+                  for r in store.query(prefix))
+
+
+# ---------------------------------------------------------------------------
+# spec parse / render
+# ---------------------------------------------------------------------------
+
+def test_spec_parse_render_roundtrip():
+    text = ("seed=42;site=store.append:kind=eio:at=2;"
+            "site=queue.*:kind=stall:p=0.25:times=3:dur=0.1;"
+            "site=queue.reclaim:kind=skew:skew=120;"
+            "site=store.append:kind=torn:frac=0.3")
+    spec = ChaosSpec.parse(text)
+    assert spec.seed == 42 and len(spec.rules) == 4
+    assert spec.rules[0] == ChaosRule(site="store.append", kind="eio", at=2)
+    assert spec.rules[1].p == 0.25 and spec.rules[1].times == 3
+    assert spec.rules[2].skew == 120.0
+    assert spec.rules[3].frac == 0.3
+    # Canonical round-trip: parse(render()) is the identity.
+    assert ChaosSpec.parse(spec.render()) == spec
+
+
+@pytest.mark.parametrize("bad", [
+    "seed=forty",
+    "site=store.append",                      # no kind
+    "kind=eio",                               # no site
+    "site=x:kind=meteor",                     # unknown kind
+    "site=x:kind=eio:zap=1",                  # unknown key
+    "site=x:kind=eio:p=not-a-float",
+    "site=x:kind=eio:junk",                   # token without '='
+])
+def test_spec_parse_rejects_malformed_clauses(bad):
+    with pytest.raises(PipelineError, match="chaos"):
+        ChaosSpec.parse(bad)
+
+
+# ---------------------------------------------------------------------------
+# engine determinism
+# ---------------------------------------------------------------------------
+
+def _drive(engine):
+    """A fixed mixed call sequence; returns the engine's decision log."""
+    for i in range(30):
+        try:
+            engine.trip("store.append")
+        except ChaosError:
+            pass
+        try:
+            engine.trip("queue.claim")
+        except ChaosError:
+            pass
+        engine.torn("store.append", 100 + i)
+        engine.skew("queue.reclaim")
+    return list(engine.log)
+
+
+def test_replay_from_the_same_spec_is_bit_identical():
+    text = ("seed=7;site=store.append:kind=eio:p=0.3;"
+            "site=queue.*:kind=enospc:p=0.5:times=4;"
+            "site=store.append:kind=torn:p=0.4:frac=0.5;"
+            "site=queue.reclaim:kind=skew:p=0.2:skew=30")
+    log1 = _drive(ChaosEngine(ChaosSpec.parse(text)))
+    log2 = _drive(ChaosEngine(ChaosSpec.parse(text)))
+    assert log1 == log2 and log1  # identical AND non-trivial
+    # A different seed explores a different fault schedule.
+    other = _drive(ChaosEngine(ChaosSpec.parse(text.replace("seed=7",
+                                                            "seed=8"))))
+    assert other != log1
+
+
+def test_at_and_times_gates():
+    eng = ChaosEngine(ChaosSpec.parse("site=s:kind=eio:at=3"))
+    fired = []
+    for i in range(5):
+        try:
+            eng.trip("s")
+        except ChaosError as e:
+            fired.append((i, e.errno))
+    assert fired == [(2, errno.EIO)]  # only the 3rd call
+
+    eng = ChaosEngine(ChaosSpec.parse("site=s:kind=enospc:times=2"))
+    hits = 0
+    for _ in range(6):
+        try:
+            eng.trip("s")
+        except ChaosError:
+            hits += 1
+    assert hits == 2  # budget-bounded
+
+
+def test_module_hooks_are_noops_without_an_engine():
+    chaos.install(None)
+    chaos.trip("store.append")  # must not raise
+    assert chaos.torn("store.append", 100) is None
+    assert chaos.skew("queue.reclaim") == 0.0
+
+
+def test_component_installs_and_exports_to_env():
+    out = run_chaos_component(
+        {"spec": "site=store.append:kind=eio:at=1", "seed": 99,
+         "export": True}, None)
+    assert out["seed"] == 99
+    engine = chaos.current()
+    assert engine is not None and engine.spec.seed == 99
+    # The exported env replays the identical scenario in a fresh process.
+    exported = os.environ[chaos.ENV_VAR]
+    assert ChaosSpec.parse(exported) == engine.spec
+
+
+# ---------------------------------------------------------------------------
+# retry taxonomy + policy
+# ---------------------------------------------------------------------------
+
+def test_taxonomy_transient_vs_terminal():
+    assert is_transient(OSError(errno.EIO, "io"))
+    assert is_transient(OSError(errno.ENOSPC, "full"))
+    assert is_transient(ChaosError(errno.EIO, "s", 1))
+    # O_EXCL protocol signals must never be blind-retried.
+    assert not is_transient(FileExistsError(errno.EEXIST, "lease"))
+    assert not is_transient(FileNotFoundError(errno.ENOENT, "gone"))
+    assert not is_transient(PermissionError(errno.EACCES, "ro"))
+    assert not is_transient(ValueError("not I/O at all"))
+
+
+def test_call_with_retry_recovers_then_reports_counters():
+    retry_counters(reset=True)
+    attempts = []
+
+    def flaky():
+        attempts.append(1)
+        if len(attempts) < 3:
+            raise OSError(errno.EIO, "blip")
+        return "ok"
+
+    assert call_with_retry(flaky, label="t.flaky", sleep=lambda s: None) == "ok"
+    assert len(attempts) == 3
+    counters = retry_counters()
+    assert counters["t.flaky"] == {"calls": 1, "retries": 1, "exhausted": 0}
+
+
+def test_call_with_retry_terminal_raises_immediately():
+    attempts = []
+
+    def denied():
+        attempts.append(1)
+        raise PermissionError(errno.EACCES, "read-only store")
+
+    with pytest.raises(PermissionError):
+        call_with_retry(denied, label="t.denied", sleep=lambda s: None)
+    assert len(attempts) == 1  # no retry on terminal errors
+
+
+def test_call_with_retry_exhaustion_raises_last_transient():
+    retry_counters(reset=True)
+    policy = RetryPolicy(tries=3, base_s=0.0)
+
+    def sick():
+        raise OSError(errno.ENOSPC, "still full")
+
+    with pytest.raises(OSError) as exc:
+        call_with_retry(sick, label="t.sick", policy=policy,
+                        sleep=lambda s: None)
+    assert exc.value.errno == errno.ENOSPC
+    assert retry_counters()["t.sick"]["exhausted"] == 1
+
+
+def test_policy_delay_is_bounded_equal_jitter():
+    import random
+
+    policy = RetryPolicy(tries=5, base_s=0.1, factor=2.0, max_s=0.5)
+    rng = random.Random(0)
+    for attempt in range(8):
+        ceiling = min(0.5, 0.1 * 2 ** attempt)
+        for _ in range(20):
+            d = policy.delay(attempt, rng)
+            assert ceiling / 2.0 <= d <= ceiling
+
+
+# ---------------------------------------------------------------------------
+# injected faults against the real store / queue
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["dir", "jsonl"])
+def test_torn_store_write_is_retried_and_parity_holds(tmp_path, backend):
+    """A torn append (partial bytes then EIO) must be survived by the
+    store's bounded retry, and the surviving content must be canonically
+    identical to a fault-free run."""
+    clean = ResultStore(tmp_path / "clean", backend=backend)
+    ExecutionOrchestrator(inputs={"prefix": "p"}, harness=SpinHarness(iters=50),
+                          store=clean).run_collection(_specs(2))
+
+    _install("seed=1;site=store.append:kind=torn:at=1:frac=0.4")
+    faulty = ResultStore(tmp_path / "faulty", backend=backend)
+    ExecutionOrchestrator(inputs={"prefix": "p"}, harness=SpinHarness(iters=50),
+                          store=faulty).run_collection(_specs(2))
+    chaos.install(None)
+
+    assert len(faulty.query("p")) == 2
+    assert _canon(faulty, "p") == _canon(clean, "p")
+
+
+def test_enospc_on_claim_is_retried(tmp_path):
+    q = WorkQueue(tmp_path / "q").create(_payloads(1))
+    _install("site=queue.claim:kind=enospc:at=1")
+    claim = call_with_retry(lambda: q.claim_next("w1"),
+                            label="queue.claim", sleep=lambda s: None)
+    assert claim is not None and claim[0] == 0 and claim[2] == 1
+
+
+def test_persistent_eio_on_claim_surfaces_after_bounded_retries(tmp_path):
+    q = WorkQueue(tmp_path / "q").create(_payloads(1))
+    _install("site=queue.claim:kind=eio")  # unbounded: every call fails
+    with pytest.raises(OSError):
+        call_with_retry(lambda: q.claim_next("w1"),
+                        label="queue.claim", sleep=lambda s: None)
+
+
+def test_heartbeat_death_sets_lost_and_fences(tmp_path):
+    """Persistent heartbeat I/O failure must fence the cell (lost set), not
+    silently kill the thread while the worker keeps executing."""
+    from repro.core.workers import _Heartbeat
+
+    q = WorkQueue(tmp_path / "q").create(_payloads(1))
+    assert q.claim_next("w1") is not None
+    _install("site=queue.heartbeat:kind=eio")  # every heartbeat fails
+    beat = _Heartbeat(q, 0, 0.01)
+    beat.start()
+    assert beat.lost.wait(10.0), "heartbeat never fenced on persistent I/O failure"
+    beat.stop()
+    beat.join(timeout=5)
+    # The lease itself is still there — fencing is the worker's job.
+    assert q.lease_info(0) is not None
+
+
+def test_heartbeat_reports_vanished_lease_without_chaos(tmp_path):
+    from repro.core.workers import _Heartbeat
+
+    q = WorkQueue(tmp_path / "q").create(_payloads(1))
+    assert q.claim_next("w1") is not None
+    beat = _Heartbeat(q, 0, 0.01)
+    beat.start()
+    (tmp_path / "q" / "leases" / "00000.lease").unlink()
+    assert beat.lost.wait(10.0)
+    beat.stop()
+    beat.join(timeout=5)
+
+
+def test_skewed_clock_reclaim_charges_exactly_once(tmp_path):
+    """A reclaimer whose clock runs fast sees every live lease as expired —
+    the protocol must still charge the journal exactly once."""
+    q = WorkQueue(tmp_path / "q", lease_timeout=30.0).create(_payloads(1))
+    assert q.claim_next("w1") is not None
+    _install("site=queue.reclaim:kind=skew:skew=3600")
+    assert q.reclaim_expired() == [0]
+    chaos.install(None)
+    journal = q.reclaim_journal()
+    assert len(journal) == 1 and journal[0]["idx"] == 0
+    # No skew, no phantom second reclaim; the cell claims again at attempt 2.
+    assert q.reclaim_expired() == []
+    claim = q.claim_next("w2")
+    assert claim is not None and claim[2] == 2
+
+
+def test_store_append_failure_marks_store_failed(tmp_path):
+    """A store path that stays sick through every bounded retry must surface
+    as ``store_failed`` so the worker self-fences instead of recording a
+    terminal FAILED marker for a healthy cell."""
+    store = ResultStore(tmp_path / "s")
+    payload = cell_payload(_specs(1)[0], {"prefix": "sick"})
+    payload["task_uid"] = "sick:0"
+    _install("site=store.append:kind=eio")  # unbounded
+    result = _execute_payload(payload, store=store, harness=SpinHarness(iters=50),
+                              worker_id="host:1:w1", attempt=1,
+                              fence=lambda: True, resource_scope="thread")
+    chaos.install(None)
+    assert result["store_failed"] is True
+    assert len(store.query("sick")) == 0  # nothing half-landed
+
+
+def test_charged_release_exhausts_max_attempts_terminally(tmp_path):
+    """A cell whose every execution self-fences must terminate via the same
+    max-attempts budget as reclaim — bounded, not bouncing forever."""
+    q = WorkQueue(tmp_path / "q").create(_payloads(1))
+    for attempt in range(1, 4):
+        claim = q.claim_next(f"w{attempt}")
+        assert claim is not None and claim[2] == attempt
+        assert q.release(0, f"w{attempt}", attempt, charge=True, max_attempts=3)
+    journal = q.reclaim_journal()
+    assert len(journal) == 3 and all(e.get("released") for e in journal)
+    result = q.results()[0]
+    assert "self-fenced" in result["error"] and result["attempts"] == 3
+    assert q.claim_next("w4") is None  # terminally done
+
+
+def test_release_by_non_owner_is_refused(tmp_path):
+    q = WorkQueue(tmp_path / "q").create(_payloads(1))
+    assert q.claim_next("w1") is not None
+    assert q.release(0, "intruder", 1) is False
+    assert q.release(0, "w1", 99) is False     # wrong attempt = stale claim
+    assert q.lease_info(0)["worker"] == "w1"   # untouched
+    assert q.release(0, "w1", 1) is True       # the owner may release
+    assert q.lease_info(0) is None
+
+
+def test_broker_degraded_mode_reports_instead_of_crashing(tmp_path):
+    """An unusable queue root yields synthesized per-cell failures — a
+    broker embedded in the daemon must report a sick filesystem, not die."""
+    store = ResultStore(tmp_path / "s")
+    blocker = tmp_path / "not-a-dir"
+    blocker.write_text("file where the queue parent should be")
+    broker = CampaignBroker(store, workers=1,
+                            queue_root=blocker / "q")
+    payloads = _payloads(2)
+    for i, p in enumerate(payloads):
+        p["task_uid"] = f"deg:{i}"
+    results = broker.run(payloads, harness=SpinHarness(iters=50))
+    assert sorted(results) == [0, 1]
+    for idx, r in results.items():
+        assert r["readiness"] == 0 and "queue root unusable" in r["error"]
+        assert r["task_uid"] == f"deg:{idx}"
+
+
+# ---------------------------------------------------------------------------
+# concurrent reclaimers (two racing brokers)
+# ---------------------------------------------------------------------------
+
+def _racing_reclaimer(queue_root, barrier, out):
+    q = WorkQueue(queue_root, lease_timeout=0.2)
+    barrier.wait(timeout=30)
+    out.extend(q.reclaim_expired())
+
+
+@pytest.mark.parametrize("backend", ["dir", "jsonl"])
+def test_concurrent_reclaimers_charge_exactly_one_attempt(tmp_path, backend):
+    """Two independent reclaimers (the broker's monitor loop on two hosts)
+    race ``reclaim_expired`` over the same expired lease: the flock
+    arbitration must let exactly one win — one journal entry, one charged
+    attempt, and the subsequent retry both claims at attempt 2 and lands
+    exactly one store record."""
+    store = ResultStore(tmp_path / "s", backend=backend)
+    q = WorkQueue(tmp_path / "q", lease_timeout=0.2).create(
+        _payloads(1, prefix="race"))
+    assert q.claim_next("dead-worker") is not None
+    time.sleep(0.5)  # let the lease expire
+
+    mgr = mp.Manager()
+    out_a, out_b = mgr.list(), mgr.list()
+    barrier = mgr.Barrier(2)
+    procs = [
+        mp.Process(target=_racing_reclaimer,
+                   args=(str(tmp_path / "q"), barrier, out))
+        for out in (out_a, out_b)
+    ]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join(timeout=30)
+        assert p.exitcode == 0
+
+    # Exactly one reclaimer won the cell; the journal charged one attempt.
+    assert sorted(list(out_a) + list(out_b)) == [0]
+    journal = q.reclaim_journal()
+    assert len(journal) == 1 and journal[0]["worker"] == "dead-worker"
+
+    # No double-claim afterwards: one worker gets attempt 2, the other gets
+    # nothing, and exactly one report lands in the store.
+    claim = q.claim_next("retry-a")
+    assert claim is not None and claim[2] == 2
+    assert q.claim_next("retry-b") is None
+    payload = dict(claim[1])
+    result = _execute_payload(payload, store=store,
+                              harness=SpinHarness(iters=50),
+                              worker_id="host:1:retry-a", attempt=2,
+                              resource_scope="thread")
+    assert q.complete(0, result)
+    assert len(store.query("race")) == 1
+
+
+# ---------------------------------------------------------------------------
+# multi-host drain: python -m repro.core.workers
+# ---------------------------------------------------------------------------
+
+def _cli_env(host):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["EXACB_HOST"] = host
+    return env
+
+
+def _wait_for(pred, timeout, what):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        got = pred()
+        if got:
+            return got
+        time.sleep(0.05)
+    raise AssertionError(f"timed out waiting for {what}")
+
+
+@pytest.mark.slow
+def test_two_hosts_drain_one_campaign_with_provenance(tmp_path):
+    """The acceptance scenario: a broker-published queue drained by two
+    out-of-band ``python -m repro.core.workers`` processes with distinct
+    simulated host identities; per-host provenance must land in the lease
+    files, done markers, store reports, and the worker registry that
+    ``daemon-status`` renders."""
+    from repro.core.daemon import worker_liveness
+
+    store = ResultStore(tmp_path / "store")
+    sentinels = tmp_path / "sentinels"
+    specs = _specs(2)
+    payloads = [cell_payload(s, {"prefix": "mh"}, cell_index=i)
+                for i, s in enumerate(specs)]
+    broker = CampaignBroker(store, workers=2, name="mh", lease_timeout=10.0,
+                            keep_queue=True)
+    queue = broker.publish(
+        payloads,
+        harness=BlockingHarness(sentinel_dir=str(sentinels), timeout_s=60.0))
+    assert (broker.queue_root / "worker_config.json").exists()
+
+    def _spawn_host(host, label):
+        return subprocess.Popen(
+            [sys.executable, "-m", "repro.core.workers",
+             str(broker.queue_root), "--label", label],
+            env=_cli_env(host), cwd=str(REPO),
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+
+    # hostA claims cell 0 and blocks; only then does hostB join, so it can
+    # only claim cell 1 — both hosts deterministically do real work.
+    pa = _spawn_host("hostA", "wa")
+    pb = None
+    try:
+        _wait_for(lambda: next(iter(
+            sentinels.glob(f"started.{specs[0].cell}.*")), None),
+            30.0, "hostA to start cell 0")
+        pb = _spawn_host("hostB", "wb")
+        _wait_for(lambda: next(iter(
+            sentinels.glob(f"started.{specs[1].cell}.*")), None),
+            30.0, "hostB to start cell 1")
+        (sentinels / "release").write_text("go")
+        assert pa.wait(timeout=60) == 0
+        assert pb.wait(timeout=60) == 0
+    finally:
+        for p in (pa, pb):
+            if p is not None and p.poll() is None:
+                p.kill()
+                p.wait(timeout=10)
+
+    assert queue.finished()
+    results = queue.results()
+    assert host_of(results[0]["worker"]) == "hostA"
+    assert host_of(results[1]["worker"]) == "hostB"
+    assert results[0]["host"] == "hostA" and results[1]["host"] == "hostB"
+
+    # Store-level provenance: each report names the host that produced it.
+    by_host = {r.parameter["host"] for r in store.query("mh")}
+    assert by_host == {"hostA", "hostB"}
+    for r in store.query("mh"):
+        worker = r.parameter["worker"]
+        assert worker.count(":") == 2 and host_of(worker) == r.parameter["host"]
+
+    # Registry + daemon-status surface: both hosts, with liveness.
+    registry = queue.worker_registry(alive_within=3600)
+    assert {w["host"] for w in registry} == {"hostA", "hostB"}
+    live = worker_liveness(store.root)
+    assert set(live["hosts"]) == {"hostA", "hostB"}
+    assert all(h["workers"] == 1 for h in live["hosts"].values())
+
+    # Host is volatile for parity purposes: two runs on different hosts
+    # still canonicalize identically.
+    for r in store.query("mh"):
+        canon = accounting.strip_volatile(r.to_dict())
+        assert "host" not in canon["parameter"]
+
+
+def test_cli_without_published_config_exits_2(tmp_path):
+    from repro.core.workers import main as workers_main
+
+    assert workers_main([str(tmp_path / "nowhere")]) == 2
+
+
+def test_worker_identity_shape():
+    wid = worker_identity("w7")
+    host, pid, label = wid.split(":")
+    assert host == host_of(wid) and int(pid) == os.getpid() and label == "w7"
+    os.environ["EXACB_HOST"] = "simulated"
+    try:
+        assert host_of(worker_identity("x")) == "simulated"
+    finally:
+        os.environ.pop("EXACB_HOST", None)

@@ -417,6 +417,115 @@ include:
     assert cell_status["refresh_count"] == cell["refresh_count"]
 
 
+# ---------------------------------------------------------------------------
+# quarantine circuit-breaker
+# ---------------------------------------------------------------------------
+
+class _PoisonHarness(SpinHarness):
+    """Raises on every cell — models a persistently failing benchmark."""
+
+    def run(self, spec, injections=None):
+        raise RuntimeError(f"poisoned cell {spec.cell}")
+
+
+def _poison_doc(tmp_path, *, quarantine_after=2):
+    return _write_doc(tmp_path / "doc.yml", f"""\
+include:
+  - component: schedule@v1
+    inputs:
+      target_lag: 30
+      triggers: [lag]
+      quarantine_after: {quarantine_after}
+  - component: execution@v4
+    inputs:
+      prefix: "poison"
+      arch: "archA"
+      shape: "train_4k"
+      system: "sysA"
+""")
+
+
+def test_consecutive_failures_quarantine_the_cell(tmp_path):
+    store = ResultStore(tmp_path / "s")
+    doc = _poison_doc(tmp_path, quarantine_after=2)
+    d = _daemon(store, doc, harness=_PoisonHarness())
+    key = _key_for(d, "poison")
+
+    s1 = d.tick(now=1000.0)["documents"][doc]
+    assert s1["refreshed"] == [key]
+    cell_st = d.state["documents"][doc]["cells"][key]
+    assert cell_st["fail_streak"] == 1 and "quarantined" not in cell_st
+
+    s2 = d.tick(now=1040.0)["documents"][doc]  # aged past target_lag
+    assert s2["refreshed"] == [key]
+    cell_st = d.state["documents"][doc]["cells"][key]
+    assert cell_st["fail_streak"] == 2
+    assert "poisoned cell" in cell_st["quarantined"]["reason"]
+    assert len(cell_st["history"]) == 2
+
+    # Parked: the cell is never stale again, however far it ages.
+    s3 = d.tick(now=9000.0)["documents"][doc]
+    assert s3["stale"] == {} and s3["refreshed"] == []
+    assert s3["quarantined"] == [key]
+    assert key not in s3["fresh"]
+
+    # Operator clears it -> eligible again on the very next tick.
+    assert d.clear_quarantine() == [key]
+    s4 = d.tick(now=9100.0)["documents"][doc]
+    assert s4["refreshed"] == [key]
+    # Still failing, streak restarts from the cleared baseline.
+    assert d.state["documents"][doc]["cells"][key]["fail_streak"] == 1
+
+
+def test_quarantine_zero_disables_the_breaker(tmp_path):
+    store = ResultStore(tmp_path / "s")
+    doc = _poison_doc(tmp_path, quarantine_after=0)
+    d = _daemon(store, doc, harness=_PoisonHarness())
+    key = _key_for(d, "poison")
+    for i in range(5):
+        d.tick(now=1000.0 + 40.0 * i)
+    cell_st = d.state["documents"][doc]["cells"][key]
+    assert cell_st["fail_streak"] == 5 and "quarantined" not in cell_st
+    # History stays bounded even without quarantine.
+    assert len(cell_st["history"]) <= 5
+
+
+def test_success_resets_streak_and_lifts_nothing(tmp_path):
+    store = ResultStore(tmp_path / "s")
+    doc = _poison_doc(tmp_path, quarantine_after=3)
+    d = _daemon(store, doc, harness=_PoisonHarness())
+    key = _key_for(d, "poison")
+    d.tick(now=1000.0)
+    assert d.state["documents"][doc]["cells"][key]["fail_streak"] == 1
+    # The cell recovers (harness fixed in place): streak resets to 0.
+    d.harness = SpinHarness(iters=50)
+    d.tick(now=1040.0)
+    cell_st = d.state["documents"][doc]["cells"][key]
+    assert cell_st["fail_streak"] == 0
+    assert "quarantined" not in cell_st and "history" not in cell_st
+
+
+def test_daemon_status_surfaces_quarantine_workers_and_retries(tmp_path):
+    store = ResultStore(tmp_path / "s")
+    doc = _poison_doc(tmp_path, quarantine_after=2)
+    d = _daemon(store, doc, harness=_PoisonHarness())
+    key = _key_for(d, "poison")
+    d.tick(now=1000.0)
+    d.tick(now=1040.0)
+
+    status = daemon_status(store, [doc], now=2000.0)
+    (cell,) = status["documents"][doc]["cells"]
+    assert cell["quarantined"] and cell["due"] is False
+    assert cell["fail_streak"] == 2 and len(cell["history"]) == 2
+    assert status["documents"][doc]["quarantined"] == [key]
+    # New top-level robustness sections are always present.
+    assert "hosts" in status["workers"]
+    assert isinstance(status["retry_counters"], dict)
+
+    text = render_status(status)
+    assert "QUARANTINED" in text and "poisoned cell" in text
+
+
 def test_max_ticks_exits_cleanly_without_signals(tmp_path):
     store = ResultStore(tmp_path / "s")
     doc = _two_prefix_doc(tmp_path, target_lag=3600)

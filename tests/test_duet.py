@@ -531,7 +531,8 @@ def test_sigkill_mid_pair_reclaimed_exactly_once(tmp_path, backend):
                 p.terminate()
 
     result = queue.results()[0]
-    assert result["worker"] == "w2" and result["attempts"] == 2
+    # worker_main expands a bare label to the full host:pid:label identity.
+    assert result["worker"].endswith(":w2") and result["attempts"] == 2
     assert result["duet"]["adopted"] == 2  # round 0's pair, not re-measured
     reports = store.query("crash")
     assert len(reports) == 4  # exactly one report per (round, role)

@@ -321,7 +321,8 @@ def test_sigkill_mid_cell_reclaimed_exactly_once(tmp_path, backend):
 
     result = queue.results()[0]
     assert result["readiness"] == int(Readiness.REPRODUCIBLE)
-    assert result["worker"] == "w2" and result["attempts"] == 2
+    # worker_main expands a bare label to the full host:pid:label identity.
+    assert result["worker"].endswith(":w2") and result["attempts"] == 2
     assert len(queue.reclaim_journal()) == 1  # reclaimed exactly once
     # Exactly one persisted report for the cell — the killed attempt never
     # reached its store append, and the retry appended exactly once.
@@ -393,10 +394,10 @@ def test_sigstop_paused_worker_is_fenced_exactly_one_store_entry(tmp_path, backe
 
     # Exactly one done marker (the retry's) and exactly one store entry.
     result = queue.results()[0]
-    assert result["worker"] == "w2" and result["attempts"] == 2
+    assert result["worker"].endswith(":w2") and result["attempts"] == 2
     reports = store.query("pause")
     assert len(reports) == 1
-    assert reports[0].parameter["worker"] == "w2"
+    assert reports[0].parameter["worker"].endswith(":w2")
     assert reports[0].parameter["task_uid"] == "pause:0"
 
     # Pre-fix repro: the resumed worker's append was an unconditional
@@ -413,7 +414,7 @@ def test_sigstop_paused_worker_is_fenced_exactly_one_store_entry(tmp_path, backe
     # Defense-in-depth for historical stores that already carry such a
     # duplicate: every reader keeps the lowest-seq record.
     adopted = _find_adopted(store, "pause", "pause:0")
-    assert adopted is not None and adopted.parameter["worker"] == "w2"
+    assert adopted is not None and adopted.parameter["worker"].endswith(":w2")
 
 
 def test_corrupt_task_payload_fails_terminally_without_leaking_lease(tmp_path):
@@ -482,7 +483,7 @@ def test_idle_worker_outlives_slow_peer_while_campaign_progresses(tmp_path):
     _wait_for(q.finished, 15.0, "idle worker to pick up the freed cell")
     t.join(timeout=10)
     assert not t.is_alive()
-    assert q.results()[2]["worker"] == "w-idle"
+    assert q.results()[2]["worker"].endswith(":w-idle")
     assert len(store.query("idle")) == 1  # only the cell w-idle executed
 
 
