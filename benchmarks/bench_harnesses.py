@@ -1,0 +1,79 @@
+"""Harness-family + autotune-plane benchmark.
+
+Measures the pieces the autotuning loop pays for on every sweep point:
+
+* a ``KernelHarness`` flash_attention cell at two block configs (interpret
+  mode — relative, not absolute, numbers on CPU), reporting per-call
+  latency and which config wins at this tiny shape;
+* the ``AutotuneCache`` lookup path (what every ``ops.py`` call with
+  unresolved blocks pays when ``EXACB_AUTOTUNE_CACHE`` is set) — must stay
+  in the microsecond range since it sits in front of kernel dispatch;
+* Poisson arrival generation for the serve load path.
+
+    PYTHONPATH=src python -m benchmarks.bench_harnesses
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict
+
+from benchmarks.common import emit
+
+CACHE_LOOKUPS = 2000
+ARRIVAL_CALLS = 200
+
+
+def run() -> Dict[str, float]:
+    from repro.core import fingerprint
+    from repro.core.autotune import AutotuneCache, cached_blocks, reset_runtime_caches
+    from repro.core.harness import BenchmarkSpec, Injections
+    from repro.harnesses.kernel import KernelHarness
+    from repro.harnesses.serve import poisson_arrivals
+
+    derived: Dict[str, float] = {}
+
+    harness = KernelHarness(
+        kernel="flash_attention", batch=1, heads=2, seq=64, head_dim=8,
+        calls=2, warmup=1, interpret=True, use_cache=False)
+    spec = BenchmarkSpec(arch="kernel", shape="fa_bench", system="local")
+    latencies: Dict[int, float] = {}
+    for bq in (16, 64):
+        rep = harness.run(spec, Injections(overrides={"block_q": bq, "block_k": bq}))
+        lat = float(rep.data[-1].metrics["kernel_latency_s"])
+        latencies[bq] = lat
+        emit(f"harness.fa_block{bq}", lat * 1e6, "kernel_latency")
+        derived[f"fa_block{bq}_us"] = round(lat * 1e6, 1)
+    derived["winner_block"] = min(latencies, key=latencies.get)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        path = Path(tmp) / "autotune_cache.json"
+        fp_key = fingerprint.key(fingerprint.capture())
+        AutotuneCache(path).put(
+            "flash_attention", "B1.H2.T64.D8", "float32", fp_key,
+            {"block_q": 16, "block_k": 16})
+        reset_runtime_caches()
+        assert cached_blocks("flash_attention", "B1.H2.T64.D8", "float32",
+                             path=path) is not None
+        t0 = time.perf_counter()
+        for _ in range(CACHE_LOOKUPS):
+            cached_blocks("flash_attention", "B1.H2.T64.D8", "float32", path=path)
+        per = (time.perf_counter() - t0) / CACHE_LOOKUPS
+        emit("harness.cache_lookup", per * 1e6, f"{CACHE_LOOKUPS} warm lookups")
+        derived["cache_lookup_us"] = round(per * 1e6, 2)
+
+    t0 = time.perf_counter()
+    for i in range(ARRIVAL_CALLS):
+        poisson_arrivals(64, 50.0, seed=i)
+    per = (time.perf_counter() - t0) / ARRIVAL_CALLS
+    emit("harness.poisson_64", per * 1e6, "64-request arrival schedule")
+    derived["poisson_64_us"] = round(per * 1e6, 2)
+
+    return derived
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    print(run())

@@ -45,6 +45,7 @@ def main(argv=None) -> None:
         bench_analysis,
         bench_energy,
         bench_feature_injection,
+        bench_harnesses,
         bench_machine_comparison,
         bench_regression,
         bench_roofline,
@@ -73,9 +74,17 @@ def main(argv=None) -> None:
         ("workers_plane", bench_workers.run),
         ("regression_gate", bench_regression.run),
         ("analysis_columnar", bench_analysis.run),
+        ("harness_family", bench_harnesses.run),
     ]
     if args.only:
+        known = [n for n, _ in benches]
         benches = [(n, f) for n, f in benches if args.only in n]
+        if not benches:
+            # An unmatched filter printing an empty (all-green) summary is a
+            # silent CI hole — fail loudly instead.
+            print(f"error: --only {args.only!r} matches no bench; "
+                  "known: " + ", ".join(known), file=sys.stderr)
+            sys.exit(2)
 
     print("name,us_per_call,derived")
     failures = 0

@@ -219,6 +219,36 @@ def main(argv=None) -> int:
     sub.add_parser("components",
                    help="list every registered component with its schema")
 
+    aut = sub.add_parser(
+        "autotune",
+        help="sweep a pallas kernel's block grid, promote the winner into "
+             "the autotune cache and as a pinned latency baseline")
+    aut.add_argument("--kernel", required=True,
+                     choices=("flash_attention", "rglru", "ssd"))
+    aut.add_argument("--store", default="exacb_data")
+    aut.add_argument("--store-backend", default="dir", choices=("dir", "jsonl"))
+    aut.add_argument("--prefix", default=None,
+                     help="store prefix (default: autotune.<kernel>)")
+    for knob in ("block-q", "block-k", "chunk", "block-w"):
+        aut.add_argument(f"--{knob}", default=None,
+                         help=f"comma-separated {knob.replace('-', '_')} "
+                              "candidates")
+    for dim, dv in (("batch", 1), ("heads", 2), ("seq", 128),
+                    ("head-dim", 16), ("width", 64), ("state", 16)):
+        aut.add_argument(f"--{dim}", type=int, default=dv)
+    aut.add_argument("--dtype", default="float32")
+    aut.add_argument("--calls", type=int, default=3)
+    aut.add_argument("--warmup", type=int, default=1)
+    aut.add_argument("--confirm", type=int, default=3)
+    aut.add_argument("--cache", default="",
+                     help="cache file (default: <store>/autotune_cache.json)")
+    aut.add_argument("--interpret", action="store_true",
+                     help="force pallas interpret mode")
+    aut.add_argument("--no-baseline", action="store_true",
+                     help="skip pinning the winner as the gate baseline")
+    aut.add_argument("--force", action="store_true",
+                     help="re-sweep even on a cache hit")
+
     def _daemon_common(p):
         p.add_argument("documents", nargs="+",
                        help="pipeline documents to watch (schedule@v1 "
@@ -259,6 +289,12 @@ def main(argv=None) -> int:
                      help="lift quarantine before reporting: pass a cell key "
                           "to clear one cell, or no value to clear every "
                           "quarantined cell")
+    dst.add_argument("--suspend", default=None, metavar="DOC",
+                     help="park one document's schedule (path or basename): "
+                          "persisted in the state file and skipped by every "
+                          "staleness scan until resumed")
+    dst.add_argument("--resume", default=None, metavar="DOC",
+                     help="lift a suspension set with --suspend")
 
     args = ap.parse_args(argv)
     if args.cmd == "run":
@@ -298,21 +334,57 @@ def main(argv=None) -> int:
             print(f"daemon: {e}", file=sys.stderr)
             return 1
         return daemon.run()
+    if args.cmd == "autotune":
+        import sys
+
+        def _ints(s):
+            return [int(v) for v in s.split(",") if v.strip()] if s else []
+
+        inputs = {
+            "kernel": args.kernel,
+            "prefix": args.prefix or f"autotune.{args.kernel}",
+            "block_q": _ints(args.block_q), "block_k": _ints(args.block_k),
+            "chunk": _ints(args.chunk), "block_w": _ints(args.block_w),
+            "batch": args.batch, "heads": args.heads, "seq": args.seq,
+            "head_dim": args.head_dim, "width": args.width,
+            "state": args.state, "dtype": args.dtype,
+            "calls": args.calls, "warmup": args.warmup,
+            "confirm": args.confirm, "cache": args.cache,
+            "baseline": not args.no_baseline, "force": args.force,
+        }
+        if args.interpret:
+            inputs["interpret"] = True
+        try:
+            out = Campaign(args.store, backend=args.store_backend).component(
+                "autotune", 1, inputs)
+        except PipelineError as e:
+            print(f"autotune: {e}", file=sys.stderr)
+            return 1
+        print(json.dumps(out, indent=2, default=str))
+        return 1 if out.get("error") else 0
     if args.cmd == "daemon-status":
         from repro.core.daemon import CampaignDaemon, daemon_status, render_status
 
         try:
-            if args.clear_quarantine is not None:
+            wants_daemon = (args.clear_quarantine is not None
+                            or args.suspend or args.resume)
+            if wants_daemon:
                 daemon = CampaignDaemon(
                     args.store, args.documents,
                     backend=args.store_backend,
                     state_path=args.state,
                     target_lag=args.target_lag,
                 )
-                cleared = daemon.clear_quarantine(
-                    args.clear_quarantine or None)
-                for key in cleared:
-                    print(f"cleared quarantine: {key}")
+                if args.clear_quarantine is not None:
+                    for key in daemon.clear_quarantine(
+                            args.clear_quarantine or None):
+                        print(f"cleared quarantine: {key}")
+                if args.suspend:
+                    for path in daemon.suspend(args.suspend):
+                        print(f"suspended: {path}")
+                if args.resume:
+                    for path in daemon.resume(args.resume):
+                        print(f"resumed: {path}")
             status = daemon_status(
                 args.store, args.documents,
                 backend=args.store_backend,

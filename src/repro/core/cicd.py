@@ -201,6 +201,12 @@ def _from_doc(doc: Dict[str, Any], registry: ComponentRegistry) -> List[Componen
 
 _PRODUCERS = ("execution", "feature-injection")
 
+# Components whose reports land under their `prefix` input — the edge set
+# the DAG orders consumers behind.  `autotune` writes sweep cells + a pinned
+# baseline but is not broker-drainable (its sweep loop IS the component),
+# so it is a prefix writer without being a _PRODUCER.
+_PREFIX_WRITERS = _PRODUCERS + ("autotune",)
+
 
 def _consumed_prefixes(call: ComponentCall) -> List[str]:
     """Store prefixes a component reads — its upstream edges."""
@@ -237,7 +243,7 @@ def component_dag(calls: List[ComponentCall]) -> List[List[int]]:
             mine = sorted({j for p in _consumed_prefixes(call)
                            for j in produced.get(p, [])})
         deps.append(mine)
-        if call.name in _PRODUCERS:
+        if call.name in _PREFIX_WRITERS:
             # Mirror ExecutionOrchestrator.prefix: no explicit input means
             # the cell records under "default" — still a produced prefix.
             produced.setdefault(call.inputs.get("prefix") or "default", []).append(i)
@@ -341,8 +347,8 @@ def _run_pipeline_process(
     """Process-mode pipeline dispatch: producers drain through the broker's
     worker pool (one queue cell per execution / per sweep point), consumers
     run in-process afterwards — the broker barrier subsumes every
-    producer→consumer DAG edge, and consumer→consumer edges don't exist
-    (analyses read only producer prefixes)."""
+    producer→consumer DAG edge; consumer→consumer edges (an analysis over a
+    prefix an in-process `autotune` sweep writes) are kept."""
     from repro.core import workers as workers_mod  # lazy: heavy import chain
 
     summaries: List[Optional[Dict[str, Any]]] = [None] * len(calls)
@@ -396,7 +402,8 @@ def _run_pipeline_process(
                 registry=registry,
             ),
             # Producer edges are already satisfied by the broker barrier;
-            # only consumer→consumer edges (none today) survive.
+            # only consumer→consumer edges survive (e.g. a gate reading the
+            # prefix an in-process `autotune` sweep writes).
             deps=frozenset(f"{j:04d}.{calls[j].name}" for j in deps[ci]
                            if j in set(consumer_ids)),
             meta=calls[ci].ref,

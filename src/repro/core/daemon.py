@@ -332,6 +332,8 @@ class CampaignDaemon:
     def _stale_cells(self, doc: _Document, now: float) -> Dict[str, str]:
         """{cell_key: reason} for every producer cell due for refresh."""
         st = self._doc_state(doc)
+        if st.get("suspended"):
+            return {}  # parked documents are never stale (tick skips them too)
         cells_st = st["cells"]
         recovered: Optional[Dict[str, float]] = None
         watch_advanced: List[str] = []
@@ -481,6 +483,42 @@ class CampaignDaemon:
             self.save_state()
         return cleared
 
+    # ------------------------------------------------------ suspend/resume
+    def _match_documents(self, doc: str) -> List[_Document]:
+        return [d for d in self.documents
+                if d.path == doc or Path(d.path).name == doc]
+
+    def suspend(self, doc: str) -> List[str]:
+        """Park one document's schedule (matched by path or basename):
+        persisted in the state file and skipped by every staleness scan
+        until :meth:`resume` — the service keeps ticking the rest.
+        Returns the suspended paths; unknown documents are an error, not a
+        silent no-op."""
+        matches = self._match_documents(doc)
+        if not matches:
+            known = ", ".join(d.path for d in self.documents)
+            raise PipelineError(
+                f"no registered document matches {doc!r}; known: {known}")
+        out: List[str] = []
+        for d in matches:
+            self._doc_state(d)["suspended"] = {"since": time.time()}
+            out.append(d.path)
+        self.save_state()
+        return out
+
+    def resume(self, doc: str) -> List[str]:
+        """Lift a :meth:`suspend`; returns the paths actually resumed."""
+        matches = self._match_documents(doc)
+        if not matches:
+            known = ", ".join(d.path for d in self.documents)
+            raise PipelineError(
+                f"no registered document matches {doc!r}; known: {known}")
+        out = [d.path for d in matches
+               if self._doc_state(d).pop("suspended", None) is not None]
+        if out:
+            self.save_state()
+        return out
+
     def _run_consumers(
         self, doc: _Document, due: List[Tuple[str, Any, Dict[str, int]]],
         now: float,
@@ -518,6 +556,23 @@ class CampaignDaemon:
         for doc in self.documents:
             if self._stop.is_set():
                 break
+            st = self._doc_state(doc)
+            if st.get("suspended"):
+                # Parked by the operator: no staleness scan, no refreshes,
+                # no consumers — the document sits out ticks (and its lag
+                # grows) until `daemon-status --resume` lifts it.
+                summary["documents"][doc.path] = {
+                    "cells": len(doc.cells),
+                    "suspended": True,
+                    "stale": {},
+                    "refreshed": [],
+                    "fresh": [],
+                    "quarantined": sorted(
+                        k for k, c in st["cells"].items()
+                        if c.get("quarantined")),
+                    "consumers_run": [],
+                }
+                continue
             stale = self._stale_cells(doc, now)
             refreshed = self._refresh_cells(doc, stale, now)
             # Watch marks advance only once acted on, so a missed tick never
@@ -705,6 +760,7 @@ def daemon_status(
         policy = SchedulePolicy.from_calls(calls, target_lag=target_lag)
         doc = _decompose(path, calls, policy)
         doc_st = state.get("documents", {}).get(path, {})
+        suspended = doc_st.get("suspended")
         cells_st = doc_st.get("cells", {})
         cells = []
         for key in sorted(doc.cells):
@@ -727,8 +783,9 @@ def daemon_status(
                 "last_refresh": last,
                 "lag_s": lag,
                 "next_due": next_due,
-                # A quarantined cell is parked, not due — that is the point.
-                "due": (not quarantined
+                # A quarantined cell is parked, not due — that is the
+                # point.  Likewise every cell of a suspended document.
+                "due": (not quarantined and not suspended
                         and (lag is None or lag > policy.target_lag)),
                 "refresh_count": int(st.get("refresh_count", 0)),
                 "last_error": st.get("last_error"),
@@ -740,6 +797,7 @@ def daemon_status(
             "target_lag": policy.target_lag,
             "triggers": list(policy.triggers),
             "last_tick": doc_st.get("last_tick"),
+            "suspended": suspended,
             "quarantined": [c["key"] for c in cells if c["quarantined"]],
             "cells": cells,
             "consumers": {
@@ -772,6 +830,12 @@ def render_status(status: Dict[str, Any]) -> str:
     for path, doc in status["documents"].items():
         lines.append(f"\n{path}  target_lag={doc['target_lag']:.0f}s "
                      f"triggers={','.join(doc['triggers'])}")
+        if doc.get("suspended"):
+            since = doc["suspended"].get("since")
+            when = f" since {time.strftime('%H:%M:%S', time.localtime(since))}" \
+                if since else ""
+            lines.append(f"  SUSPENDED{when} — skipped by staleness scans "
+                         f"(resume with --resume)")
         for c in doc["cells"]:
             lag = "never" if c["lag_s"] is None else f"{c['lag_s']:.1f}s"
             if c.get("quarantined"):

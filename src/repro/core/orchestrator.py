@@ -25,6 +25,7 @@ import uuid
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core import accounting, analysis
+from repro.core import autotune as autotune_mod
 from repro.core import chaos as chaos_mod
 from repro.core import duet as duet_mod
 from repro.core import fingerprint as fingerprint_mod
@@ -78,6 +79,10 @@ _CELL_INPUTS = (
               choices=("none", "runnable", "instrumented", "reproducible"),
               help="readiness level the cell demands; negotiated against "
                    "the harness capability declaration before dispatch"),
+    InputSpec("harness", str,
+              help="named workload harness (exec|dryrun|kernel|serve|train); "
+                   "configured via harness.<kwarg> inputs, overrides the "
+                   "campaign-level harness for this component"),
     PARALLELISM,
     WORKERS,
     WORKER_MODE,
@@ -95,6 +100,7 @@ _DUET_INPUTS = (
 
 EXECUTION_SCHEMA = ComponentSchema(
     "execution", 4, _CELL_INPUTS + _DUET_INPUTS,
+    open_namespaces=("harness",),
     description="run one benchmark cell through a harness with failure isolation",
 )
 
@@ -115,6 +121,7 @@ FEATURE_INJECTION_SCHEMA = ComponentSchema(
         InputSpec("values", list, wrap_scalar=True,
                   help="sweep points for env_knob / override_knob"),
     ),
+    open_namespaces=("harness",),
     description="re-run a frozen benchmark with an injected feature",
 )
 
@@ -725,9 +732,19 @@ def _cell_summary(name: str, spec: BenchmarkSpec, res: CellResult) -> Dict[str, 
     }
 
 
+def _harness_for(inputs: ComponentInputs, ctx: ComponentContext):
+    """Document-declared harness (``harness:`` + ``harness.<kwarg>`` inputs)
+    wins over the campaign-level harness/factory — a pipeline can mix
+    kernel, serve, and model cells without per-call wiring."""
+    from repro import harnesses as harness_families
+
+    declared = harness_families.from_inputs(inputs)
+    return declared if declared is not None else ctx.harness_for(inputs)
+
+
 def _run_execution(inputs: ComponentInputs, ctx: ComponentContext) -> Dict[str, Any]:
     ex = ExecutionOrchestrator(
-        inputs=inputs, harness=ctx.harness_for(inputs), store=ctx.store)
+        inputs=inputs, harness=_harness_for(inputs, ctx), store=ctx.store)
     spec = spec_from_inputs(inputs)
     if bool(inputs.get("duet")):
         results = ex.run_duet(spec)
@@ -753,7 +770,7 @@ def _injections_from_inputs(inputs: ComponentInputs) -> Injections:
 
 def _run_feature_injection(inputs: ComponentInputs, ctx: ComponentContext) -> Dict[str, Any]:
     ex = ExecutionOrchestrator(
-        inputs=inputs, harness=ctx.harness_for(inputs), store=ctx.store)
+        inputs=inputs, harness=_harness_for(inputs, ctx), store=ctx.store)
     fi = FeatureInjectionOrchestrator(execution=ex, inputs=inputs)
     spec = spec_from_inputs(inputs)
     values = inputs.get("values")
@@ -881,6 +898,7 @@ def register_components(registry: ComponentRegistry) -> ComponentRegistry:
     registry.register(CAMPAIGN_REPORT_SCHEMA, _run_campaign_report)
     registry.register(SCHEDULE_SCHEMA, _run_schedule)
     registry.register(chaos_mod.CHAOS_SCHEMA, chaos_mod.run_chaos_component)
+    registry.register(autotune_mod.AUTOTUNE_SCHEMA, autotune_mod.run_autotune)
     for name in ("execution", "feature-injection", "time-series",
                  "machine-comparison", "scalability"):
         registry.register_migration(name, 3, 4, _migrate_cell_vocabulary)

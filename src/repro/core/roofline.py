@@ -24,9 +24,29 @@ import dataclasses
 from typing import Any, Dict, Optional
 
 from repro.distributed.hlo import HloCost
-from repro.hardware import SystemSpec
+from repro.hardware import ChipSpec, SystemSpec
 from repro.models import params as MP
 from repro.models.config import ModelConfig
+
+
+def kernel_terms(flops: float, bytes_moved: float, chip: ChipSpec) -> Dict[str, Any]:
+    """Single-kernel roofline terms on a reference chip.
+
+    The autotune sweep classifies each block-config point with the same
+    two-term vocabulary the cell-level analysis uses — but from analytic
+    kernel counts (one device, no collectives) rather than the HLO cost
+    model, since interpret-mode HLO says nothing about the kernel's math.
+    """
+    t_c = flops / chip.peak_flops_bf16
+    t_m = bytes_moved / chip.hbm_bw
+    return {
+        "t_compute": t_c,
+        "t_memory": t_m,
+        "bound_s": max(t_c, t_m),
+        "dominant": "compute" if t_c >= t_m else "memory",
+        "intensity_flops_per_byte": flops / bytes_moved if bytes_moved else 0.0,
+        "ridge_flops_per_byte": chip.peak_flops_bf16 / chip.hbm_bw,
+    }
 
 
 @dataclasses.dataclass

@@ -349,14 +349,25 @@ def _execute_payload(
                     "report": adopted.to_dict(),
                     "adopted": True,
                 }
-        tagged = _TaggingHarness(harness, {
+        # A payload may declare its own harness (`harness:` + `harness.*`
+        # inputs travel with it) — the document's choice beats the worker's
+        # campaign-level default, same precedence as thread mode.
+        from repro import harnesses as harness_families
+
+        declared = harness_families.from_inputs(raw_inputs)
+        cell_harness = declared if declared is not None else harness
+        tagged = _TaggingHarness(cell_harness, {
             "task_uid": task_uid, "worker": worker_id,
             "host": host_of(worker_id), "attempt": attempt})
         # Payloads may originate from a component with a wider schema
         # (feature-injection sweep points); the worker always executes
-        # through the execution orchestrator, so keep only its inputs.
-        allowed = {s.name for s in ExecutionOrchestrator.schema.inputs}
-        inputs = {k: v for k, v in raw_inputs.items() if k in allowed}
+        # through the execution orchestrator, so keep only its inputs —
+        # plus dotted keys in its open namespaces (harness.* kwargs).
+        schema = ExecutionOrchestrator.schema
+        allowed = {s.name for s in schema.inputs}
+        inputs = {k: v for k, v in raw_inputs.items()
+                  if k in allowed
+                  or ("." in k and k.split(".", 1)[0] in schema.open_namespaces)}
         ex = ExecutionOrchestrator(
             inputs=inputs,
             harness=tagged,

@@ -1,0 +1,74 @@
+"""Real-workload harness family (kernel / serve / train).
+
+Pipeline documents pick a harness *by name* — a scalar ``harness`` input
+plus ``harness.<kwarg>`` inputs in the open ``harness`` namespace:
+
+.. code-block:: yaml
+
+    - component: execution@v4
+      inputs:
+        harness: "kernel"
+        harness.kernel: "flash_attention"
+        harness.seq: 128
+
+Names map to spawn-safe factories, so a document-declared harness works
+identically in thread mode and under process workers: the orchestrator
+resolves it in-process, the worker resolves the same (name, kwargs) pair
+from the payload it received.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Any, Dict, Mapping, Optional
+
+from repro.core.component import PipelineError
+from repro.core.harness import Harness
+
+#: name -> "module:factory"; every factory accepts only plain-data kwargs.
+FACTORIES: Dict[str, str] = {
+    "exec": "repro.core.harness:ExecHarness",
+    "dryrun": "repro.core.dryrun_harness:DryRunHarness",
+    "kernel": "repro.harnesses.kernel:KernelHarness",
+    "serve": "repro.harnesses.serve:ServeHarness",
+    "train": "repro.harnesses.train:TrainHarness",
+}
+
+NAMESPACE = "harness"
+
+
+def resolve(name: str, **kwargs: Any) -> Harness:
+    """Build the named harness; unknown names and kwargs fail loudly."""
+    ref = FACTORIES.get(name)
+    if ref is None:
+        raise PipelineError(
+            f"unknown harness {name!r}; known: {', '.join(sorted(FACTORIES))}")
+    module, _, attr = ref.partition(":")
+    factory = getattr(importlib.import_module(module), attr)
+    try:
+        return factory(**kwargs)
+    except TypeError as e:
+        raise PipelineError(f"harness {name!r}: {e}") from e
+
+
+def harness_kwargs(inputs: Mapping[str, Any]) -> Dict[str, Any]:
+    """Extract ``harness.<kwarg>`` open-namespace inputs as ctor kwargs."""
+    prefix = NAMESPACE + "."
+    return {
+        k[len(prefix):]: v
+        for k, v in dict(inputs).items()
+        if isinstance(k, str) and k.startswith(prefix)
+    }
+
+
+def from_inputs(inputs: Mapping[str, Any]) -> Optional[Harness]:
+    """Harness declared by a component's inputs, or None.
+
+    Works on both validated ``ComponentInputs`` (orchestrators) and the
+    plain payload dicts process workers receive.
+    """
+    d = dict(inputs)
+    name = d.get("harness")
+    if not name:
+        return None
+    return resolve(str(name), **harness_kwargs(d))

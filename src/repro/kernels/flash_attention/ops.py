@@ -22,14 +22,54 @@ def _on_tpu() -> bool:
     return jax.devices()[0].platform == "tpu"
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("causal", "window", "scale", "block_q", "block_k", "interpret"),
-)
+def _autotuned_blocks(q_shape, dtype) -> dict:
+    """Promoted (block_q, block_k) for this shape on this hardware, if the
+    autotune cache is enabled (``EXACB_AUTOTUNE_CACHE``) and holds a
+    matching entry.  Import stays local: a bare kernel call must not pull
+    the benchmarking core unless the cache is actually switched on."""
+    import os
+
+    if not os.environ.get("EXACB_AUTOTUNE_CACHE"):
+        return {}
+    from repro.core import autotune
+
+    B, H, T, D = q_shape
+    key = f"B{B}.H{H}.T{T}.D{D}"
+    return autotune.cached_blocks("flash_attention", key, str(dtype)) or {}
+
+
 def flash_attention(
     q: jax.Array,   # (B, Hq, T, D)
     k: jax.Array,   # (B, Hkv, T, D)
     v: jax.Array,   # (B, Hkv, T, Dv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_q: Optional[int] = None,
+    block_k: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Block resolution happens *outside* the jit: explicit arguments win,
+    then the autotune cache, then the shipped 512/512 defaults — so a
+    promoted config changes behavior without any call-site edits."""
+    if block_q is None or block_k is None:
+        tuned = _autotuned_blocks(q.shape, q.dtype)
+        block_q = int(tuned.get("block_q", 512)) if block_q is None else block_q
+        block_k = int(tuned.get("block_k", 512)) if block_k is None else block_k
+    return _flash_attention_jit(
+        q, k, v, causal=causal, window=window, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k", "interpret"),
+)
+def _flash_attention_jit(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
     *,
     causal: bool = True,
     window: Optional[int] = None,

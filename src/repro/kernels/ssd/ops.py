@@ -15,13 +15,43 @@ def _on_tpu() -> bool:
     return jax.devices()[0].platform == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _autotuned_blocks(x_shape, n_state, dtype) -> dict:
+    """Promoted chunk size from the autotune cache, when enabled."""
+    import os
+
+    if not os.environ.get("EXACB_AUTOTUNE_CACHE"):
+        return {}
+    from repro.core import autotune
+
+    B, T, H, P = x_shape
+    key = f"B{B}.T{T}.H{H}.P{P}.N{n_state}"
+    return autotune.cached_blocks("ssd", key, str(dtype)) or {}
+
+
 def ssd_scan(
     x: jax.Array,    # (B, T, H, P)
     dt: jax.Array,   # (B, T, H)  f32, post-softplus
     A: jax.Array,    # (H,)       f32, negative
     Bm: jax.Array,   # (B, T, G, N)
     Cm: jax.Array,   # (B, T, G, N)
+    *,
+    chunk: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    # Explicit argument wins, then the autotune cache, then 256.
+    if chunk is None:
+        tuned = _autotuned_blocks(x.shape, Bm.shape[3], x.dtype)
+        chunk = int(tuned.get("chunk", 256))
+    return _ssd_scan_jit(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _ssd_scan_jit(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
     *,
     chunk: int = 256,
     interpret: Optional[bool] = None,

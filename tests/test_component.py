@@ -317,7 +317,7 @@ def test_repro_cli_validate_and_components(tmp_path, capsys):
         "time-series@v3", "time-series@v4",
         "machine-comparison@v3", "machine-comparison@v4",
         "scalability@v3", "scalability@v4",
-        "gate@v1", "campaign-report@v1", "chaos@v1",
+        "gate@v1", "campaign-report@v1", "chaos@v1", "autotune@v1",
     }
 
 
